@@ -1,0 +1,57 @@
+"""§V.E recommendations, measured: how scheduling depth (the engine's
+``max_local_iters`` — HPX's predicate-aware scheduling) and partition
+locality change dynamic work (Actions Normalized) and rounds."""
+
+from __future__ import annotations
+
+from repro.core import build, sssp
+from repro.core.generators import make_graph_family
+
+
+def run(n_nodes: int = 1500, seed: int = 0):
+    rows = []
+    src, dst, w, n = make_graph_family("scale_free", n_nodes, seed=seed)
+    e = len(src)
+    for strategy in ("hash", "block", "locality"):
+        for mli in (1, 4, 16, 64):
+            part = build(src, dst, n, w, n_cells=8, strategy=strategy)
+            res = sssp(part, 0, max_local_iters=mli)
+            st = res.stats
+            rows.append(dict(
+                strategy=strategy, max_local_iters=mli, delta=None,
+                actions_norm=float(st.actions) / e,
+                rounds=int(st.rounds),
+                operons=int(st.operons_sent),
+                remote_frac=float(st.remote_actions)
+                / max(float(st.actions), 1),
+            ))
+    # beyond-paper: delta-stepping priority gate (near-ideal actions)
+    from repro.core.diffuse import diffuse as _diffuse
+    from repro.core.programs import sssp_program as _sssp
+    part = build(src, dst, n, w, n_cells=8, strategy="locality")
+    for delta in (1.0, 2.0, 4.0):
+        _, st = _diffuse(part, _sssp(0), delta=delta)
+        rows.append(dict(
+            strategy="locality", max_local_iters=64, delta=delta,
+            actions_norm=float(st.actions) / e,
+            rounds=int(st.rounds),
+            operons=int(st.operons_sent),
+            remote_frac=float(st.remote_actions)
+            / max(float(st.actions), 1),
+        ))
+    return rows
+
+
+def main():
+    rows = run()
+    print(f"{'strategy':10s} {'mli':>4s} {'act/E':>8s} {'rounds':>6s} "
+          f"{'operons':>8s} {'remote%':>8s}")
+    for r in rows:
+        print(f"{r['strategy']:10s} {r['max_local_iters']:4d} "
+              f"{r['actions_norm']:8.2f} {r['rounds']:6d} "
+              f"{r['operons']:8d} {r['remote_frac']*100:7.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,288 @@
+"""Scan-aware analysis of compiled HLO text.
+
+XLA's ``cost_analysis()`` counts a while-loop (lax.scan) body ONCE, so a
+64-layer scanned transformer reports ~1/64th of its real FLOPs.  This module
+re-derives compute and collective traffic from ``compiled.as_text()`` with
+loop trip counts propagated through the call graph:
+
+* computations are parsed into instruction lists;
+* ``while`` instructions get a trip count extracted from the largest integer
+  constant in their condition computation (jax lowers scan to a counted
+  while; data-dependent loops — e.g. the diffusion engine — get trip=1 and
+  are flagged ``dynamic_while``);
+* dot FLOPs (2 * prod(result) * prod(contracting)) and collective bytes are
+  accumulated recursively from ENTRY, weighting each called computation by
+  its call-site multiplier.
+
+The correction ratio (our flops / XLA's flops) is also applied to XLA's
+``bytes accessed`` to estimate loop-corrected HBM traffic.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import NamedTuple
+
+__all__ = ["analyze_hlo", "HloStats"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?))\s+([a-z0-9\-]+)(.*)$"
+)
+_CALL_RE = re.compile(
+    r"(to_apply|body|condition|calls|branch_computations)="
+    r"(?:\{([^}]*)\}|%?([\w.\-]+))"
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class _Instr(NamedTuple):
+    name: str
+    type_str: str
+    op: str
+    rest: str
+
+
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*([a-z0-9]+\[[0-9,]*\])")
+
+
+def _parse_computations(text: str):
+    comps: dict[str, list[_Instr]] = {}
+    symtab: dict[str, dict[str, str]] = {}
+    cur = None
+    entry = None
+    for line in text.splitlines():
+        if not line:
+            continue
+        if not line.startswith(" "):
+            m = _HEADER_RE.match(line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                symtab[cur] = {}
+                # header parameters carry their types
+                for pname, ptype in _PARAM_RE.findall(line):
+                    symtab[cur][pname] = ptype
+                if line.startswith("ENTRY"):
+                    entry = cur
+            continue
+        m = _INSTR_RE.match(line)
+        if m and cur is not None:
+            ins = _Instr(*m.groups())
+            comps[cur].append(ins)
+            symtab[cur][ins.name] = ins.type_str
+    return comps, symtab, entry
+
+
+def _dot_flops(instr: _Instr, syms: dict) -> float:
+    result = _shape_elems(instr.type_str)
+    out = 1.0
+    for d in result:
+        out *= d
+    # operand names -> lhs type from the computation's symbol table
+    ops_m = re.match(r"\(([^)]*)\)", instr.rest.strip())
+    contract = 1.0
+    cdims_m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+    if ops_m and cdims_m:
+        lhs_name = ops_m.group(1).split(",")[0].strip().lstrip("%")
+        lhs_type = syms.get(lhs_name, "")
+        lhs_dims = _shape_elems(lhs_type)
+        for ci in cdims_m.group(1).split(","):
+            if ci and int(ci) < len(lhs_dims):
+                contract *= lhs_dims[int(ci)]
+    return 2.0 * out * contract
+
+
+def _trip_count(cond_instrs) -> tuple[int, bool]:
+    """Largest integer constant in the while condition; (1, True) if none
+    (data-dependent loop)."""
+    best = None
+    for ins in cond_instrs:
+        if ins.op == "constant":
+            m = re.search(r"constant\((-?\d+)\)", ins.rest)
+            if m is None:
+                m = re.search(r"\bconstant\((-?\d+)\)",
+                              ins.op + ins.rest)
+            if m:
+                v = int(m.group(1))
+                if best is None or v > best:
+                    best = v
+    if best is None or best <= 0:
+        return 1, True
+    return best, False
+
+
+_BYTES_SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "iota",
+}
+
+
+def _operand_bytes(ins: _Instr, syms: dict) -> int:
+    m = re.match(r"\(([^)]*)\)", ins.rest.strip())
+    if not m:
+        return 0
+    total = 0
+    for name in m.group(1).split(","):
+        name = name.strip().lstrip("%")
+        if name in syms:
+            total += _shape_bytes(syms[name])
+    return total
+
+
+def analyze_hlo(text: str) -> dict:
+    comps, symtab, entry = _parse_computations(text)
+
+    cache: dict[str, dict] = {}
+    bcache: dict[str, float] = {}
+    dynamic_whiles = []
+
+    def total_bytes(name: str, stack=()) -> float:
+        """Post-fusion HBM-traffic estimate: operand+result bytes of every
+        top-level instruction (fusion internals excluded), while bodies
+        multiplied by trip count."""
+        if name in bcache:
+            return bcache[name]
+        if name in stack or name not in comps:
+            return 0.0
+        acc = 0.0
+        syms = symtab[name]
+        for ins in comps[name]:
+            if ins.op == "while":
+                calls = _CALL_RE.findall(ins.rest)
+                trip = 1
+                body = None
+                for attr, grp, single in calls:
+                    if attr == "condition" and single in comps:
+                        trip, _ = _trip_count(comps[single])
+                    if attr == "body":
+                        body = single
+                if body:
+                    acc += total_bytes(body, stack + (name,)) * trip
+                continue
+            if ins.op in _BYTES_SKIP_OPS:
+                continue
+            if ins.op == "dynamic-update-slice":
+                # in-place slice write: traffic = the update, not the stack
+                m = re.match(r"\(([^)]*)\)", ins.rest.strip())
+                upd = 0
+                if m:
+                    ops = [o.strip().lstrip("%")
+                           for o in m.group(1).split(",")]
+                    if len(ops) > 1 and ops[1] in syms:
+                        upd = _shape_bytes(syms[ops[1]])
+                acc += 2 * upd
+                continue
+            if ins.op in ("dynamic-slice", "gather"):
+                # traffic = the rows read, not the whole operand
+                acc += 2 * _shape_bytes(ins.type_str)
+                continue
+            res = _shape_bytes(ins.type_str)
+            opb = _operand_bytes(ins, syms)
+            if ins.op == "fusion":
+                # fusions that slice from big resident stacks (scanned
+                # params) would otherwise count the whole stack per
+                # iteration; cap operand traffic at 4x the result
+                opb = min(opb, 4 * res)
+            acc += res + opb
+        bcache[name] = acc
+        return acc
+
+    def total(name: str, stack=()) -> dict:
+        if name in cache:
+            return cache[name]
+        if name in stack or name not in comps:
+            return {"flops": 0.0, "coll": {}, "dots": 0}
+        acc = {"flops": 0.0,
+               "coll": {k: {"count": 0.0, "bytes": 0.0}
+                        for k in _COLLECTIVES},
+               "dots": 0}
+        for ins in comps[name]:
+            if ins.op == "dot":
+                acc["flops"] += _dot_flops(ins, symtab[name])
+                acc["dots"] += 1
+            for k in _COLLECTIVES:
+                if ins.op == k or ins.op.startswith(k + "-"):
+                    mult = 2.0 if k == "all-reduce" else 1.0
+                    acc["coll"][k]["count"] += 1
+                    acc["coll"][k]["bytes"] += _shape_bytes(
+                        ins.type_str
+                    ) * mult
+            # recurse into called computations
+            calls = _CALL_RE.findall(ins.rest)
+            trip = 1
+            if ins.op == "while":
+                cond = next((c for t, grp, c in calls if t == "condition"),
+                            None)
+                if cond and cond in comps:
+                    trip, dynamic = _trip_count(comps[cond])
+                    if dynamic:
+                        dynamic_whiles.append(ins.name)
+            for attr, group, single in calls:
+                names = (
+                    [s.strip().lstrip("%") for s in group.split(",")]
+                    if group else [single]
+                )
+                for cn in names:
+                    if not cn or cn not in comps:
+                        continue
+                    sub = total(cn, stack + (name,))
+                    f = trip if attr == "body" else 1
+                    acc["flops"] += sub["flops"] * f
+                    acc["dots"] += sub["dots"] * f
+                    for k in _COLLECTIVES:
+                        acc["coll"][k]["count"] += sub["coll"].get(
+                            k, {}).get("count", 0) * f
+                        acc["coll"][k]["bytes"] += sub["coll"].get(
+                            k, {}).get("bytes", 0) * f
+        cache[name] = acc
+        return acc
+
+    if entry is None:
+        return {"flops": 0.0, "collectives": {}, "dynamic_whiles": 0,
+                "bytes_est": 0.0}
+    t = total(entry)
+    return {
+        "flops": t["flops"],
+        "dots": t["dots"],
+        "collectives": {
+            k: {"count": v["count"], "bytes": v["bytes"]}
+            for k, v in t["coll"].items()
+        },
+        "collective_bytes": sum(v["bytes"] for v in t["coll"].values()),
+        "dynamic_whiles": len(dynamic_whiles),
+        # loop-aware post-fusion HBM traffic estimate (operand+result bytes
+        # of top-level ops; fusion internals excluded)
+        "bytes_est": total_bytes(entry),
+    }

@@ -1,0 +1,174 @@
+"""Roofline analysis from the dry-run's compiled artifacts.
+
+TPU v5e model: 197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+    compute    = FLOPs / (chips x peak)
+    memory     = HBM bytes / (chips x bw)
+    collective = collective bytes / (chips x link bw)
+
+FLOPs/bytes come from ``cost_analysis`` corrected for XLA's count-scan-
+body-once behaviour via benchmarks.hlo_analysis (loop trip counts from the
+HLO text); collective bytes from the same scan-aware pass (ring factors:
+all-reduce 2x).  MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for LM
+training cells; analytic per-edge/node counts for GNN/recsys.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9 * 4            # ~4 links usable per chip on a 2D torus
+CHIPS = 256                  # single-pod roofline
+
+ART_DIR = os.path.abspath(
+    os.environ.get(
+        "REPRO_ART_DIR",
+        os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun"),
+    )
+)
+
+
+def model_flops(arch_id: str, shape_name: str, mode: str) -> float | None:
+    """Analytic useful-FLOPs for the cell (global, per step)."""
+    from repro.configs.registry import get_module, shapes_for
+
+    mod = get_module(arch_id)
+    shape = shapes_for(arch_id)[shape_name]
+    if mod.FAMILY == "lm":
+        cfg = mod.make_config()
+        n_act = cfg.active_param_count()
+        if mode == "train":
+            tokens = shape.global_batch * shape.seq_len
+            return 6.0 * n_act * tokens
+        if mode == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+            return 2.0 * n_act * tokens
+        # decode: one token per sequence
+        return 2.0 * n_act * shape.global_batch
+    if mod.FAMILY == "recsys":
+        cfg = mod.make_config()
+        d = cfg.embed_dim
+        mlp = 0
+        dims = (cfg.n_user_fields * d + cfg.n_dense,) + cfg.tower_mlp
+        for a, b in zip(dims[:-1], dims[1:]):
+            mlp += a * b
+        dims = (d + cfg.n_dense,) + cfg.tower_mlp
+        for a, b in zip(dims[:-1], dims[1:]):
+            mlp += a * b
+        per_row = 2 * mlp
+        factor = 3.0 if mode == "train" else 1.0
+        if shape_name == "retrieval_cand":
+            return 2.0 * shape.n_candidates * d + per_row
+        return factor * per_row * shape.batch
+    # gnn: rough per-edge message + per-node update cost from the config
+    cfg = mod.make_config() if arch_id != "gatedgcn" else mod.make_config(
+        d_in=max(shape.d_feat, 1), n_classes=max(shape.n_classes, 2))
+    e = shape.n_edges * (shape.batch_graphs if shape.mode == "batched" else 1)
+    n = shape.n_nodes * (shape.batch_graphs if shape.mode == "batched" else 1)
+    if shape.mode == "sampled":
+        from repro.models.sampler import block_shapes
+        n, e = block_shapes(shape.batch_nodes, shape.fanout)
+    L = cfg.n_layers
+    c = getattr(cfg, "d_hidden", 128)
+    if arch_id == "gatedgcn":
+        per_layer = 2 * (3 * e * c * c + 2 * n * c * c)
+    elif arch_id == "meshgraphnet":
+        per_layer = 2 * (e * (3 * c) * c * 2 + n * (2 * c) * c * 2)
+    elif arch_id == "mace":
+        paths = 15
+        per_layer = 2 * e * paths * 9 * c + 2 * n * (paths + 6) * 9 * c * c
+    else:  # equiformer-v2
+        from repro.models.gnn.equivariant import n_sph
+        ns = n_sph(cfg.l_max)
+        so2 = 2 * e * (2 * 7 * c) * (7 * c) / max(cfg.channel_groups, 1)
+        rot = 2 * e * ns * 13 * c
+        per_layer = so2 + 2 * rot
+    return 3.0 * L * per_layer     # fwd+bwd
+
+
+def load_cells(mesh_tag="16x16"):
+    out = {}
+    if not os.path.isdir(ART_DIR):
+        return out
+    for fn in os.listdir(ART_DIR):
+        if not fn.endswith(f"__{mesh_tag}.json"):
+            continue
+        with open(os.path.join(ART_DIR, fn)) as f:
+            j = json.load(f)
+        out[(j["arch"], j["shape"])] = j
+    return out
+
+
+def roofline_row(j: dict, mode_hint: str | None = None) -> dict:
+    hlo = j.get("hlo", {})
+    cost = j.get("cost", {})
+    ratio = hlo.get("scan_correction_ratio", 1.0)
+    flops_dev = hlo.get("flops_corrected") or cost.get("flops", 0.0)
+    # memory term: prefer the loop-aware post-fusion traffic estimate;
+    # fall back to ratio-scaled XLA bytes (upper bound) for old artifacts
+    bytes_dev = hlo.get("bytes_est") or hlo.get(
+        "bytes_accessed_corrected"
+    ) or cost.get("bytes_accessed", 0.0)
+    coll_dev = hlo.get("collective_bytes_corrected", 0.0)
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(j["arch"], j["shape"],
+                     mode_hint or _infer_mode(j["shape"]))
+    useful_ratio = (
+        (mf / CHIPS) / flops_dev if (mf and flops_dev) else None
+    )
+    step_time = max(terms.values())
+    mfu = ((mf / CHIPS) / step_time / PEAK_FLOPS
+           if (mf and step_time > 0) else None)
+    return {
+        "arch": j["arch"], "shape": j["shape"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "bottleneck": bottleneck,
+        "model_flops": mf, "hlo_flops_dev": flops_dev,
+        "useful_flops_ratio": useful_ratio,
+        "roofline_mfu": mfu,
+        "temp_gb": j.get("memory", {}).get("temp_bytes", 0) / 1e9,
+        "scan_corr": ratio,
+    }
+
+
+def _infer_mode(shape_name: str) -> str:
+    if "train" in shape_name:
+        return "train"
+    if "prefill" in shape_name:
+        return "prefill"
+    if "decode" in shape_name or "500k" in shape_name:
+        return "decode"
+    return "train"
+
+
+def table(mesh_tag="16x16"):
+    cells = load_cells(mesh_tag)
+    rows = [roofline_row(j) for j in cells.values()]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def main():
+    rows = table()
+    hdr = (f"{'arch':26s} {'shape':15s} {'comp(s)':>9s} {'mem(s)':>9s} "
+           f"{'coll(s)':>9s} {'bound':>10s} {'MFU':>6s} {'tempGB':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        mfu = f"{r['roofline_mfu']*100:5.1f}%" if r["roofline_mfu"] else "  n/a"
+        print(f"{r['arch']:26s} {r['shape']:15s} "
+              f"{r['t_compute_s']:9.4f} {r['t_memory_s']:9.4f} "
+              f"{r['t_collective_s']:9.4f} {r['bottleneck']:>10s} "
+              f"{mfu:>6s} {r['temp_gb']:7.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""GatedGCN node classification on a synthetic cora-like graph, trained
+with the same message-passing substrate the diffusion engine uses.
+
+    PYTHONPATH=src python examples/gnn_node_classification.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.generators import make_graph_family
+from repro.models.gnn import gatedgcn
+from repro.models.gnn.common import GraphBatch
+from repro.optim import adamw
+
+rng = np.random.default_rng(0)
+n, n_classes, d_feat = 600, 4, 32
+src, dst, w, n = make_graph_family("powerlaw_cluster", n, seed=0)
+
+# planted communities: labels from graph blocks + noisy features
+labels = (np.arange(n) * n_classes // n).astype(np.int32)
+feats = (np.eye(n_classes)[labels] @ rng.normal(size=(n_classes, d_feat))
+         + rng.normal(size=(n, d_feat)) * 2.0).astype(np.float32)
+train_mask = rng.random(n) < 0.5
+
+cfg = gatedgcn.GatedGCNConfig(n_layers=4, d_hidden=32, d_in=d_feat,
+                              n_classes=n_classes)
+batch = GraphBatch(
+    senders=jnp.asarray(src), receivers=jnp.asarray(dst), n_nodes=n,
+    nodes=jnp.asarray(feats), node_mask=jnp.asarray(train_mask),
+    labels=jnp.asarray(labels),
+)
+params = gatedgcn.init_params(jax.random.PRNGKey(0), cfg)
+opt = adamw(lr=3e-3)
+state = opt.init(params)
+
+
+@jax.jit
+def step(params, state, i):
+    loss, g = jax.value_and_grad(gatedgcn.loss_fn)(params, batch, cfg)
+    upd, state = opt.update(g, state, params, i)
+    params = jax.tree_util.tree_map(lambda p, u: p + u, params, upd)
+    return params, state, loss
+
+
+for i in range(120):
+    params, state, loss = step(params, state, jnp.int32(i))
+    if i % 20 == 0:
+        print(f"epoch {i:3d}  train loss {float(loss):.4f}")
+
+logits = gatedgcn.apply(params, batch, cfg)
+pred = np.asarray(jnp.argmax(logits, -1))
+test = ~train_mask
+acc = (pred[test] == labels[test]).mean()
+print(f"test accuracy: {acc*100:.1f}%  (chance = {100/n_classes:.0f}%)")
+assert acc > 0.5

@@ -1,0 +1,72 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+Uses the full production stack: config system, data pipeline, fault-
+tolerant trainer (checkpoint/resume), AdamW + cosine schedule.  The ~100M
+config is a scaled tinyllama; pass --tiny for a seconds-scale smoke run.
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import Prefetcher, TokenPipeline
+from repro.models.transformer import TransformerConfig, init_params, loss_fn
+from repro.optim import adamw, clip_by_global_norm, cosine_schedule
+from repro.runtime.trainer import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    if args.tiny:
+        cfg = TransformerConfig(n_layers=2, d_model=128, n_heads=4,
+                                n_kv_heads=2, d_ff=256, vocab=512)
+        batch, seq = 8, 128
+    else:
+        # ~100M params: 12L x 768 (gpt2-small-like, llama-style blocks)
+        cfg = TransformerConfig(n_layers=12, d_model=768, n_heads=12,
+                                n_kv_heads=4, d_ff=2048, vocab=32000,
+                                tie_embeddings=True)
+        batch, seq = 8, 512
+    print(f"params: {cfg.param_count()/1e6:.1f}M")
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw(lr=cosine_schedule(3e-4, args.steps, warmup=20),
+                weight_decay=0.01)
+    opt_state = opt.init(params)
+
+    def step(params, opt_state, step_no, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch["tokens"], batch["labels"], cfg)
+        )(params)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        upd, opt_state = opt.update(grads, opt_state, params, step_no)
+        params = jax.tree_util.tree_map(
+            lambda p, u: p + u.astype(p.dtype), params, upd)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    data = Prefetcher(TokenPipeline(batch, seq, cfg.vocab))
+    losses = []
+
+    def on_metrics(s, m, dt):
+        losses.append(float(m["loss"]))
+        if s % 10 == 0:
+            print(f"step {s:4d}  loss {losses[-1]:.4f}  "
+                  f"gnorm {float(m['grad_norm']):.3f}  {dt*1e3:.0f} ms")
+
+    train_loop(jax.jit(step, donate_argnums=(0, 1)), params, opt_state,
+               data, args.steps, args.ckpt, ckpt_every=100,
+               on_metrics=on_metrics)
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({'DECREASED' if losses[-1] < losses[0] else 'no progress'})")
+
+
+if __name__ == "__main__":
+    main()

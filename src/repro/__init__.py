@@ -1,0 +1,4 @@
+"""repro: diffusive graph processing (CCA, CS.DC 2022) as a production
+multi-pod JAX framework.  See DESIGN.md / EXPERIMENTS.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,31 @@
+# The paper's primary contribution: the diffusive-computation engine
+# (memory-driven, message-driven dynamic graph processing) realized as a
+# bulk-asynchronous sharded JAX system.  See DESIGN.md SS2-3.
+from .api import (
+    Result,
+    bfs,
+    build,
+    connected_components,
+    pagerank,
+    personalized_pagerank,
+    run,
+    sssp,
+)
+from .diffuse import DiffuseStats, diffuse, diffuse_from, make_spmd_diffuse
+from .graph import Graph, ShardedGraph, from_edges
+from .partition import Partitioned, partition
+from .programs import (
+    VertexProgram,
+    bfs_program,
+    cc_program,
+    ppr_program,
+    sssp_program,
+)
+
+__all__ = [
+    "Result", "bfs", "build", "connected_components", "personalized_pagerank",
+    "run", "sssp", "pagerank", "DiffuseStats", "diffuse", "diffuse_from",
+    "make_spmd_diffuse", "Graph", "ShardedGraph", "from_edges",
+    "Partitioned", "partition", "VertexProgram", "bfs_program",
+    "cc_program", "ppr_program", "sssp_program",
+]

@@ -1,0 +1,113 @@
+"""Public API — the framework's equivalent of the paper's ``hpx_diffuse``.
+
+    hpx_diffuse(vertex_id, vertex_func, args..., terminator, predicate)
+      ==>
+    diffuse(graph, program, n_cells=..., engine=...)
+
+where the program bundles vertex_func + predicate (programs.py) and the
+terminator is the engine's quiescence detector (termination.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+from .diffuse import DiffuseStats, diffuse as _diffuse_sharded
+from .event import build_adjacency, event_sssp
+from .generators import make_graph_family
+from .graph import Graph, from_edges
+from .partition import Partitioned, partition
+from .programs import (
+    VertexProgram,
+    bfs_program,
+    cc_program,
+    ppr_program,
+    sssp_program,
+)
+
+__all__ = [
+    "build",
+    "run",
+    "sssp",
+    "bfs",
+    "connected_components",
+    "personalized_pagerank",
+    "pagerank",
+    "Result",
+]
+
+
+class Result(NamedTuple):
+    values: np.ndarray          # per-vertex result in global vertex order
+    stats: DiffuseStats
+    extra: dict
+
+
+def build(
+    src,
+    dst,
+    n_nodes: int,
+    weight=None,
+    n_cells: int = 4,
+    strategy: str = "block",
+    edge_slack: float = 0.0,
+    node_slack: float = 0.0,
+) -> Partitioned:
+    """Build + partition a graph over n_cells compute cells.
+
+    ``edge_slack`` / ``node_slack`` reserve free capacity slots per cell for
+    dynamic updates (the paper's vertex/edge add primitives)."""
+    g = from_edges(
+        src, dst, n_nodes, weight, edge_slack=edge_slack, node_slack=node_slack
+    )
+    return partition(g, n_cells, strategy=strategy)
+
+
+def run(
+    part: Partitioned,
+    prog: VertexProgram,
+    value_key: str,
+    max_local_iters: int = 64,
+    max_rounds: int = 10_000,
+) -> Result:
+    vstate, stats = _diffuse_sharded(
+        part, prog, max_local_iters=max_local_iters, max_rounds=max_rounds
+    )
+    values = np.asarray(part.to_global_layout(vstate[value_key]))[: part.n_real]
+    extra = {
+        k: np.asarray(part.to_global_layout(v))[: part.n_real]
+        for k, v in vstate.items()
+        if k != value_key
+    }
+    return Result(values=values, stats=stats, extra=extra)
+
+
+def sssp(part: Partitioned, source: int, track_parents: bool = True,
+         max_local_iters: int = 64) -> Result:
+    return run(part, sssp_program(source, track_parents), "dist",
+               max_local_iters=max_local_iters)
+
+
+def bfs(part: Partitioned, source: int, max_local_iters: int = 64) -> Result:
+    return run(part, bfs_program(source), "dist",
+               max_local_iters=max_local_iters)
+
+
+def connected_components(part: Partitioned, max_local_iters: int = 64) -> Result:
+    return run(part, cc_program(), "comp", max_local_iters=max_local_iters)
+
+
+def personalized_pagerank(part: Partitioned, source: int, alpha: float = 0.15,
+                          eps: float = 1e-5, max_local_iters: int = 64) -> Result:
+    return run(part, ppr_program(source, alpha, eps), "rank",
+               max_local_iters=max_local_iters)
+
+
+def pagerank(part: Partitioned, alpha: float = 0.15, eps: float = 1e-7,
+             max_local_iters: int = 64) -> Result:
+    from .programs import pagerank_program
+
+    return run(part, pagerank_program(alpha, eps), "rank",
+               max_local_iters=max_local_iters)

@@ -1,0 +1,265 @@
+"""Dynamic-graph primitives — the paper's seven graph operations (§VI).
+
+    vertex add | vertex delete | vertex touch
+    edge add   | edge delete   | edge touch   | peek
+
+The paper argues these belong in the ISA of a graph machine; here they are
+first-class functional ops on :class:`ShardedGraph` with *capacity slots*, so
+every update is an O(1) in-place-style ``.at[]`` update that never changes
+array shapes (no recompilation — the TPU analogue of "no software overhead").
+
+``NameServer`` plays the paper's hardware name-server role: it allocates
+globally unique vertex ids and resolves id -> (owner cell, local slot),
+including after migrations.
+
+``incremental_sssp`` composes the primitives into the paper's headline
+capability: *dynamic* graph processing — edge inserts re-diffuse from the
+endpoints; deletes invalidate the affected shortest-path subtree (via parent
+pointers in the global namespace) and re-diffuse from the frontier.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .diffuse import diffuse_from
+from .graph import ShardedGraph
+from .partition import Partitioned
+from .programs import sssp_program
+
+__all__ = [
+    "NameServer",
+    "vertex_add",
+    "vertex_delete",
+    "vertex_touch",
+    "edge_add",
+    "edge_delete",
+    "edge_touch",
+    "peek",
+    "incremental_sssp",
+]
+
+
+class NameServer:
+    """Global namespace: id allocation + id -> (owner, local) resolution."""
+
+    def __init__(self, part: Partitioned):
+        self.owner = np.asarray(part.owner).copy()
+        self.local = np.asarray(part.local).copy()
+        self._next = int(self.owner.shape[0])
+        self._free_local = {
+            s: list(range(part.sg.n_per_shard - 1, -1, -1))
+            for s in range(part.sg.n_shards)
+        }
+        # slots already taken
+        taken = np.asarray(part.sg.node_ok)
+        for s in range(part.sg.n_shards):
+            self._free_local[s] = [
+                i for i in range(part.sg.n_per_shard) if not taken[s, i]
+            ]
+
+    def allocate(self, shard: int) -> tuple[int, int, int]:
+        """-> (gid, owner shard, local slot). Raises if the cell is full."""
+        if not self._free_local[shard]:
+            raise RuntimeError(f"compute cell {shard} has no free vertex slots")
+        local = self._free_local[shard].pop(0)
+        gid = self._next
+        self._next += 1
+        self.owner = np.append(self.owner, np.int32(shard))
+        self.local = np.append(self.local, np.int32(local))
+        return gid, shard, local
+
+    def resolve(self, gid: int) -> tuple[int, int]:
+        return int(self.owner[gid]), int(self.local[gid])
+
+    def release(self, gid: int):
+        s, l = self.resolve(gid)
+        self._free_local[s].append(l)
+
+
+def vertex_add(sg: ShardedGraph, ns: NameServer, shard: int):
+    """Activate a free vertex slot on ``shard``; returns (sg, gid)."""
+    gid, s, l = ns.allocate(shard)
+    sg = dataclasses.replace(
+        sg,
+        node_ok=sg.node_ok.at[s, l].set(True),
+        gid=sg.gid.at[s, l].set(gid),
+        out_degree=sg.out_degree.at[s, l].set(0),
+    )
+    return sg, gid
+
+
+def vertex_delete(sg: ShardedGraph, ns: NameServer, gid: int):
+    """Remove a vertex and all its out-edges (in-edges masked by node_ok)."""
+    s, l = ns.resolve(gid)
+    dead_out = (sg.src_local[s] == l) & sg.edge_ok[s]
+    sg = dataclasses.replace(
+        sg,
+        node_ok=sg.node_ok.at[s, l].set(False),
+        edge_ok=sg.edge_ok.at[s].set(sg.edge_ok[s] & ~dead_out),
+        out_degree=sg.out_degree.at[s, l].set(0),
+    )
+    # in-edges pointing at a dead vertex are dropped at receive time via
+    # node_ok; also mask them eagerly, shard by shard:
+    dead_in = (sg.dst_gid == gid) & sg.edge_ok
+    deg_fix = jax.vmap(
+        lambda d, sl, m: d.at[sl].add(-m.astype(jnp.int32))
+    )(sg.out_degree, sg.src_local, dead_in)
+    sg = dataclasses.replace(
+        sg, edge_ok=sg.edge_ok & ~dead_in, out_degree=deg_fix
+    )
+    ns.release(gid)
+    return sg
+
+
+def vertex_touch(sg: ShardedGraph, ns: NameServer, gids):
+    """Activation mask in shard layout for the given vertex ids."""
+    mask = jnp.zeros((sg.n_shards, sg.n_per_shard), bool)
+    for g in np.atleast_1d(gids):
+        s, l = ns.resolve(int(g))
+        mask = mask.at[s, l].set(True)
+    return mask
+
+
+def edge_add(sg: ShardedGraph, ns: NameServer, u: int, v: int, w: float):
+    """Insert directed edge u -> v with weight w into u's cell."""
+    su, lu = ns.resolve(u)
+    sv, lv = ns.resolve(v)
+    free = ~sg.edge_ok[su]
+    slot = jnp.argmax(free)  # first free slot
+    ok = free[slot]          # False => cell's edge memory is full
+    sg = dataclasses.replace(
+        sg,
+        src_local=sg.src_local.at[su, slot].set(jnp.where(ok, lu, sg.src_local[su, slot])),
+        dst_shard=sg.dst_shard.at[su, slot].set(jnp.where(ok, sv, sg.dst_shard[su, slot])),
+        dst_local=sg.dst_local.at[su, slot].set(jnp.where(ok, lv, sg.dst_local[su, slot])),
+        dst_gid=sg.dst_gid.at[su, slot].set(jnp.where(ok, v, sg.dst_gid[su, slot])),
+        weight=sg.weight.at[su, slot].set(jnp.where(ok, w, sg.weight[su, slot])),
+        edge_ok=sg.edge_ok.at[su, slot].set(ok | sg.edge_ok[su, slot]),
+        out_degree=sg.out_degree.at[su, lu].add(ok.astype(jnp.int32)),
+    )
+    if not bool(ok):
+        raise RuntimeError(f"compute cell {su} has no free edge slots")
+    return sg
+
+
+def edge_delete(sg: ShardedGraph, ns: NameServer, u: int, v: int):
+    """Delete directed edge u -> v (first matching live slot)."""
+    su, lu = ns.resolve(u)
+    match = (sg.src_local[su] == lu) & (sg.dst_gid[su] == v) & sg.edge_ok[su]
+    slot = jnp.argmax(match)
+    ok = match[slot]
+    sg = dataclasses.replace(
+        sg,
+        edge_ok=sg.edge_ok.at[su, slot].set(
+            jnp.where(ok, False, sg.edge_ok[su, slot])
+        ),
+        out_degree=sg.out_degree.at[su, lu].add(-ok.astype(jnp.int32)),
+    )
+    return sg
+
+
+def edge_touch(sg: ShardedGraph, ns: NameServer, u: int):
+    """Activate a vertex so it re-emits on all out-edges (the relax seed)."""
+    return vertex_touch(sg, ns, [u])
+
+
+def peek(sg: ShardedGraph, values: jnp.ndarray, ns: NameServer, u: int):
+    """Read the neighbours' values of vertex u (the paper's peek primitive).
+
+    ``values`` is a [S, Np] shard-layout array (e.g. SSSP distances).
+    Returns per-out-edge neighbour values, padded with NaN on dead slots.
+    """
+    su, lu = ns.resolve(u)
+    mine = (sg.src_local[su] == lu) & sg.edge_ok[su]
+    nb = values[sg.dst_shard[su], sg.dst_local[su]]
+    return jnp.where(mine, nb, jnp.nan)
+
+
+# --------------------------------------------------------------------------
+# Incremental SSSP over the primitives (dynamic graph processing)
+# --------------------------------------------------------------------------
+
+def _invalidate_subtrees(part: Partitioned, ns: NameServer, vstate, root_gids):
+    """Mark every vertex whose shortest-path tree passes through an
+    invalidated parent edge; pointer-chase through the global namespace."""
+    sg = part.sg
+    owner = jnp.asarray(ns.owner)
+    local = jnp.asarray(ns.local)
+    parent = vstate["parent"]           # [S, Np] global parent gid, -1 = none
+
+    invalid = jnp.zeros(parent.shape, bool)
+    for g in root_gids:
+        s, l = ns.resolve(int(g))
+        invalid = invalid.at[s, l].set(True)
+
+    def body(c):
+        inv, _ = c
+        has_parent = parent >= 0
+        pg = jnp.clip(parent, 0)
+        parent_inv = inv[owner[pg], local[pg]] & has_parent
+        new = inv | parent_inv
+        return new, jnp.any(new != inv)
+
+    def cond(c):
+        return c[1]
+
+    invalid, _ = jax.lax.while_loop(cond, body, (invalid, jnp.array(True)))
+    return invalid
+
+
+def incremental_sssp(
+    part: Partitioned,
+    ns: NameServer,
+    vstate,
+    source: int,
+    inserts=(),
+    deletes=(),
+    max_local_iters: int = 64,
+):
+    """Apply edge updates and repair the SSSP fixed point by re-diffusion.
+
+    inserts: iterable of (u, v, w); deletes: iterable of (u, v).
+    Returns (part with updated sg, new vstate, stats of the repair diffusion).
+    """
+    sg = part.sg
+    for u, v in deletes:
+        sg = edge_delete(sg, ns, u, v)
+    for u, v, w in inserts:
+        sg = edge_add(sg, ns, u, v, w)
+    part.sg = sg
+
+    prog = sssp_program(source, track_parents=True)
+
+    # Deleted tree edges invalidate their downstream subtree.
+    tree_roots = []
+    for u, v in deletes:
+        sv, lv = ns.resolve(v)
+        if int(vstate["parent"][sv, lv]) == u:
+            tree_roots.append(v)
+    dist = vstate["dist"]
+    parent = vstate["parent"]
+    if tree_roots:
+        invalid = _invalidate_subtrees(part, ns, vstate, tree_roots)
+        dist = jnp.where(invalid, jnp.inf, dist)
+        parent = jnp.where(invalid, -1, parent)
+
+    vstate = {"dist": dist, "parent": parent}
+    # Frontier: endpoints of inserts + every still-finite vertex when any
+    # subtree was invalidated (they re-emit once; receivers' predicates
+    # discard non-improvements — pure diffusion semantics, no special cases).
+    active = jnp.zeros(dist.shape, bool)
+    for u, v, w in inserts:
+        su, lu = ns.resolve(u)
+        active = active.at[su, lu].set(True)
+    if tree_roots:
+        active = active | (jnp.isfinite(dist) & sg.node_ok)
+
+    vstate, stats = diffuse_from(
+        sg, prog, vstate, active, max_local_iters=max_local_iters
+    )
+    return part, vstate, stats

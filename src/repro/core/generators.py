@@ -1,0 +1,204 @@
+"""Graph-family generators used by the paper's experiments (Table II).
+
+Five families: Erdős–Rényi, Small-World (Watts–Strogatz), Scale-Free
+(Barabási–Albert), Powerlaw-Clustered (Holme–Kim), and Graph500 (RMAT /
+stochastic Kronecker).  All generators are host-side numpy (the data pipeline
+boundary), seedable, and return symmetric (both directions) deduplicated edge
+lists without self-loops, plus optional uniform random weights.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "erdos_renyi",
+    "small_world",
+    "scale_free",
+    "powerlaw_cluster",
+    "graph500_rmat",
+    "GENERATORS",
+    "make_graph_family",
+]
+
+
+def _symmetrize_dedup(src: np.ndarray, dst: np.ndarray, n: int):
+    """Drop self loops, symmetrize, deduplicate. Returns (src, dst)."""
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    a = np.concatenate([src, dst])
+    b = np.concatenate([dst, src])
+    key = a.astype(np.int64) * n + b
+    _, idx = np.unique(key, return_index=True)
+    return a[idx].astype(np.int32), b[idx].astype(np.int32)
+
+
+def erdos_renyi(n: int, avg_degree: float = 8.0, seed: int = 0):
+    """G(n, m) with m = n * avg_degree / 2 undirected edges."""
+    rng = np.random.default_rng(seed)
+    m = int(n * avg_degree / 2)
+    src = rng.integers(0, n, size=2 * m)  # oversample; dedup trims
+    dst = rng.integers(0, n, size=2 * m)
+    return _symmetrize_dedup(src, dst, n)
+
+
+def small_world(n: int, k: int = 8, beta: float = 0.1, seed: int = 0):
+    """Watts–Strogatz: ring lattice with k neighbors, rewire prob beta."""
+    rng = np.random.default_rng(seed)
+    base = np.arange(n, dtype=np.int64)
+    srcs, dsts = [], []
+    for j in range(1, k // 2 + 1):
+        s = base
+        d = (base + j) % n
+        rewire = rng.random(n) < beta
+        d = np.where(rewire, rng.integers(0, n, size=n), d)
+        srcs.append(s)
+        dsts.append(d)
+    return _symmetrize_dedup(np.concatenate(srcs), np.concatenate(dsts), n)
+
+
+def scale_free(n: int, m: int = 4, seed: int = 0):
+    """Barabási–Albert preferential attachment via the repeated-nodes trick."""
+    rng = np.random.default_rng(seed)
+    targets = list(range(m))
+    repeated: list[int] = []
+    srcs, dsts = [], []
+    for v in range(m, n):
+        for t in targets:
+            srcs.append(v)
+            dsts.append(t)
+            repeated.extend([v, t])
+        # next targets: m distinct picks from repeated (degree-proportional)
+        targets = []
+        seen = set()
+        while len(targets) < m:
+            x = repeated[rng.integers(0, len(repeated))]
+            if x not in seen:
+                seen.add(x)
+                targets.append(x)
+    return _symmetrize_dedup(
+        np.asarray(srcs, np.int64), np.asarray(dsts, np.int64), n
+    )
+
+
+def powerlaw_cluster(n: int, m: int = 4, p: float = 0.5, seed: int = 0):
+    """Holme–Kim: BA growth where each step closes a triangle w.p. ``p``."""
+    rng = np.random.default_rng(seed)
+    repeated: list[int] = list(range(m))
+    adj: list[set] = [set() for _ in range(n)]
+    srcs, dsts = [], []
+
+    def add(u, v):
+        srcs.append(u)
+        dsts.append(v)
+        adj[u].add(v)
+        adj[v].add(u)
+        repeated.extend([u, v])
+
+    for v in range(m, n):
+        # first edge: preferential
+        t = repeated[rng.integers(0, len(repeated))]
+        add(v, t)
+        added = 1
+        prev = t
+        while added < m:
+            if rng.random() < p and adj[prev]:
+                # triad formation: link to a neighbor of prev
+                cands = [u for u in adj[prev] if u != v and u not in adj[v]]
+                if cands:
+                    u = cands[rng.integers(0, len(cands))]
+                    add(v, u)
+                    prev = u
+                    added += 1
+                    continue
+            u = repeated[rng.integers(0, len(repeated))]
+            if u != v and u not in adj[v]:
+                add(v, u)
+                prev = u
+                added += 1
+    return _symmetrize_dedup(
+        np.asarray(srcs, np.int64), np.asarray(dsts, np.int64), n
+    )
+
+
+def graph500_rmat(
+    scale: int,
+    edge_factor: int = 16,
+    a: float = 0.57,
+    b: float = 0.19,
+    c: float = 0.19,
+    seed: int = 0,
+):
+    """Graph500 RMAT (stochastic Kronecker) generator, vectorized."""
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    m = n * edge_factor
+    src = np.zeros(m, np.int64)
+    dst = np.zeros(m, np.int64)
+    ab = a + b
+    c_norm = c / (1.0 - ab)
+    a_norm = a / ab
+    for i in range(scale):
+        r1 = rng.random(m)
+        r2 = rng.random(m)
+        src_bit = r1 > ab
+        dst_bit = np.where(src_bit, r2 > c_norm, r2 > a_norm)
+        src |= src_bit.astype(np.int64) << i
+        dst |= dst_bit.astype(np.int64) << i
+    # graph500 permutes vertex labels to break locality
+    perm = rng.permutation(n)
+    return _symmetrize_dedup(perm[src], perm[dst], n)
+
+
+GENERATORS = {
+    "erdos_renyi": erdos_renyi,
+    "small_world": small_world,
+    "scale_free": scale_free,
+    "powerlaw_cluster": powerlaw_cluster,
+    "graph500": graph500_rmat,
+}
+
+
+def make_graph_family(name: str, n: int, seed: int = 0, weighted: bool = True):
+    """Build one of the paper's five graph families at ~n vertices.
+
+    Returns (src, dst, weight, n). Weights are uniform [1, 8) as is customary
+    for weighted SSSP benchmarks (Graph500 SSSP uses uniform weights).
+    """
+    if name == "erdos_renyi":
+        src, dst = erdos_renyi(n, avg_degree=8, seed=seed)
+    elif name == "small_world":
+        src, dst = small_world(n, k=8, beta=0.1, seed=seed)
+    elif name == "scale_free":
+        src, dst = scale_free(n, m=4, seed=seed)
+    elif name == "powerlaw_cluster":
+        src, dst = powerlaw_cluster(n, m=4, p=0.5, seed=seed)
+    elif name == "graph500":
+        scale = max(1, int(np.round(np.log2(max(2, n)))))
+        src, dst = graph500_rmat(scale, seed=seed)
+        n = 1 << scale
+    else:  # pragma: no cover
+        raise ValueError(f"unknown graph family {name!r}")
+    rng = np.random.default_rng(seed + 1)
+    w = (1.0 + 7.0 * rng.random(src.shape[0])).astype(np.float32) if weighted else None
+    return src, dst, w, n
+
+
+def degree_distribution(src: np.ndarray, n: int) -> np.ndarray:
+    return np.bincount(src, minlength=n)
+
+
+def clustering_coefficients(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
+    """Local clustering coefficient per vertex (host-side; small graphs)."""
+    adj = [set() for _ in range(n)]
+    for s, d in zip(src, dst):
+        adj[s].add(int(d))
+    out = np.zeros(n)
+    for v in range(n):
+        nb = list(adj[v])
+        k = len(nb)
+        if k < 2:
+            continue
+        links = sum(1 for i, u in enumerate(nb) for w in nb[i + 1 :] if w in adj[u])
+        out[v] = 2.0 * links / (k * (k - 1))
+    return out

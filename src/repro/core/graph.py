@@ -1,0 +1,150 @@
+"""Graph containers for the diffusive-computation engine.
+
+Two containers:
+
+* :class:`Graph` — a flat edge-list graph with *capacity slots* so that the
+  paper's dynamic primitives (edge/vertex add/delete) are O(1) functional
+  updates that never change array shapes (no recompilation).
+* :class:`ShardedGraph` — the graph partitioned over "compute cells" (the
+  paper's CCs = mesh devices / logical shards).  Every array carries a leading
+  shard axis ``S``; vertices live on exactly one shard and edges live with the
+  shard that owns their *source* vertex (messages flow src -> dst, so the
+  emitting side holds the edge, mirroring the paper's "computation moves to
+  where the data lives").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Graph", "ShardedGraph", "from_edges"]
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["src", "dst", "weight", "edge_ok", "node_ok"],
+    meta_fields=["n_nodes"],
+)
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Flat directed edge-list graph with capacity slots.
+
+    ``src/dst/weight`` have length = edge *capacity*; slots with
+    ``edge_ok == False`` are free (their src/dst are 0 and must be masked).
+    Undirected graphs are stored with both directions materialized.
+    """
+
+    src: jnp.ndarray       # [Ecap] int32
+    dst: jnp.ndarray       # [Ecap] int32
+    weight: jnp.ndarray    # [Ecap] float32
+    edge_ok: jnp.ndarray   # [Ecap] bool
+    node_ok: jnp.ndarray   # [Ncap] bool
+    n_nodes: int           # static vertex capacity
+
+    @property
+    def edge_capacity(self) -> int:
+        return int(self.src.shape[0])
+
+    def n_edges(self) -> jnp.ndarray:
+        """Dynamic count of live edges."""
+        return jnp.sum(self.edge_ok.astype(jnp.int32))
+
+    def degrees(self) -> jnp.ndarray:
+        """Out-degree per vertex (live edges only)."""
+        return jax.ops.segment_sum(
+            self.edge_ok.astype(jnp.int32), self.src, num_segments=self.n_nodes
+        )
+
+
+def from_edges(
+    src: np.ndarray,
+    dst: np.ndarray,
+    n_nodes: int,
+    weight: np.ndarray | None = None,
+    edge_slack: float = 0.0,
+    node_slack: float = 0.0,
+) -> Graph:
+    """Build a :class:`Graph` from host edge arrays, with optional slack
+    capacity for dynamic updates (fraction of initial size)."""
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    e = src.shape[0]
+    if weight is None:
+        weight = np.ones(e, np.float32)
+    weight = np.asarray(weight, np.float32)
+    ecap = e + int(np.ceil(e * edge_slack))
+    ncap = n_nodes + int(np.ceil(n_nodes * node_slack))
+    pad = ecap - e
+    return Graph(
+        src=jnp.asarray(np.concatenate([src, np.zeros(pad, np.int32)])),
+        dst=jnp.asarray(np.concatenate([dst, np.zeros(pad, np.int32)])),
+        weight=jnp.asarray(np.concatenate([weight, np.zeros(pad, np.float32)])),
+        edge_ok=jnp.asarray(
+            np.concatenate([np.ones(e, bool), np.zeros(pad, bool)])
+        ),
+        node_ok=jnp.asarray(
+            np.concatenate([np.ones(n_nodes, bool), np.zeros(ncap - n_nodes, bool)])
+        ),
+        n_nodes=ncap,
+    )
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[
+        "src_local",
+        "dst_shard",
+        "dst_local",
+        "dst_gid",
+        "weight",
+        "edge_ok",
+        "node_ok",
+        "gid",
+        "out_degree",
+    ],
+    meta_fields=["n_shards", "n_per_shard", "n_nodes"],
+)
+@dataclasses.dataclass(frozen=True)
+class ShardedGraph:
+    """Graph partitioned over S compute cells.
+
+    Every data array has leading shard axis ``S``.  Edge slots are padded per
+    shard to the max shard edge count; ``edge_ok`` masks padding and deleted
+    edges.  ``gid`` maps (shard, local) -> original vertex id; ``dst_gid`` is
+    the global id of each edge's destination (used for payload messages such
+    as parent pointers).
+    """
+
+    src_local: jnp.ndarray   # [S, Ep] int32 — local index of the edge source
+    dst_shard: jnp.ndarray   # [S, Ep] int32 — owner shard of the destination
+    dst_local: jnp.ndarray   # [S, Ep] int32 — local index at the owner shard
+    dst_gid: jnp.ndarray     # [S, Ep] int32 — global id of the destination
+    weight: jnp.ndarray      # [S, Ep] float32
+    edge_ok: jnp.ndarray     # [S, Ep] bool
+    node_ok: jnp.ndarray     # [S, Np] bool
+    gid: jnp.ndarray         # [S, Np] int32 — global id of each local vertex
+    out_degree: jnp.ndarray  # [S, Np] int32 — live out-degree
+    n_shards: int
+    n_per_shard: int
+    n_nodes: int             # number of real (unpadded) vertices
+
+    @property
+    def edges_per_shard(self) -> int:
+        return int(self.src_local.shape[1])
+
+    def n_edges(self) -> jnp.ndarray:
+        return jnp.sum(self.edge_ok.astype(jnp.int64))
+
+    def scatter_from_global(self, values: jnp.ndarray, owner, local, fill=0):
+        """Map a [n_nodes] global array to [S, Np] shard layout."""
+        out = jnp.full((self.n_shards, self.n_per_shard), fill, values.dtype)
+        return out.at[owner, local].set(values)
+
+    def gather_to_global(self, values: jnp.ndarray, owner, local):
+        """Map a [S, Np] shard-layout array back to [n_nodes] global order."""
+        return values[owner, local]

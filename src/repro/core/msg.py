@@ -1,0 +1,90 @@
+"""The shared sparse message substrate.
+
+One abstraction — ``gather -> per-edge compute -> segment-combine -> route`` —
+underlies everything in this framework: diffusive graph algorithms, GNN
+message passing, MoE token dispatch, and recsys embedding bags.  This module
+holds the segment-combine primitives (with a Pallas fast path for the sorted
+case) and the identity elements per combine monoid.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "segment_combine",
+    "identity_for",
+    "segment_softmax",
+    "COMBINES",
+]
+
+COMBINES = ("sum", "min", "max", "mean")
+
+
+def identity_for(combine: str, dtype=jnp.float32):
+    if combine in ("sum", "mean"):
+        return jnp.zeros((), dtype)
+    if combine == "min":
+        if jnp.issubdtype(dtype, jnp.integer):
+            return jnp.array(jnp.iinfo(dtype).max, dtype)
+        return jnp.array(jnp.inf, dtype)
+    if combine == "max":
+        if jnp.issubdtype(dtype, jnp.integer):
+            return jnp.array(jnp.iinfo(dtype).min, dtype)
+        return jnp.array(-jnp.inf, dtype)
+    raise ValueError(f"unknown combine {combine!r}")
+
+
+def segment_combine(
+    values: jnp.ndarray,
+    segment_ids: jnp.ndarray,
+    num_segments: int,
+    combine: str = "sum",
+    indices_are_sorted: bool = False,
+):
+    """Segment-reduce ``values`` by ``segment_ids`` with the given monoid.
+
+    Values may have trailing feature dims; segment_ids indexes the leading
+    axis.  Out-of-range segment ids are dropped (used for masking).
+    """
+    kw = dict(
+        num_segments=num_segments,
+        indices_are_sorted=indices_are_sorted,
+    )
+    if combine == "sum":
+        return jax.ops.segment_sum(values, segment_ids, **kw)
+    if combine == "min":
+        return jax.ops.segment_min(values, segment_ids, **kw)
+    if combine == "max":
+        return jax.ops.segment_max(values, segment_ids, **kw)
+    if combine == "mean":
+        tot = jax.ops.segment_sum(values, segment_ids, **kw)
+        cnt = jax.ops.segment_sum(
+            jnp.ones(values.shape[: segment_ids.ndim], values.dtype),
+            segment_ids,
+            **kw,
+        )
+        cnt = jnp.maximum(cnt, 1)
+        return tot / cnt.reshape(cnt.shape + (1,) * (tot.ndim - cnt.ndim))
+    raise ValueError(f"unknown combine {combine!r}")
+
+
+def segment_softmax(
+    logits: jnp.ndarray,
+    segment_ids: jnp.ndarray,
+    num_segments: int,
+    mask: jnp.ndarray | None = None,
+):
+    """Numerically stable softmax within segments (GAT-style edge softmax)."""
+    if mask is not None:
+        logits = jnp.where(mask, logits, -jnp.inf)
+    seg_max = jax.ops.segment_max(logits, segment_ids, num_segments=num_segments)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    shifted = logits - seg_max[segment_ids]
+    expd = jnp.exp(shifted)
+    if mask is not None:
+        expd = jnp.where(mask, expd, 0.0)
+    denom = jax.ops.segment_sum(expd, segment_ids, num_segments=num_segments)
+    denom = jnp.maximum(denom, 1e-20)
+    return expd / denom[segment_ids]

@@ -1,0 +1,91 @@
+"""Termination detection for diffusive computations.
+
+The paper (§V.A step 6, §V.B) requires detecting the moment when *no vertex
+is active and no message is in transit*.  Its HPX-5 implementation uses the
+Dijkstra–Scholten (DS) spanning-tree algorithm, paying one acknowledgement
+per diffusion message.
+
+This module provides both detectors used in the framework:
+
+* :func:`quiescent` — **counting detection** for the batched engines.  Our
+  transports (outbox exchange / ``all_to_all``) are lossless and the engine
+  can observe global state with one ``psum``, so quiescence is exactly
+  ``active == 0 ∧ sent == delivered``; the DS tree exists in HPX because no
+  such cheap global observation exists there (DESIGN.md §2).
+* :class:`DijkstraScholten` — a faithful per-message DS detector (parent
+  pointers, deficit counters, ack messages) used by the event-driven
+  reference engine in event.py, validated against counting detection in the
+  test suite.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["quiescent", "DijkstraScholten"]
+
+
+def quiescent(active_count, inflight_count):
+    """Global quiescence predicate for the batched engines."""
+    return (active_count == 0) & (inflight_count == 0)
+
+
+class DijkstraScholten:
+    """Classic Dijkstra–Scholten termination detection (host-side).
+
+    Node 'environment' (-1) is the root that injects the initial diffusion
+    messages.  Every computation message is acknowledged; the first message a
+    disengaged node receives makes the sender its parent.  A node sends the
+    ack to its parent only once it is passive and its own deficit is zero —
+    the engagement tree collapses leaf-first, and when the root's deficit
+    reaches zero, the computation has terminated (no actives, no in-flight).
+    """
+
+    ENV = -1
+
+    def __init__(self, n_nodes: int):
+        self.parent = [None] * n_nodes   # None = disengaged
+        self.deficit = [0] * n_nodes     # unacked messages sent by each node
+        self.env_deficit = 0
+        self.acks = 0                    # ack message count (paper's overhead)
+
+    # -- hooks called by the event engine ---------------------------------
+    def on_send(self, sender: int):
+        if sender == self.ENV:
+            self.env_deficit += 1
+        else:
+            self.deficit[sender] += 1
+
+    def on_receive(self, receiver: int, sender: int) -> bool:
+        """Returns True if the receiver should ack immediately (already
+        engaged); False if the sender became the receiver's parent."""
+        if self.parent[receiver] is None and self.deficit[receiver] == 0:
+            self.parent[receiver] = sender
+            return False
+        self._ack(sender)
+        return True
+
+    def maybe_detach(self, node: int, is_active: bool):
+        """Called when a node goes passive; collapses the tree if possible."""
+        if (
+            not is_active
+            and self.parent[node] is not None
+            and self.deficit[node] == 0
+        ):
+            p = self.parent[node]
+            self.parent[node] = None
+            self._ack(p)
+
+    def _ack(self, node: int):
+        self.acks += 1
+        if node == self.ENV:
+            self.env_deficit -= 1
+        else:
+            self.deficit[node] -= 1
+
+    def terminated(self) -> bool:
+        return self.env_deficit == 0
+
+    def invariant_ok(self) -> bool:
+        """Tree-consistency invariant: engaged nodes have a parent chain."""
+        return all(d >= 0 for d in self.deficit) and self.env_deficit >= 0

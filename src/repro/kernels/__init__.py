@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+Each kernel package has kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd public wrapper w/ backend dispatch + custom VJP where trained), and
+ref.py (pure-jnp oracle used for interpret-mode validation and as the
+CPU/GPU execution path).
+"""
+from .flash_attention.ops import attention, decode_attention
+from .segment_reduce.ops import segment_sum, segment_sum_presorted
+from .sssp_relax.ops import relax
+
+__all__ = [
+    "attention",
+    "decode_attention",
+    "segment_sum",
+    "segment_sum_presorted",
+    "relax",
+]

@@ -1,0 +1,127 @@
+"""Jit'd public wrapper around the flash-attention kernel.
+
+Backend dispatch:
+
+* ``pallas``    — the fused TPU kernel forward; exact two-pass flash
+                  backward from xla_flash (custom_vjp).
+* ``xla``       — memory-efficient scan attention (O(S*chunk) live memory in
+                  both passes).  Default off-TPU; this is what the multi-pod
+                  dry-run lowers, so 32k-token cells fit.
+* ``interpret`` — the Pallas kernel executed by the interpreter (CPU
+                  validation path used by the kernel test sweeps).
+* ``naive``     — the quadratic oracle (small shapes only).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention as _flash_kernel
+from .ref import attention_ref
+from .xla_flash import mea_attention
+
+__all__ = ["attention", "decode_attention"]
+
+
+def _backend_default() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _pallas_attention(q, k, v, causal, softcap, block_q, block_k, interpret):
+    qp, sq = _pad_to(q, 2, block_q)
+    kp, skv = _pad_to(k, 2, block_k)
+    vp, _ = _pad_to(v, 2, block_k)
+    out = _flash_kernel(
+        qp, kp, vp, causal=causal, softcap=softcap, block_q=block_q,
+        block_k=block_k, kv_len=skv, interpret=interpret,
+    )
+    return out[:, :, :sq, :]
+
+
+def _pallas_fwd(q, k, v, causal, softcap, block_q, block_k, interpret):
+    out = _pallas_attention(q, k, v, causal, softcap, block_q, block_k,
+                            interpret)
+    return out, (q, k, v)
+
+
+def _pallas_bwd(causal, softcap, block_q, block_k, interpret, res, g):
+    q, k, v = res
+    chunk = min(512, k.shape[2])
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: mea_attention(q_, k_, v_, causal, softcap, chunk,
+                                         None),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+_pallas_attention.defvjp(_pallas_fwd, _pallas_bwd)
+
+
+def attention(
+    q: jnp.ndarray,            # [B, Hq, S, D]
+    k: jnp.ndarray,            # [B, Hkv, S, D]
+    v: jnp.ndarray,
+    causal: bool = True,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    backend: str | None = None,
+) -> jnp.ndarray:
+    """GQA attention. q [B,Hq,S,D]; k/v [B,Hkv,S,D] -> [B,Hq,S,D]."""
+    backend = backend or _backend_default()
+    if backend == "naive":
+        return attention_ref(q, k, v, causal=causal, softcap=softcap)
+    if backend == "xla":
+        skv = k.shape[2]
+        chunk = min(512, skv) if skv % 512 == 0 or skv < 512 else _gcd_chunk(skv)
+        return mea_attention(q, k, v, causal, softcap, chunk, None)
+    return _pallas_attention(
+        q, k, v, causal, softcap, block_q, block_k, backend == "interpret"
+    )
+
+
+def _gcd_chunk(skv: int, target: int = 512) -> int:
+    for c in range(min(target, skv), 0, -1):
+        if skv % c == 0:
+            return c
+    return 1
+
+
+def decode_attention(
+    q: jnp.ndarray,            # [B, Hq, 1, D]
+    k_cache: jnp.ndarray,      # [B, Hkv, Smax, D]
+    v_cache: jnp.ndarray,
+    cache_len,                 # int or scalar array: live cache entries
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    """Single-token decode against a KV cache (memory-bound matvec; XLA
+    emits this optimally on TPU — no kernel needed)."""
+    b, hq, _, d = q.shape
+    hkv = k_cache.shape[1]
+    smax = k_cache.shape[2]
+    g = hq // hkv
+    scale = 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qf * scale, k_cache.astype(jnp.float32))
+    if softcap and softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    live = jnp.arange(smax)[None, None, None, :] < cache_len
+    s = jnp.where(live, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, hq, 1, d).astype(q.dtype)

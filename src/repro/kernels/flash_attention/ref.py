@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for GQA flash attention (causal, optional logit softcap)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "decode_attention_ref"]
+
+
+def attention_ref(
+    q: jnp.ndarray,       # [B, Hq, Sq, D]
+    k: jnp.ndarray,       # [B, Hkv, Skv, D]
+    v: jnp.ndarray,       # [B, Hkv, Skv, D]
+    causal: bool = True,
+    softcap: float = 0.0,
+    kv_len: int | None = None,   # true (unpadded) kv length
+) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    skv = k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / (d ** 0.5)
+
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, sq, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf * scale, kf)
+    if softcap and softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    if causal:
+        # query i attends to kv <= i + (skv - sq) (decode-style alignment)
+        qi = jnp.arange(sq)[:, None] + (skv - sq)
+        ki = jnp.arange(skv)[None, :]
+        s = jnp.where(ki <= qi, s, -jnp.inf)
+    if kv_len is not None and kv_len < skv:
+        s = jnp.where(jnp.arange(skv)[None, :] < kv_len, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-20)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, kv_len=None, softcap: float = 0.0):
+    """Single-step decode: q [B, Hq, 1, D] vs full KV cache."""
+    return attention_ref(q, k, v, causal=True, softcap=softcap, kv_len=kv_len)

@@ -1,0 +1,157 @@
+"""Memory-efficient attention in pure XLA (Rabe–Staats / FlashAttention
+recurrence via lax.scan) with a hand-written two-pass backward.
+
+This is the non-Pallas execution path: O(Sq * chunk) live memory in both
+passes, so 32k-token prefill and 4k training steps lower + compile without
+materializing S x S score tensors.  Used on CPU (dry-run) and as the exact
+backward for the Pallas forward.  Supports GQA, causal masking and logit
+softcap (grok-1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ...dist.sharding import logical_constraint
+
+__all__ = ["mea_attention"]
+
+
+def _pin(x, *names):
+    """Anchor GSPMD so fwd/bwd agree (prevents replication fallbacks when a
+    seq-sharded residual cotangent meets head-sharded attention tensors)."""
+    return logical_constraint(x, *names)
+
+
+def _scores(q, k, scale, softcap):
+    # q [B,H,G,Sq,D] ; k [B,H,Ck,D] -> s [B,H,G,Sq,Ck] (f32)
+    s = jnp.einsum(
+        "bhgqd,bhkd->bhgqk", q.astype(jnp.float32) * scale,
+        k.astype(jnp.float32), preferred_element_type=jnp.float32,
+    )
+    if softcap and softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def _mask(s, kv0, chunk, sq, skv, causal, kv_len):
+    kpos = kv0 + jnp.arange(chunk)
+    m = kpos[None, :] < kv_len
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + (skv - sq)
+        m = m & (kpos[None, :] <= qpos)
+    return jnp.where(m[None, None, None], s, -jnp.inf)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6)
+)
+def mea_attention(q, k, v, causal=True, softcap=0.0, chunk=512, kv_len=None):
+    out, _ = _mea_fwd(q, k, v, causal, softcap, chunk, kv_len)
+    return out
+
+
+def _mea_fwd(q, k, v, causal, softcap, chunk, kv_len):
+    q = _pin(q, "batch", "heads", None, None)
+    k = _pin(k, "batch", "kv_heads", None, None)
+    v = _pin(v, "batch", "kv_heads", None, None)
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    kv_len = skv if kv_len is None else kv_len
+    scale = 1.0 / (d ** 0.5)
+    assert skv % chunk == 0, "kv length must divide the chunk size"
+    nc = skv // chunk
+
+    qg = q.reshape(b, hkv, g, sq, d)
+    kc = k.reshape(b, hkv, nc, chunk, d)
+    vc = v.reshape(b, hkv, nc, chunk, d)
+
+    def step(carry, inputs):
+        acc, m, l = carry
+        kb, vb, idx = inputs
+        s = _scores(qg, kb, scale, softcap)
+        s = _mask(s, idx * chunk, chunk, sq, skv, causal, kv_len)
+        m_new = jnp.maximum(m, s.max(-1))
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        alpha = jnp.exp(jnp.where(jnp.isneginf(m), -jnp.inf, m - m_safe))
+        p = jnp.exp(s - m_safe[..., None])
+        l = alpha * l + p.sum(-1)
+        pv = jnp.einsum("bhgqk,bhkd->bhgqd", p, vb.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    m0 = jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    (acc, m, l), _ = lax.scan(
+        step, (acc0, m0, l0),
+        (kc.transpose(2, 0, 1, 3, 4), vc.transpose(2, 0, 1, 3, 4),
+         jnp.arange(nc)),
+    )
+    l_safe = jnp.maximum(l, 1e-20)
+    out = (acc / l_safe[..., None]).reshape(b, hq, sq, d).astype(q.dtype)
+    lse = jnp.where(jnp.isneginf(m), -jnp.inf, m + jnp.log(l_safe))
+    return out, (q, k, v, out, lse)
+
+
+def _mea_bwd(causal, softcap, chunk, kv_len, res, dout):
+    q, k, v, out, lse = res
+    dout = _pin(dout, "batch", "heads", None, None)
+    out = _pin(out, "batch", "heads", None, None)
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    kv_len_ = skv if kv_len is None else kv_len
+    scale = 1.0 / (d ** 0.5)
+    nc = skv // chunk
+
+    qg = q.reshape(b, hkv, g, sq, d)
+    og = out.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    dog = dout.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    delta = (og * dog).sum(-1)                     # [b,hkv,g,sq]
+    kc = k.reshape(b, hkv, nc, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hkv, nc, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    def step(dq, inputs):
+        kb, vb, idx = inputs
+        s_pre = jnp.einsum(
+            "bhgqd,bhkd->bhgqk", qg.astype(jnp.float32) * scale,
+            kb.astype(jnp.float32),
+        )
+        if softcap and softcap > 0:
+            s = softcap * jnp.tanh(s_pre / softcap)
+            dcap = 1.0 - (s / softcap) ** 2
+        else:
+            s = s_pre
+            dcap = None
+        s = _mask(s, idx * chunk, chunk, sq, skv, causal, kv_len_)
+        p = jnp.exp(s - lse[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        dv = jnp.einsum("bhgqk,bhgqd->bhkd", p, dog)
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", dog, vb.astype(jnp.float32))
+        ds = p * (dp - delta[..., None])
+        if dcap is not None:
+            ds = ds * dcap
+        dq = dq + jnp.einsum("bhgqk,bhkd->bhgqd", ds, kb.astype(jnp.float32)) * scale
+        dk = jnp.einsum("bhgqk,bhgqd->bhkd", ds, qg.astype(jnp.float32)) * scale
+        return dq, (dk, dv)
+
+    dq0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    dq, (dks, dvs) = lax.scan(step, dq0, (kc, vc, jnp.arange(nc)))
+    dk = dks.transpose(1, 2, 0, 3, 4).reshape(b, hkv, skv, d)
+    dv = dvs.transpose(1, 2, 0, 3, 4).reshape(b, hkv, skv, d)
+    return (
+        _pin(dq.reshape(b, hq, sq, d).astype(q.dtype),
+             "batch", "heads", None, None),
+        _pin(dk.astype(k.dtype), "batch", "kv_heads", None, None),
+        _pin(dv.astype(v.dtype), "batch", "kv_heads", None, None),
+    )
+
+
+mea_attention.defvjp(lambda q, k, v, c, sc, ch, kl: _mea_fwd(q, k, v, c, sc, ch, kl),
+                     _mea_bwd)

@@ -1,0 +1,64 @@
+"""Public segment-reduce ops with kernel dispatch + custom VJP.
+
+``segment_sum(values, seg_ids, num_segments)`` — seg_ids need NOT be sorted;
+the wrapper sorts once (XLA sort, fused) and runs the Pallas one-hot-matmul
+kernel over the sorted stream.  Gradient of segment_sum is a gather, which
+XLA handles natively.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import segment_sum_sorted
+from .ref import segment_sum_ref
+
+__all__ = ["segment_sum", "segment_sum_presorted"]
+
+
+def _backend_default() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def segment_sum_presorted(values, seg_ids, num_segments, block_e=128,
+                          backend=None):
+    """values [E, F], seg_ids [E] sorted ascending (-1 pads) -> [N, F]."""
+    backend = backend or _backend_default()
+    if backend == "xla":
+        return segment_sum_ref(values, seg_ids, num_segments)
+    e = values.shape[0]
+    pad = (-e) % block_e
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        seg_ids = jnp.pad(seg_ids, (0, pad), constant_values=-1)
+    return segment_sum_sorted(
+        values, seg_ids, num_segments, block_e=block_e,
+        interpret=(backend == "interpret"),
+    ).astype(values.dtype)
+
+
+def _fwd(values, seg_ids, num_segments, block_e, backend):
+    out = segment_sum_presorted(values, seg_ids, num_segments, block_e, backend)
+    return out, seg_ids
+
+
+def _bwd(num_segments, block_e, backend, seg_ids, g):
+    # d/dvalues of a segment sum is a row gather; -1 ids get zero grad
+    safe = jnp.clip(seg_ids, 0, num_segments - 1)
+    gv = jnp.where((seg_ids >= 0)[:, None], g[safe], 0)
+    return gv, None
+
+
+segment_sum_presorted.defvjp(_fwd, _bwd)
+
+
+def segment_sum(values, seg_ids, num_segments, block_e=128, backend=None):
+    """Unsorted segment sum: sort by id, then the sorted kernel."""
+    order = jnp.argsort(seg_ids)
+    return segment_sum_presorted(
+        values[order], seg_ids[order], num_segments, block_e, backend
+    )

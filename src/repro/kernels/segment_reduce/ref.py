@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for sorted segment reduction."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["segment_sum_ref", "segment_min_ref"]
+
+
+def segment_sum_ref(values, seg_ids, num_segments: int):
+    """values [E, F] (or [E]), seg_ids [E] int32 (−1 = dropped)."""
+    ids = jnp.where(seg_ids < 0, num_segments, seg_ids)
+    return jax.ops.segment_sum(values, ids, num_segments=num_segments + 1)[
+        :num_segments
+    ]
+
+
+def segment_min_ref(values, seg_ids, num_segments: int):
+    ids = jnp.where(seg_ids < 0, num_segments, seg_ids)
+    return jax.ops.segment_min(values, ids, num_segments=num_segments + 1)[
+        :num_segments
+    ]

@@ -1,0 +1,33 @@
+"""Public wrapper for the fused relax kernel (forward-only; the diffusion
+engine is not differentiated)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import relax_sorted
+from .ref import relax_ref
+
+__all__ = ["relax"]
+
+
+def _backend_default() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def relax(dist, active, weight, src, dst_sorted, n_nodes, block_e=256,
+          backend=None):
+    backend = backend or _backend_default()
+    if backend == "xla":
+        return relax_ref(dist, weight, src, dst_sorted, active, n_nodes)
+    e = weight.shape[0]
+    pad = (-e) % block_e
+    if pad:
+        weight = jnp.pad(weight, (0, pad))
+        src = jnp.pad(src, (0, pad))
+        dst_sorted = jnp.pad(dst_sorted, (0, pad), constant_values=-1)
+    return relax_sorted(
+        dist, active, weight, src, dst_sorted, n_nodes, block_e=block_e,
+        interpret=(backend == "interpret"),
+    )

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused SSSP relaxation step."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["relax_ref"]
+
+
+def relax_ref(dist, weight, src, dst_sorted, active, n_nodes: int):
+    """One relaxation sweep: candidates dist[src]+w from active sources,
+    segment-min by (sorted) destination.  -1 dst = dead edge.
+
+    Returns [n_nodes] candidate array (+inf where no message)."""
+    cand = dist[src] + weight
+    cand = jnp.where(active[src] & (dst_sorted >= 0), cand, jnp.inf)
+    ids = jnp.where(dst_sorted < 0, n_nodes, dst_sorted)
+    out = jax.ops.segment_min(cand, ids, num_segments=n_nodes + 1)
+    return out[:n_nodes]

@@ -1,0 +1,235 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below may now import jax.
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import re         # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.registry import SKIPPED_CELLS, cells  # noqa: E402
+from repro.launch.mesh import make_production_mesh       # noqa: E402
+from repro.launch.steps import build_cell                # noqa: E402
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+ART_DIR = os.path.abspath(
+    os.environ.get("REPRO_ART_DIR",
+                   os.path.join(os.path.dirname(__file__), "../../..",
+                                "artifacts/dryrun"))
+)
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*)\[([0-9,]*)\]")
+
+
+def _bytes_of_shape(text: str) -> int:
+    """Sum byte sizes of every typed shape in an HLO result type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-op-kind total result bytes (per device) of every collective.
+
+    Ring-model effective ICI bytes: all-reduce moves ~2x its operand,
+    all-gather/reduce-scatter/all-to-all ~1x the larger side.
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+                     r"([a-z\-]+)", s)
+        if not m:
+            continue
+        op = m.group(2)
+        kind = None
+        for k in _COLLECTIVES:
+            if op == k or op.startswith(k + "-"):
+                kind = k
+                break
+        if kind is None:
+            continue
+        nbytes = _bytes_of_shape(m.group(1))
+        out[kind]["count"] += 1
+        mult = 2.0 if kind == "all-reduce" else 1.0
+        out[kind]["bytes"] += int(nbytes * mult)
+    return out
+
+
+def lower_and_compile(cell, mesh, compile_: bool = True):
+    key_struct = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    with cell.context(mesh):
+        params_struct = jax.eval_shape(
+            lambda k: cell.init_params(k), key_struct
+        )
+        p_shard = cell.param_shardings(mesh, params_struct)
+        batch_struct = cell.input_specs()
+        b_shard = cell.batch_spec_fn(mesh)
+        rep = NamedSharding(mesh, P())
+
+        if cell.mode == "train":
+            opt_struct = jax.eval_shape(cell.init_opt, params_struct)
+            o_shard = cell.param_shardings(mesh, opt_struct)
+            fn = jax.jit(
+                cell.step,
+                in_shardings=(p_shard, o_shard, rep, b_shard),
+                out_shardings=(p_shard, o_shard, rep),
+                donate_argnums=(0, 1),   # params/opt update in place
+            )
+            lowered = fn.lower(
+                params_struct, opt_struct,
+                jax.ShapeDtypeStruct((), jnp.int32), batch_struct,
+            )
+        elif cell.mode == "decode":
+            # serving loop updates the KV cache in place
+            fn = jax.jit(cell.step, in_shardings=(p_shard, b_shard),
+                         donate_argnums=(1,))
+            lowered = fn.lower(params_struct, batch_struct)
+        else:
+            fn = jax.jit(cell.step, in_shardings=(p_shard, b_shard))
+            lowered = fn.lower(params_struct, batch_struct)
+
+        result = {"lowered": True}
+        if not compile_:
+            return result, lowered, None
+        compiled = lowered.compile()
+        result["compiled"] = True
+        try:
+            ma = compiled.memory_analysis()
+            result["memory"] = {
+                "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+                "generated_code_bytes": int(
+                    getattr(ma, "generated_code_size_in_bytes", 0)
+                ),
+            }
+        except Exception as exc:  # pragma: no cover
+            result["memory_error"] = str(exc)
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            result["cost"] = {
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+                "transcendentals": float(ca.get("transcendentals", 0.0)),
+            }
+        except Exception as exc:  # pragma: no cover
+            result["cost_error"] = str(exc)
+        try:
+            text = compiled.as_text()
+            result["collectives"] = collective_stats(text)
+            # scan-aware reanalysis (XLA counts while bodies once)
+            import sys
+            sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                            "../../.."))
+            from benchmarks.hlo_analysis import analyze_hlo
+            h = analyze_hlo(text)
+            result["hlo"] = {
+                "flops_corrected": h["flops"],
+                "collective_bytes_corrected": h["collective_bytes"],
+                "collectives_corrected": h["collectives"],
+                "dynamic_whiles": h["dynamic_whiles"],
+                "bytes_est": h.get("bytes_est", 0.0),
+            }
+            xla_flops = result.get("cost", {}).get("flops", 0.0)
+            if xla_flops > 0 and h["flops"] > 0:
+                ratio = max(1.0, h["flops"] / xla_flops)
+                result["hlo"]["scan_correction_ratio"] = ratio
+                result["hlo"]["bytes_accessed_corrected"] = (
+                    result.get("cost", {}).get("bytes_accessed", 0.0) * ratio
+                )
+        except Exception as exc:  # pragma: no cover
+            result["collectives_error"] = str(exc)
+        return result, lowered, compiled
+
+
+def run_cell(arch_id, shape_name, multi_pod=False, save=True, verbose=True):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = build_cell(arch_id, shape_name)
+    t0 = time.time()
+    result, lowered, compiled = lower_and_compile(cell, mesh)
+    result.update(
+        arch=arch_id, shape=shape_name,
+        mesh="2x16x16" if multi_pod else "16x16",
+        compile_seconds=round(time.time() - t0, 1),
+    )
+    if verbose and compiled is not None:
+        print(f"  memory_analysis: {result.get('memory')}")
+        print(f"  cost_analysis:   {result.get('cost')}")
+        coll = result.get("collectives", {})
+        tot = sum(v["bytes"] for v in coll.values())
+        print(f"  collectives:     {tot/1e6:.1f} MB/device "
+              f"({ {k: v['count'] for k, v in coll.items()} })")
+    if save:
+        os.makedirs(ART_DIR, exist_ok=True)
+        tag = f"{arch_id}__{shape_name}__{result['mesh']}".replace("/", "_")
+        with open(os.path.join(ART_DIR, tag + ".json"), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--continue-on-error", action="store_true")
+    args = ap.parse_args()
+
+    todo = [
+        (a, s) for a, s, skip in cells()
+        if (args.arch is None or a == args.arch)
+        and (args.shape is None or s == args.shape)
+    ]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch_id, shape_name in todo:
+        for mp in meshes:
+            tag = f"{arch_id} x {shape_name} x {'2x16x16' if mp else '16x16'}"
+            print(f"[dryrun] {tag}")
+            try:
+                run_cell(arch_id, shape_name, multi_pod=mp)
+            except Exception as exc:
+                failures.append((tag, str(exc)))
+                print(f"  FAILED: {exc}")
+                if not args.continue_on_error:
+                    traceback.print_exc()
+                    raise
+    for arch_shape, reason in SKIPPED_CELLS.items():
+        print(f"[skipped] {arch_shape}: {reason}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, "->", e[:200])
+        raise SystemExit(1)
+    print("\nAll dry-run cells lowered + compiled OK.")
+
+
+if __name__ == "__main__":
+    main()

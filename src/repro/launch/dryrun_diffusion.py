@@ -1,0 +1,106 @@
+import os
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+)
+# ^ first lines, before any jax import (see dryrun.py)
+
+"""Dry-run of the PAPER'S OWN workload at production scale: diffusive SSSP
+on a Graph500-class RMAT graph, one compute cell per chip.
+
+    python -m repro.launch.dryrun_diffusion --scale 26 [--multi-pod]
+
+Lowers + compiles the shard_map SPMD diffusion engine (local relaxation
+while-loops with device-dependent trip counts, all_to_all operon exchange,
+psum termination detection) for 256 cells (one pod) or 512 (two pods,
+'cells' spanning the pod axis), with ShapeDtypeStruct graph shards — no
+allocation.  Proves the paper's execution model lowers to a coherent
+collective schedule on real hardware meshes.
+"""
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.diffuse import make_spmd_diffuse  # noqa: E402
+from repro.core.programs import sssp_program      # noqa: E402
+
+
+def build_specs(scale: int, n_cells: int, edge_factor: int = 16):
+    n = 1 << scale
+    e = n * edge_factor * 2          # symmetrized
+    np_ = n // n_cells
+    ep = e // n_cells
+    S = n_cells
+    i32 = jnp.int32
+    return {
+        "src_local": jax.ShapeDtypeStruct((S, ep), i32),
+        "dst_shard": jax.ShapeDtypeStruct((S, ep), i32),
+        "dst_local": jax.ShapeDtypeStruct((S, ep), i32),
+        "dst_gid": jax.ShapeDtypeStruct((S, ep), i32),
+        "weight": jax.ShapeDtypeStruct((S, ep), jnp.float32),
+        "edge_ok": jax.ShapeDtypeStruct((S, ep), jnp.bool_),
+        "node_ok": jax.ShapeDtypeStruct((S, np_), jnp.bool_),
+        "gid": jax.ShapeDtypeStruct((S, np_), i32),
+        "out_degree": jax.ShapeDtypeStruct((S, np_), i32),
+    }, np_, ep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=26)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--max-local-iters", type=int, default=64)
+    args = ap.parse_args()
+
+    n_cells = 512 if args.multi_pod else 256
+    mesh = jax.make_mesh((n_cells,), ("cells",))
+    sgd, np_, ep = build_specs(args.scale, n_cells)
+    print(f"[diffusion dry-run] RMAT scale={args.scale}: "
+          f"{1 << args.scale:,} vertices, {n_cells} cells, "
+          f"{np_:,} vertices + {ep:,} edges per cell")
+
+    prog = sssp_program(0, track_parents=False)
+    fn = make_spmd_diffuse(mesh, prog, sgd, axis_name="cells",
+                           max_local_iters=args.max_local_iters)
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(fn).lower(sgd)
+        compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    print("memory_analysis:",
+          {k: int(getattr(ma, k + "_size_in_bytes", 0))
+           for k in ("argument", "output", "temp")})
+    try:
+        import sys
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                        "../../.."))
+        from benchmarks.hlo_analysis import analyze_hlo
+        h = analyze_hlo(compiled.as_text())
+        print(f"collective bytes/round-program: "
+              f"{h['collective_bytes']/1e6:.1f} MB/device; "
+              f"dynamic whiles (diffusion rounds + local relaxation): "
+              f"{h['dynamic_whiles']}")
+        coll = {k: v["count"] for k, v in h["collectives"].items()
+                if v["count"]}
+        print("collective schedule:", coll)
+        out = {
+            "scale": args.scale, "n_cells": n_cells,
+            "per_cell_vertices": np_, "per_cell_edges": ep,
+            "collectives": h["collectives"],
+            "dynamic_whiles": h["dynamic_whiles"],
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+        }
+        art = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                           "../../..", "artifacts"))
+        os.makedirs(art, exist_ok=True)
+        tag = f"diffusion_sssp_s{args.scale}_{n_cells}cells"
+        with open(os.path.join(art, tag + ".json"), "w") as f:
+            json.dump(out, f, indent=1)
+    except Exception as exc:
+        print("analysis skipped:", exc)
+    print("diffusion dry-run OK")
+
+
+if __name__ == "__main__":
+    main()

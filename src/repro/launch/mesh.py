@@ -1,0 +1,19 @@
+"""Production mesh construction (the contract used by the dry-run).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) data x model single pod; (2, 16, 16) pod x data x model for
+    the two-pod (512-chip) configuration."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,442 @@
+"""Cell builders: (architecture x input shape) -> step fn + input specs +
+shardings.  Used by the dry-run (ShapeDtypeStruct lowering), the trainer,
+and the benchmarks — one definition, three consumers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import registry
+from ..configs.shapes import GraphShape, LMShape, RecsysShape
+from ..dist import rules as dist_rules
+from ..dist.moe_parallel import make_moe_plan
+from ..dist.sharding import sharding_context
+from ..models import recsys as recsys_model
+from ..models.gnn import (
+    equiformer_v2 as eqv2_model,
+    gatedgcn as gatedgcn_model,
+    mace as mace_model,
+    meshgraphnet as mgn_model,
+)
+from ..models.gnn.common import GraphBatch
+from ..models.sampler import block_shapes
+from ..models import transformer
+from ..optim import adafactor, adamw, clip_by_global_norm
+
+__all__ = ["Cell", "build_cell", "pad_to"]
+
+_GNN_MODELS = {
+    "equiformer-v2": eqv2_model,
+    "gatedgcn": gatedgcn_model,
+    "meshgraphnet": mgn_model,
+    "mace": mace_model,
+}
+
+_F32 = jnp.float32
+_I32 = jnp.int32
+
+# grad-accumulation factors for the train_4k cells (memory plan)
+_LM_MICROBATCHES = {
+    "command-r-plus-104b": 8,
+    "grok-1-314b": 4,
+    "phi3.5-moe-42b-a6.6b": 4,
+    "qwen2-7b": 2,
+    "tinyllama-1.1b": 1,
+}
+
+
+def pad_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+class Cell(NamedTuple):
+    arch_id: str
+    shape_name: str
+    family: str           # rules family (lm / gnn_* / recsys)
+    mode: str             # train | prefill | decode | serve | retrieval
+    config: Any
+    init_params: Callable             # (key) -> params
+    init_opt: Callable | None         # (params) -> opt_state
+    step: Callable                    # see mode-specific signatures
+    input_specs: Callable             # () -> pytree of ShapeDtypeStruct
+    batch_spec_fn: Callable           # (mesh) -> pytree of NamedSharding
+    context: Callable                 # (mesh) -> sharding_context manager
+
+    def param_shardings(self, mesh, params_struct):
+        return dist_rules.param_sharding(params_struct, mesh, self.family)
+
+
+def _data_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def _ctx_factory(family):
+    def make(mesh, moe=False):
+        rules = dist_rules.logical_rules(mesh, family)
+        plan = None
+        if moe:
+            plan = make_moe_plan(
+                mesh, data_axes=_data_axes(mesh), model_axis="model",
+                fsdp_axis="data",
+            )
+        return sharding_context(mesh, rules, plan)
+    return make
+
+
+def _make_train_step(loss_fn, optimizer, n_micro: int = 1):
+    """Train step with optional gradient-accumulation microbatching
+    (scan over micro-batches; f32 accumulator; one optimizer update)."""
+
+    def step(params, opt_state, step_no, batch):
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mb = jax.tree_util.tree_map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                    + x.shape[1:]),
+                batch,
+            )
+
+            acc_dtype = jnp.float32 if n_micro <= 2 else jnp.bfloat16
+            import os as _os
+            if _os.environ.get("REPRO_ACCUM_DTYPE") == "f32":
+                acc_dtype = jnp.float32
+            elif _os.environ.get("REPRO_ACCUM_DTYPE") == "bf16":
+                acc_dtype = jnp.bfloat16
+
+            def micro(acc, b):
+                l, g = jax.value_and_grad(loss_fn)(params, b)
+                acc = jax.tree_util.tree_map(
+                    lambda a, gg: a + gg.astype(acc_dtype), acc, g
+                )
+                return acc, l
+
+            acc0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params
+            )
+            acc, losses = jax.lax.scan(micro, acc0, mb)
+            grads = jax.tree_util.tree_map(lambda a: a / n_micro, acc)
+            loss = losses.mean()
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        updates, opt_state = optimizer.update(grads, opt_state, params,
+                                              step_no)
+        params = jax.tree_util.tree_map(
+            lambda p, u: p + u.astype(p.dtype), params, updates
+        )
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+    return step
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_cell(arch_id, mod, shape: LMShape, smoke: bool) -> Cell:
+    cfg = mod.smoke_config() if smoke else mod.make_config()
+    b, s = (2, 64) if smoke else (shape.global_batch, shape.seq_len)
+    init = lambda key: transformer.init_params(key, cfg)
+    is_moe = cfg.moe is not None
+    ctx = _ctx_factory("lm")
+
+    if shape.mode == "train":
+        optimizer = adafactor(lr=1e-3)
+        loss = lambda params, batch: transformer.loss_fn(
+            params, batch["tokens"], batch["labels"], cfg
+        )
+        # microbatching keeps per-device transients inside HBM for the
+        # big models (grad-accumulation scan; see EXPERIMENTS.md §Perf)
+        n_micro = 1 if smoke else _LM_MICROBATCHES.get(arch_id, 1)
+        step = _make_train_step(loss, optimizer, n_micro=n_micro)
+        specs = lambda: {
+            "tokens": jax.ShapeDtypeStruct((b, s), _I32),
+            "labels": jax.ShapeDtypeStruct((b, s), _I32),
+        }
+
+        def batch_specs(mesh):
+            sh = NamedSharding(mesh, P(_data_axes(mesh), None))
+            return {"tokens": sh, "labels": sh}
+
+        return Cell(arch_id, shape.name, "lm", "train", cfg, init,
+                    optimizer.init, step, specs, batch_specs,
+                    lambda mesh: ctx(mesh, is_moe))
+
+    if shape.mode == "prefill":
+        def step(params, batch):
+            return transformer.prefill(params, batch["tokens"], cfg,
+                                       max_len=s)
+        specs = lambda: {"tokens": jax.ShapeDtypeStruct((b, s), _I32)}
+
+        def batch_specs(mesh):
+            return {"tokens": NamedSharding(mesh, P(_data_axes(mesh), None))}
+
+        return Cell(arch_id, shape.name, "lm", "prefill", cfg, init, None,
+                    step, specs, batch_specs, lambda mesh: ctx(mesh, is_moe))
+
+    # decode: one new token against a seq_len KV cache
+    import os as _os
+    if not smoke and _os.environ.get("REPRO_KV_QUANT") == "int8":
+        # beyond-paper: int8 KV cache — decode is KV-bandwidth-bound, so
+        # this halves the dominant roofline term (EXPERIMENTS.md §Perf)
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+
+    def step(params, batch):
+        return transformer.decode_step(
+            params, batch["token"], batch["cache"], batch["cache_len"], cfg
+        )
+
+    def specs():
+        cache = jax.eval_shape(
+            lambda: transformer.init_cache(cfg, b, s)
+        )
+        return {
+            "token": jax.ShapeDtypeStruct((b, 1), _I32),
+            "cache": cache,
+            "cache_len": jax.ShapeDtypeStruct((), _I32),
+        }
+
+    def batch_specs(mesh):
+        da = _data_axes(mesh)
+        # KV cache: batch over data, cache SEQUENCE over the model axis
+        # (kv_heads < model size); decode softmax over the sharded seq is
+        # handled by GSPMD partial-reduce collectives
+        cache_sh = NamedSharding(mesh, P(None, da, None, "model", None))
+        cache = jax.tree_util.tree_map(
+            lambda _: cache_sh,
+            jax.eval_shape(lambda: transformer.init_cache(cfg, b, s)),
+        )
+        return {
+            "token": NamedSharding(mesh, P(da, None)),
+            "cache": cache,
+            "cache_len": NamedSharding(mesh, P()),
+        }
+
+    return Cell(arch_id, shape.name, "lm", "decode", cfg, init, None, step,
+                specs, batch_specs, lambda mesh: ctx(mesh, is_moe))
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_sizes(shape: GraphShape, smoke: bool):
+    if smoke:
+        return 64, 256, 1
+    if shape.mode == "sampled":
+        n, e = block_shapes(shape.batch_nodes, shape.fanout)
+        return pad_to(n, 512), pad_to(e, 512 * max(shape.edge_chunks, 1)), 1
+    if shape.mode == "batched":
+        return (pad_to(shape.n_nodes * shape.batch_graphs, 512),
+                pad_to(shape.n_edges * shape.batch_graphs, 512),
+                shape.batch_graphs)
+    return (pad_to(shape.n_nodes, 512),
+            pad_to(shape.n_edges, 512 * max(shape.edge_chunks, 1)), 1)
+
+
+def _gnn_cell(arch_id, mod, shape: GraphShape, smoke: bool) -> Cell:
+    model = _GNN_MODELS[arch_id]
+    geometric = mod.NEEDS_GEOMETRY
+    family = "gnn_geometric" if geometric else "gnn_scalar"
+    n, e, n_graphs = _gnn_sizes(shape, smoke)
+    chunks = 1 if smoke else max(shape.edge_chunks, 1)
+
+    import os as _os
+    kw = {}
+    if arch_id == "gatedgcn" and not smoke:
+        kw = dict(d_in=max(shape.d_feat, 1),
+                  n_classes=max(shape.n_classes, 2))
+    if arch_id == "meshgraphnet" and not smoke:
+        kw = dict(d_node_in=max(shape.d_feat, 8))
+    cfg = mod.smoke_config() if smoke else mod.make_config(**kw)
+    if not smoke and _os.environ.get("REPRO_GNN_DTYPE") == "bf16":
+        cfg = dataclasses.replace(cfg, dtype=jnp.bfloat16)
+    if geometric and not smoke:
+        cfg = dataclasses.replace(cfg, edge_chunks=chunks,
+                                  remat=(shape.mode == "full"))
+        if shape.n_nodes > 100_000:
+            # billion-edge regime: block-diag channel mixing + shard_map
+            # operon routing keep both mesh axes collective-lean, bf16
+            # activations halve the replicated node table
+            # (DESIGN.md §2; before/after in EXPERIMENTS.md §Perf)
+            cfg = dataclasses.replace(cfg, channel_groups=16,
+                                      spmd_edges=True, dtype=jnp.bfloat16)
+    if arch_id == "equiformer-v2" and not smoke and shape.n_classes:
+        cfg = dataclasses.replace(cfg, d_out=shape.n_classes)
+
+    init = lambda key: model.init_params(key, cfg)
+    ctx = _ctx_factory(family)
+
+    def specs():
+        base = dict(
+            senders=jax.ShapeDtypeStruct((e,), _I32),
+            receivers=jax.ShapeDtypeStruct((e,), _I32),
+            node_mask=jax.ShapeDtypeStruct((n,), jnp.bool_),
+            edge_mask=jax.ShapeDtypeStruct((e,), jnp.bool_),
+        )
+        if geometric:
+            base["positions"] = jax.ShapeDtypeStruct((n, 3), _F32)
+            base["species"] = jax.ShapeDtypeStruct((n,), _I32)
+        else:
+            d_in = (cfg.d_in if arch_id == "gatedgcn" else cfg.d_node_in)
+            base["nodes"] = jax.ShapeDtypeStruct((n, d_in), _F32)
+            if arch_id == "meshgraphnet":
+                base["edges"] = jax.ShapeDtypeStruct((e, cfg.d_edge_in),
+                                                     _F32)
+        if shape.mode == "batched" and geometric:
+            # batched small molecules: per-graph energy regression
+            base["graph_ids"] = jax.ShapeDtypeStruct((n,), _I32)
+            labels = jax.ShapeDtypeStruct((n_graphs,), _F32)
+        elif arch_id == "mace":
+            base["graph_ids"] = jax.ShapeDtypeStruct((n,), _I32)
+            labels = jax.ShapeDtypeStruct((n_graphs,), _F32)
+        elif arch_id == "meshgraphnet":
+            labels = jax.ShapeDtypeStruct((n, cfg.d_out), _F32)
+        else:
+            labels = jax.ShapeDtypeStruct((n,), _I32)
+        return GraphBatch(n_nodes=n, n_graphs=n_graphs, labels=labels,
+                          **base)
+
+    def batch_specs(mesh):
+        r = dist_rules.logical_rules(mesh, family)
+        naxes, eaxes = r["nodes"], r["edges"]
+        node_sh = NamedSharding(mesh, P(naxes))
+        edge_sh = NamedSharding(mesh, P(eaxes))
+        node2 = NamedSharding(mesh, P(naxes, None))
+        edge2 = NamedSharding(mesh, P(eaxes, None))
+        rep = NamedSharding(mesh, P())
+
+        def pick(path, leaf):
+            key = str(path[-1].name if hasattr(path[-1], "name")
+                      else getattr(path[-1], "key", ""))
+            if key in ("senders", "receivers", "edge_mask"):
+                return edge_sh
+            if key == "edges":
+                return edge2
+            if key in ("node_mask", "species", "graph_ids"):
+                return node_sh
+            if key in ("nodes", "positions"):
+                return node2
+            if key == "labels":
+                lf = leaf
+                if lf.ndim == 2:
+                    return node2
+                if lf.shape[0] == n:
+                    return node_sh
+                return rep
+            return rep
+        return jax.tree_util.tree_map_with_path(pick, specs())
+
+    optimizer = adamw(lr=1e-3, weight_decay=1e-5)
+    loss = lambda params, batch: model.loss_fn(params, batch, cfg)
+    step = _make_train_step(loss, optimizer)
+    return Cell(arch_id, shape.name, family, "train", cfg, init,
+                optimizer.init, step, specs, batch_specs,
+                lambda mesh: ctx(mesh, False))
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_cell(arch_id, mod, shape: RecsysShape, smoke: bool) -> Cell:
+    cfg = mod.smoke_config() if smoke else mod.make_config()
+    b = 8 if smoke else shape.batch
+    # pad the candidate matrix so it tiles over every mesh configuration
+    nc = 128 if smoke else pad_to(shape.n_candidates, 512)
+    init = lambda key: recsys_model.init_params(key, cfg)
+    ctx = _ctx_factory("recsys")
+    f, l_, nd = cfg.n_user_fields, cfg.bag_len, cfg.n_dense
+
+    def base_specs():
+        return {
+            "user_ids": jax.ShapeDtypeStruct((b, f, l_), _I32),
+            "user_dense": jax.ShapeDtypeStruct((b, nd), _F32),
+        }
+
+    if shape.mode == "train":
+        optimizer = adamw(lr=1e-3)
+        loss = lambda params, batch: recsys_model.loss_fn(params, batch, cfg)
+        step = _make_train_step(loss, optimizer)
+
+        def specs():
+            out = base_specs()
+            out.update(
+                item_ids=jax.ShapeDtypeStruct((b,), _I32),
+                item_dense=jax.ShapeDtypeStruct((b, nd), _F32),
+                item_logq=jax.ShapeDtypeStruct((b,), _F32),
+            )
+            return out
+
+        def batch_specs(mesh):
+            da = _data_axes(mesh)
+            return {
+                "user_ids": NamedSharding(mesh, P(da, None, None)),
+                "user_dense": NamedSharding(mesh, P(da, None)),
+                "item_ids": NamedSharding(mesh, P(da)),
+                "item_dense": NamedSharding(mesh, P(da, None)),
+                "item_logq": NamedSharding(mesh, P(da)),
+            }
+
+        return Cell(arch_id, shape.name, "recsys", "train", cfg, init,
+                    optimizer.init, step, specs, batch_specs,
+                    lambda mesh: ctx(mesh, False))
+
+    if shape.mode == "serve":
+        def step(params, batch):
+            return recsys_model.score(params, batch, cfg)
+
+        def specs():
+            out = base_specs()
+            out.update(
+                item_ids=jax.ShapeDtypeStruct((b,), _I32),
+                item_dense=jax.ShapeDtypeStruct((b, nd), _F32),
+            )
+            return out
+
+        def batch_specs(mesh):
+            da = _data_axes(mesh)
+            return {
+                "user_ids": NamedSharding(mesh, P(da, None, None)),
+                "user_dense": NamedSharding(mesh, P(da, None)),
+                "item_ids": NamedSharding(mesh, P(da)),
+                "item_dense": NamedSharding(mesh, P(da, None)),
+            }
+
+        return Cell(arch_id, shape.name, "recsys", "serve", cfg, init, None,
+                    step, specs, batch_specs, lambda mesh: ctx(mesh, False))
+
+    # retrieval: 1 query vs n_candidates
+    def step(params, batch):
+        return recsys_model.retrieval_topk(params, batch, cfg, k=100)
+
+    def specs():
+        out = base_specs()
+        out["cand_emb"] = jax.ShapeDtypeStruct((nc, cfg.embed_dim), _F32)
+        return out
+
+    def batch_specs(mesh):
+        da = _data_axes(mesh)
+        return {
+            "user_ids": NamedSharding(mesh, P(None, None, None)),
+            "user_dense": NamedSharding(mesh, P(None, None)),
+            "cand_emb": NamedSharding(mesh, P(da + ("model",), None)),
+        }
+
+    return Cell(arch_id, shape.name, "recsys", "retrieval", cfg, init, None,
+                step, specs, batch_specs, lambda mesh: ctx(mesh, False))
+
+
+def build_cell(arch_id: str, shape_name: str, smoke: bool = False) -> Cell:
+    mod = registry.get_module(arch_id)
+    shape = registry.shapes_for(arch_id)[shape_name]
+    if mod.FAMILY == "lm":
+        return _lm_cell(arch_id, mod, shape, smoke)
+    if mod.FAMILY == "gnn":
+        return _gnn_cell(arch_id, mod, shape, smoke)
+    return _recsys_cell(arch_id, mod, shape, smoke)

@@ -1,0 +1,89 @@
+"""Shared model-building blocks (framework-free: params are plain pytrees)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init",
+    "embed_init",
+    "rmsnorm",
+    "layernorm",
+    "apply_rope",
+    "rope_freqs",
+    "cross_entropy",
+    "ACTIVATIONS",
+]
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else 1
+    if not isinstance(in_axis, int):
+        fan_in = 1
+        for a in in_axis:
+            fan_in *= shape[a]
+    std = (1.0 / fan_in) ** 0.5
+    return (jax.random.truncated_normal(key, -2, 2, shape) * std).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, scale, bias=None, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x [..., S, D]; positions [S] or [B, S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    if positions.ndim == 1:        # [S] -> [1,..,1,S,D/2]
+        while angles.ndim < x.ndim:
+            angles = jnp.expand_dims(angles, 0)
+    else:                          # [B,S] -> [B,1,..,1,S,D/2] (head axes)
+        while angles.ndim < x.ndim:
+            angles = jnp.expand_dims(angles, 1)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy(logits, labels, z_loss: float = 0.0):
+    """Mean token cross entropy; logits [..., V] fp32-safe, labels int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = (lse - ll).mean()
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse).mean()
+    return loss
+
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+}

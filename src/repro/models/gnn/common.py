@@ -1,0 +1,129 @@
+"""GNN substrate: graph batches + message passing on the sparse substrate.
+
+Message passing is the diffusive pattern (DESIGN.md §3): gather sender
+state, per-edge compute, segment-reduce at receivers.  ``jax.ops.segment_*``
+over an edge-index IS the system's scatter layer (JAX has no sparse-matrix
+message passing) — the Pallas segment kernel accelerates the sorted case on
+TPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..common import dense_init
+from ...dist.sharding import logical_constraint
+
+__all__ = ["GraphBatch", "mlp_init", "mlp_apply", "gather_scatter",
+           "edge_softmax_agg", "layernorm_simple"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    """Plain container; any field may be None.  Arrays:
+    nodes [N, F] | positions [N, 3] | species [N] | edges [E, Fe] |
+    senders/receivers [E] | node_mask [N] | edge_mask [E] |
+    graph_ids [N] (for batched small graphs) | labels (task-dependent)
+    """
+    senders: Any
+    receivers: Any
+    n_nodes: int
+    nodes: Any = None
+    positions: Any = None
+    species: Any = None
+    edges: Any = None
+    node_mask: Any = None
+    edge_mask: Any = None
+    graph_ids: Any = None
+    n_graphs: int = 1
+    labels: Any = None
+
+
+jax.tree_util.register_dataclass(
+    GraphBatch,
+    data_fields=["senders", "receivers", "nodes", "positions", "species",
+                 "edges", "node_mask", "edge_mask", "graph_ids", "labels"],
+    meta_fields=["n_nodes", "n_graphs"],
+)
+
+
+def mlp_init(key, dims, dtype=jnp.float32, final_bias=True):
+    ks = jax.random.split(key, len(dims) - 1)
+    layers = []
+    for i, k in enumerate(ks):
+        layers.append({
+            "w": dense_init(k, (dims[i], dims[i + 1]), 0, dtype=dtype),
+            "b": jnp.zeros((dims[i + 1],), dtype),
+        })
+    return layers
+
+
+def mlp_apply(layers, x, act=jax.nn.silu, final_act=False,
+              norm_final: bool = False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = act(x)
+    if norm_final:
+        x = layernorm_simple(x)
+    return x
+
+
+def layernorm_simple(x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def gather_scatter(values, senders, receivers, n_nodes, edge_fn=None,
+                   edge_mask=None, combine="sum"):
+    """The message-passing primitive: m_e = edge_fn(x[senders_e]);
+    out_i = combine_e->i m_e."""
+    msgs = values[senders]
+    if edge_fn is not None:
+        msgs = edge_fn(msgs)
+    if edge_mask is not None:
+        msgs = jnp.where(edge_mask[:, None], msgs, 0)
+        receivers = jnp.where(edge_mask, receivers, n_nodes)
+    msgs = logical_constraint(msgs, "edges", None)
+    if combine == "sum":
+        out = jax.ops.segment_sum(msgs, receivers, num_segments=n_nodes + 1)
+    elif combine == "mean":
+        out = jax.ops.segment_sum(msgs, receivers, num_segments=n_nodes + 1)
+        cnt = jax.ops.segment_sum(
+            jnp.ones_like(receivers, msgs.dtype), receivers,
+            num_segments=n_nodes + 1,
+        )
+        out = out / jnp.maximum(cnt, 1)[:, None]
+    elif combine == "max":
+        out = jax.ops.segment_max(msgs, receivers, num_segments=n_nodes + 1)
+    else:
+        raise ValueError(combine)
+    return out[:n_nodes]
+
+
+def edge_softmax_agg(logits, values, receivers, n_nodes, edge_mask=None):
+    """GAT-style: softmax(logits) within each receiver, weighted sum.
+
+    logits [E, H]; values [E, H, C]; returns [N, H, C]."""
+    if edge_mask is not None:
+        em = edge_mask.reshape(edge_mask.shape + (1,) * (logits.ndim - 1))
+        logits = jnp.where(em, logits, -jnp.inf)
+        receivers = jnp.where(edge_mask, receivers, n_nodes)
+    mx = jax.ops.segment_max(logits, receivers, num_segments=n_nodes + 1)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    ex = jnp.exp(logits - mx[receivers])
+    if edge_mask is not None:
+        em = edge_mask.reshape(edge_mask.shape + (1,) * (logits.ndim - 1))
+        ex = jnp.where(em, ex, 0.0)
+    den = jax.ops.segment_sum(ex, receivers, num_segments=n_nodes + 1)
+    w = ex / jnp.maximum(den[receivers], 1e-16)
+    out = jax.ops.segment_sum(
+        values * w[..., None], receivers, num_segments=n_nodes + 1
+    )
+    return out[:n_nodes]

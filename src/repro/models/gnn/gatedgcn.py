@@ -1,0 +1,101 @@
+"""GatedGCN (Bresson & Laurent; benchmarked in arXiv:2003.00982).
+
+Per layer (edge j -> i):
+    e'_ij = e_ij + ReLU(Norm(A h_i + B h_j + C e_ij))
+    eta_ij = sigmoid(e'_ij)
+    h'_i  = h_i + ReLU(Norm(U h_i + (sum_j eta_ij * V h_j) /
+                                   (sum_j eta_ij + eps)))
+
+Deviation noted in DESIGN.md: BatchNorm -> LayerNorm (graph-sharding safe;
+standard in later GatedGCN implementations).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..common import dense_init
+from .common import GraphBatch, layernorm_simple, mlp_init, mlp_apply
+
+__all__ = ["GatedGCNConfig", "init_params", "apply", "loss_fn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GatedGCNConfig:
+    name: str = "gatedgcn"
+    n_layers: int = 16
+    d_hidden: int = 70
+    d_in: int = 1433
+    d_edge_in: int = 1
+    n_classes: int = 16
+    dtype: object = jnp.float32
+
+
+def init_params(key, cfg: GatedGCNConfig):
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    d = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(ks[i], 5)
+        layers.append({
+            "A": dense_init(lk[0], (d, d), 0, dtype=cfg.dtype),
+            "B": dense_init(lk[1], (d, d), 0, dtype=cfg.dtype),
+            "C": dense_init(lk[2], (d, d), 0, dtype=cfg.dtype),
+            "U": dense_init(lk[3], (d, d), 0, dtype=cfg.dtype),
+            "V": dense_init(lk[4], (d, d), 0, dtype=cfg.dtype),
+        })
+    # stack for scan
+    layers = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+    return {
+        "node_enc": dense_init(ks[-3], (cfg.d_in, d), 0, dtype=cfg.dtype),
+        "edge_enc": dense_init(ks[-2], (cfg.d_edge_in, d), 0, dtype=cfg.dtype),
+        "head": mlp_init(ks[-1], (d, d, cfg.n_classes), dtype=cfg.dtype),
+        "layers": layers,
+    }
+
+
+def apply(params, batch: GraphBatch, cfg: GatedGCNConfig):
+    n = batch.n_nodes
+    snd, rcv = batch.senders, batch.receivers
+    h = batch.nodes.astype(cfg.dtype) @ params["node_enc"]
+    e_in = (
+        batch.edges
+        if batch.edges is not None
+        else jnp.ones((snd.shape[0], cfg.d_edge_in), cfg.dtype)
+    )
+    e = e_in.astype(cfg.dtype) @ params["edge_enc"]
+    emask = batch.edge_mask
+    rcv_safe = jnp.where(emask, rcv, n) if emask is not None else rcv
+
+    def body(carry, p):
+        h, e = carry
+        hi, hj = h[rcv], h[snd]
+        e_hat = hi @ p["A"] + hj @ p["B"] + e @ p["C"]
+        e = e + jax.nn.relu(layernorm_simple(e_hat))
+        eta = jax.nn.sigmoid(e)
+        vh = hj @ p["V"]
+        num = jnp.where(emask[:, None], eta * vh, 0) if emask is not None \
+            else eta * vh
+        den = jnp.where(emask[:, None], eta, 0) if emask is not None else eta
+        s_num = jax.ops.segment_sum(num, rcv_safe, num_segments=n + 1)[:n]
+        s_den = jax.ops.segment_sum(den, rcv_safe, num_segments=n + 1)[:n]
+        h_hat = h @ p["U"] + s_num / (s_den + 1e-6)
+        h = h + jax.nn.relu(layernorm_simple(h_hat))
+        return (h, e), None
+
+    (h, e), _ = jax.lax.scan(body, (h, e), params["layers"])
+    return mlp_apply(params["head"], h)
+
+
+def loss_fn(params, batch: GraphBatch, cfg: GatedGCNConfig):
+    logits = apply(params, batch, cfg)
+    labels = batch.labels
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    if batch.node_mask is not None:
+        nll = jnp.where(batch.node_mask, nll, 0)
+        return nll.sum() / jnp.maximum(batch.node_mask.sum(), 1)
+    return nll.mean()

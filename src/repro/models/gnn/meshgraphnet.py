@@ -1,0 +1,93 @@
+"""MeshGraphNet (arXiv:2010.03409): encode-process-decode with residual
+edge/node MLP message passing (15 steps, d=128, 2-layer MLPs + LayerNorm).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import GraphBatch, mlp_init, mlp_apply
+
+__all__ = ["MeshGraphNetConfig", "init_params", "apply", "loss_fn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshGraphNetConfig:
+    name: str = "meshgraphnet"
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    d_node_in: int = 8
+    d_edge_in: int = 4       # e.g. relative pos + norm
+    d_out: int = 3           # e.g. predicted acceleration
+    dtype: object = jnp.float32
+
+
+def _mlp_dims(cfg, d_in, d_out=None):
+    return (d_in,) + (cfg.d_hidden,) * cfg.mlp_layers + (
+        d_out or cfg.d_hidden,
+    )
+
+
+def init_params(key, cfg: MeshGraphNetConfig):
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    d = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(ks[i], 2)
+        layers.append({
+            "edge_mlp": mlp_init(lk[0], _mlp_dims(cfg, 3 * d), dtype=cfg.dtype),
+            "node_mlp": mlp_init(lk[1], _mlp_dims(cfg, 2 * d), dtype=cfg.dtype),
+        })
+    layers = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+    return {
+        "node_enc": mlp_init(ks[-3], _mlp_dims(cfg, cfg.d_node_in),
+                             dtype=cfg.dtype),
+        "edge_enc": mlp_init(ks[-2], _mlp_dims(cfg, cfg.d_edge_in),
+                             dtype=cfg.dtype),
+        "decoder": mlp_init(ks[-1], _mlp_dims(cfg, d, cfg.d_out),
+                            dtype=cfg.dtype),
+        "layers": layers,
+    }
+
+
+def apply(params, batch: GraphBatch, cfg: MeshGraphNetConfig):
+    n = batch.n_nodes
+    snd, rcv = batch.senders, batch.receivers
+    emask = batch.edge_mask
+    rcv_safe = jnp.where(emask, rcv, n) if emask is not None else rcv
+
+    h = mlp_apply(params["node_enc"], batch.nodes.astype(cfg.dtype),
+                  norm_final=True)
+    e_in = (
+        batch.edges
+        if batch.edges is not None
+        else jnp.ones((snd.shape[0], cfg.d_edge_in), cfg.dtype)
+    )
+    e = mlp_apply(params["edge_enc"], e_in.astype(cfg.dtype), norm_final=True)
+
+    def body(carry, p):
+        h, e = carry
+        msg_in = jnp.concatenate([e, h[snd], h[rcv]], axis=-1)
+        e = e + mlp_apply(p["edge_mlp"], msg_in, norm_final=True)
+        agg_in = jnp.where(emask[:, None], e, 0) if emask is not None else e
+        agg = jax.ops.segment_sum(agg_in, rcv_safe, num_segments=n + 1)[:n]
+        h = h + mlp_apply(
+            p["node_mlp"], jnp.concatenate([h, agg], axis=-1), norm_final=True
+        )
+        return (h, e), None
+
+    (h, e), _ = jax.lax.scan(body, (h, e), params["layers"])
+    return mlp_apply(params["decoder"], h)
+
+
+def loss_fn(params, batch: GraphBatch, cfg: MeshGraphNetConfig):
+    pred = apply(params, batch, cfg)
+    err = jnp.square(pred - batch.labels.astype(pred.dtype)).sum(-1)
+    if batch.node_mask is not None:
+        err = jnp.where(batch.node_mask, err, 0)
+        return err.sum() / jnp.maximum(batch.node_mask.sum(), 1)
+    return err.mean()

@@ -1,0 +1,136 @@
+"""Mixture-of-Experts layer on the diffusive message substrate.
+
+Token dispatch here is literally the paper's operon pattern (DESIGN.md §3):
+a token is a message whose destination is an expert; the router predicate
+decides whether work is generated; tokens are *coalesced per destination*
+(sort by expert id) and the grouped GEMM (``jax.lax.ragged_dot`` —
+MegaBlocks-style, dropless) does per-destination compute.
+
+Distribution: the layer is wrapped in shard_map by the dist layer — tokens
+stay resident on their data shard (sort is local), expert weights are
+tensor-sharded on d_ff over the model axis, and a single psum after the
+down-projection completes the layer.  No [T, E, C] one-hot dispatch tensor
+is ever materialized (that costs more MXU FLOPs than the experts
+themselves — see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import ACTIVATIONS, dense_init
+
+__all__ = ["MoEConfig", "init_moe", "moe_ffn", "router_aux_loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int
+    router_z_coef: float = 1e-3
+    load_balance_coef: float = 1e-2
+    act: str = "silu"
+    capacity_factor: float = 1.25
+    impl: str = "sliced"     # 'sliced' (capacity grouped-GEMM) | 'ragged'
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    e, f = cfg.n_experts, cfg.d_ff
+    return {
+        "router": dense_init(ks[0], (d_model, e), 0, dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d_model, f), 1, dtype=dtype),
+        "w_up": dense_init(ks[2], (e, d_model, f), 1, dtype=dtype),
+        "w_down": dense_init(ks[3], (e, f, d_model), 1, dtype=dtype),
+    }
+
+
+def moe_ffn(params, x, cfg: MoEConfig):
+    """x [T, d] -> (y [T, d] partial-sum over d_ff shards, aux dict).
+
+    Caller psums y over the tensor axis when w_* are d_ff-sharded.
+    """
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    act = ACTIVATIONS[cfg.act]
+
+    logits = (x.astype(jnp.float32) @ params["router"])          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)              # [T, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9
+    )
+
+    # --- operon coalescing: sort the T*k (token, expert) messages by dest
+    flat_expert = expert_idx.reshape(-1)                         # [T*k]
+    flat_token = jnp.repeat(jnp.arange(t), k)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert)
+    tok_s = flat_token[order]
+    gate_s = flat_gate[order]
+    group_sizes = jnp.bincount(flat_expert, length=e).astype(jnp.int32)
+    xs = x[tok_s]                                                # [T*k, d]
+
+    if cfg.impl == "ragged":
+        # MegaBlocks-style grouped GEMM. NOTE: XLA currently lowers
+        # ragged_dot densely (E x M x F) off-TPU — see EXPERIMENTS.md §Perf.
+        h = act(jax.lax.ragged_dot(xs, params["w_gate"], group_sizes))
+        h = h * jax.lax.ragged_dot(xs, params["w_up"], group_sizes)
+        y = jax.lax.ragged_dot(
+            h.astype(x.dtype), params["w_down"], group_sizes
+        )                                                        # [T*k, d]
+        y = y * gate_s[:, None].astype(y.dtype)
+        out = jax.ops.segment_sum(y, tok_s, num_segments=t)
+    else:
+        # capacity-sliced grouped GEMM: per expert, one dense [C, d] x
+        # [d, f] MXU matmul on a dynamic slice of the sorted token stream.
+        # FLOPs = capacity_factor x ideal; no [T, E, C] one-hot tensor.
+        cap = int(cfg.capacity_factor * t * k / e)
+        cap = max(128, -(-cap // 128) * 128)                     # MXU align
+        offsets = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(group_sizes)[:-1]]
+        )
+        xs_pad = jnp.pad(xs, ((0, cap), (0, 0)))
+        gate_pad = jnp.pad(gate_s, (0, cap)).astype(x.dtype)
+        tok_pad = jnp.pad(tok_s, (0, cap), constant_values=t)
+        d = x.shape[-1]
+        rows = jnp.arange(cap)
+        ys, row_tok = [], []
+        for ei in range(e):
+            start = offsets[ei]
+            xe = jax.lax.dynamic_slice(xs_pad, (start, 0), (cap, d))
+            ge = jax.lax.dynamic_slice(gate_pad, (start,), (cap,))
+            te = jax.lax.dynamic_slice(tok_pad, (start,), (cap,))
+            keep = rows < group_sizes[ei]
+            he = act(xe @ params["w_gate"][ei]) * (xe @ params["w_up"][ei])
+            ye = (he @ params["w_down"][ei]) * (ge * keep)[:, None]
+            ys.append(ye.astype(x.dtype))
+            row_tok.append(jnp.where(keep, te, t))   # t => dropped row
+        # one scatter for all experts — no read-modify-write chain, so the
+        # transpose is a single gather (vs E chained add_any cotangents)
+        stack = jnp.concatenate(ys, axis=0)               # [E*cap, d]
+        idx = jnp.concatenate(row_tok, axis=0)
+        out = jax.ops.segment_sum(stack, idx, num_segments=t + 1)[:t]
+
+    aux = {
+        "router_probs_mean": probs.mean(0),                      # [E]
+        "router_frac": jnp.zeros((e,), jnp.float32).at[flat_expert].add(
+            1.0 / (t * k)
+        ),
+        "router_z": jnp.square(
+            jax.scipy.special.logsumexp(logits, axis=-1)
+        ).mean(),
+    }
+    return out.astype(x.dtype), aux
+
+
+def router_aux_loss(aux, cfg: MoEConfig):
+    """GShard load-balance loss + router z-loss from accumulated stats."""
+    lb = cfg.n_experts * jnp.sum(
+        aux["router_probs_mean"] * aux["router_frac"]
+    )
+    return cfg.load_balance_coef * lb + cfg.router_z_coef * aux["router_z"]

@@ -1,0 +1,144 @@
+"""Two-tower retrieval (Yi et al., RecSys'19): sampled-softmax retrieval.
+
+The embedding LOOKUP is the hot path and JAX has no native EmbeddingBag —
+it is built here from ``jnp.take`` + masked reduction (fixed-size bags) /
+``jax.ops.segment_sum`` (ragged bags), the same substrate op as graph
+aggregation (DESIGN.md §3).  Tables are vocab-sharded over the model axis at
+scale (dist layer); lookups are the operons.
+
+Shapes served: train_batch (in-batch sampled softmax + logQ correction),
+serve_p99 / serve_bulk (tower forward + dot), retrieval_cand (1 query vs
+1M candidate matrix -> top-k, a single MXU matmul, not a loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import logical_constraint
+from .common import dense_init
+from .gnn.common import mlp_init, mlp_apply
+
+__all__ = ["TwoTowerConfig", "init_params", "embedding_bag",
+           "embedding_bag_ragged", "user_tower", "item_tower", "loss_fn",
+           "score", "retrieval_topk"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    embed_dim: int = 256
+    tower_mlp: tuple = (1024, 512, 256)
+    n_user_fields: int = 8       # multi-hot fields per user
+    bag_len: int = 16            # padded multi-hot length per field
+    user_vocab: int = 2_000_000
+    item_vocab: int = 2_000_000
+    n_dense: int = 13
+    temperature: float = 0.05
+    dtype: object = jnp.float32
+
+
+def init_params(key, cfg: TwoTowerConfig):
+    ks = jax.random.split(key, 5)
+    d = cfg.embed_dim
+    dims_u = (cfg.n_user_fields * d + cfg.n_dense,) + cfg.tower_mlp
+    dims_i = (d + cfg.n_dense,) + cfg.tower_mlp
+    return {
+        "user_table": (jax.random.normal(ks[0], (cfg.user_vocab, d))
+                       * 0.01).astype(cfg.dtype),
+        "item_table": (jax.random.normal(ks[1], (cfg.item_vocab, d))
+                       * 0.01).astype(cfg.dtype),
+        "user_mlp": mlp_init(ks[2], dims_u, dtype=cfg.dtype),
+        "item_mlp": mlp_init(ks[3], dims_i, dtype=cfg.dtype),
+    }
+
+
+def embedding_bag(table, ids, combine: str = "sum"):
+    """Fixed-size bags: ids [..., L] int32, -1 = padding -> [..., D].
+
+    jnp.take + masked reduce — the JAX-native EmbeddingBag."""
+    mask = ids >= 0
+    safe = jnp.where(mask, ids, 0)
+    rows = jnp.take(table, safe, axis=0)             # [..., L, D]
+    rows = jnp.where(mask[..., None], rows, 0)
+    if combine == "sum":
+        return rows.sum(-2)
+    if combine == "mean":
+        return rows.sum(-2) / jnp.maximum(
+            mask.sum(-1, keepdims=True), 1
+        ).astype(rows.dtype)
+    if combine == "max":
+        rows = jnp.where(mask[..., None], rows, -jnp.inf)
+        out = rows.max(-2)
+        return jnp.where(jnp.isfinite(out), out, 0)
+    raise ValueError(combine)
+
+
+def embedding_bag_ragged(table, flat_ids, bag_ids, n_bags: int,
+                         combine: str = "sum"):
+    """Ragged bags: gather + segment reduce (the graph-aggregation twin)."""
+    rows = jnp.take(table, jnp.maximum(flat_ids, 0), axis=0)
+    rows = jnp.where((flat_ids >= 0)[:, None], rows, 0)
+    seg = jnp.where(flat_ids >= 0, bag_ids, n_bags)
+    out = jax.ops.segment_sum(rows, seg, num_segments=n_bags + 1)[:n_bags]
+    if combine == "mean":
+        cnt = jax.ops.segment_sum(
+            (flat_ids >= 0).astype(rows.dtype), seg, num_segments=n_bags + 1
+        )[:n_bags]
+        out = out / jnp.maximum(cnt, 1)[:, None]
+    return out
+
+
+def user_tower(params, user_ids, user_dense, cfg: TwoTowerConfig):
+    """user_ids [B, F, L] multi-hot; user_dense [B, n_dense]."""
+    b = user_ids.shape[0]
+    bags = embedding_bag(params["user_table"], user_ids)     # [B, F, D]
+    bags = logical_constraint(bags, "batch", None, None)
+    x = jnp.concatenate(
+        [bags.reshape(b, -1), user_dense.astype(bags.dtype)], axis=-1
+    )
+    u = mlp_apply(params["user_mlp"], x)
+    return u / jnp.maximum(jnp.linalg.norm(u, axis=-1, keepdims=True), 1e-6)
+
+
+def item_tower(params, item_ids, item_dense, cfg: TwoTowerConfig):
+    """item_ids [B] single-hot; item_dense [B, n_dense]."""
+    emb = jnp.take(params["item_table"], item_ids, axis=0)
+    x = jnp.concatenate([emb, item_dense.astype(emb.dtype)], axis=-1)
+    v = mlp_apply(params["item_mlp"], x)
+    return v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-6)
+
+
+def loss_fn(params, batch, cfg: TwoTowerConfig):
+    """In-batch sampled softmax with logQ correction (Yi et al. '19).
+
+    batch: dict(user_ids, user_dense, item_ids, item_dense, item_logq [B]).
+    """
+    u = user_tower(params, batch["user_ids"], batch["user_dense"], cfg)
+    v = item_tower(params, batch["item_ids"], batch["item_dense"], cfg)
+    logits = (u @ v.T).astype(jnp.float32) / cfg.temperature
+    logits = logits - batch["item_logq"][None, :]      # logQ correction
+    logits = logical_constraint(logits, "batch", None)
+    b = logits.shape[0]
+    labels = jnp.arange(b)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], -1).mean()
+
+
+def score(params, batch, cfg: TwoTowerConfig):
+    """Online/bulk scoring: returns the dot score per (user, item) row."""
+    u = user_tower(params, batch["user_ids"], batch["user_dense"], cfg)
+    v = item_tower(params, batch["item_ids"], batch["item_dense"], cfg)
+    return (u * v).sum(-1)
+
+
+def retrieval_topk(params, batch, cfg: TwoTowerConfig, k: int = 100):
+    """1 query vs n_candidates: single matmul + top-k (no loop).
+
+    batch: dict(user_ids [1,F,L], user_dense [1,n], cand_emb [Nc, D])."""
+    u = user_tower(params, batch["user_ids"], batch["user_dense"], cfg)
+    scores = (batch["cand_emb"] @ u[0]).astype(jnp.float32)   # [Nc]
+    return jax.lax.top_k(scores, k)

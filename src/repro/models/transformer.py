@@ -1,0 +1,397 @@
+"""Decoder-only LM family: GQA + RoPE + {RMS,Layer}Norm + {dense,MoE} FFN.
+
+One configurable definition covers all five assigned LM architectures
+(command-r-plus-104b, tinyllama-1.1b, qwen2-7b, grok-1-314b,
+phi3.5-moe-42b).  Layers are *scanned* (params stacked on a leading L axis)
+so the HLO stays O(1) in depth — essential for the 64-layer 512-device
+dry-run compiles — with jax.checkpoint (remat) around the layer body for
+training-memory feasibility.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..dist.sharding import logical_constraint, moe_apply
+from ..kernels.flash_attention.ops import attention, decode_attention
+from .common import (
+    ACTIVATIONS,
+    apply_rope,
+    cross_entropy,
+    dense_init,
+    embed_init,
+    layernorm,
+    rmsnorm,
+)
+from .moe import MoEConfig, init_moe, moe_ffn, router_aux_loss
+
+__all__ = ["TransformerConfig", "init_params", "forward", "loss_fn",
+           "prefill", "decode_step", "init_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_ff: int = 1024
+    vocab: int = 1024
+    head_dim: int | None = None
+    qkv_bias: bool = False
+    norm: str = "rmsnorm"            # "rmsnorm" | "layernorm"
+    parallel_block: bool = False     # command-r style attn ∥ ffn
+    act: str = "silu"
+    rope_theta: float = 10_000.0
+    attn_softcap: float = 0.0        # grok-1 logit capping
+    logit_softcap: float = 0.0
+    moe: MoEConfig | None = None
+    tie_embeddings: bool = True
+    emb_scale: float = 1.0
+    logit_scale: float = 1.0
+    dtype: Any = jnp.float32         # params/activations dtype
+    remat: bool = True
+    # remat policy: None = full recompute; "dots" = save matmul outputs
+    # (less backward recompute, more live memory)
+    remat_policy: str | None = None
+    # KV cache quantization: decode is KV-bandwidth-bound, so int8 halves
+    # the dominant roofline term vs bf16 (per-position-per-head scales)
+    kv_quant: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, v, l = self.d_model, self.d_ff, self.vocab, self.n_layers
+        h, hkv, hd = self.n_heads, self.n_kv_heads, self.hd
+        attn = d * h * hd + 2 * d * hkv * hd + h * hd * d
+        if self.moe is not None:
+            ffn = d * self.moe.n_experts + 3 * self.moe.n_experts * d * self.moe.d_ff
+        else:
+            ffn = 3 * d * f
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return l * (attn + ffn) + emb
+
+    def active_param_count(self) -> int:
+        """6·N_active·D convention for MoE rooflines."""
+        if self.moe is None:
+            return self.param_count()
+        d, l = self.d_model, self.n_layers
+        h, hkv, hd = self.n_heads, self.n_kv_heads, self.hd
+        attn = d * h * hd + 2 * d * hkv * hd + h * hd * d
+        ffn = d * self.moe.n_experts + 3 * self.moe.top_k * d * self.moe.d_ff
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return l * (attn + ffn) + emb
+
+
+def _norm(cfg, x, p):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p.get("bias"))
+
+
+def _init_layer(key, cfg: TransformerConfig):
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 8)
+    dt = cfg.dtype
+    attn = {
+        "wq": dense_init(ks[0], (d, h, hd), 0, dtype=dt),
+        "wk": dense_init(ks[1], (d, hkv, hd), 0, dtype=dt),
+        "wv": dense_init(ks[2], (d, hkv, hd), 0, dtype=dt),
+        "wo": dense_init(ks[3], (h, hd, d), (0, 1), dtype=dt),
+    }
+    if cfg.qkv_bias:
+        attn["bq"] = jnp.zeros((h, hd), dt)
+        attn["bk"] = jnp.zeros((hkv, hd), dt)
+        attn["bv"] = jnp.zeros((hkv, hd), dt)
+    norm_p = {"scale": jnp.zeros((d,), dt)}
+    if cfg.norm == "layernorm":
+        norm_p["bias"] = jnp.zeros((d,), dt)
+    layer = {"attn": attn, "ln1": jax.tree_util.tree_map(jnp.copy, norm_p)}
+    if not cfg.parallel_block:
+        layer["ln2"] = jax.tree_util.tree_map(jnp.copy, norm_p)
+    if cfg.moe is not None:
+        layer["moe"] = init_moe(ks[4], d, cfg.moe, dtype=dt)
+    else:
+        layer["mlp"] = {
+            "w_gate": dense_init(ks[5], (d, cfg.d_ff), 0, dtype=dt),
+            "w_up": dense_init(ks[6], (d, cfg.d_ff), 0, dtype=dt),
+            "w_down": dense_init(ks[7], (cfg.d_ff, d), 0, dtype=dt),
+        }
+    return layer
+
+
+def init_params(key, cfg: TransformerConfig):
+    k_emb, k_layers, k_out = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    params = {
+        "embed": embed_init(k_emb, cfg.vocab, cfg.d_model, dtype=cfg.dtype),
+        "layers": layers,
+        "final_norm": {"scale": jnp.zeros((cfg.d_model,), cfg.dtype)},
+    }
+    if cfg.norm == "layernorm":
+        params["final_norm"]["bias"] = jnp.zeros((cfg.d_model,), cfg.dtype)
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(
+            k_out, (cfg.d_model, cfg.vocab), 0, dtype=cfg.dtype
+        )
+    return params
+
+
+def _ffn_dense(cfg, p, x):
+    act = ACTIVATIONS[cfg.act]
+    h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = logical_constraint(h, "batch", "seq", "ffn")
+    return h @ p["w_down"]
+
+
+def _attention_block(cfg, p, h, positions, kv_cache=None, cache_len=None):
+    """h [B,S,d] (pre-normed) -> (attn_out [B,S,d], new (k,v))."""
+    q = jnp.einsum("bsd,dhk->bhsk", h, p["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", h, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"][None, :, None, :]
+        k = k + p["bk"][None, :, None, :]
+        v = v + p["bv"][None, :, None, :]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = logical_constraint(q, "batch", "heads", "seq", None)
+    k = logical_constraint(k, "batch", "kv_heads", "seq", None)
+    v = logical_constraint(v, "batch", "kv_heads", "seq", None)
+
+    if kv_cache is None:
+        o = attention(q, k, v, causal=True, softcap=cfg.attn_softcap)
+        new_kv = (k, v)
+    elif len(kv_cache) == 4:
+        # int8-quantized KV cache (per-position-per-head scales)
+        ck, cv, cks, cvs = kv_cache
+        qk, sk = kv_quantize(k)
+        qv, sv = kv_quantize(v)
+        at = (0, 0, cache_len, 0)
+        ck = lax.dynamic_update_slice(ck, qk, at)
+        cv = lax.dynamic_update_slice(cv, qv, at)
+        cks = lax.dynamic_update_slice(cks, sk, at)
+        cvs = lax.dynamic_update_slice(cvs, sv, at)
+        kd = kv_dequantize(ck, cks, h.dtype)
+        vd = kv_dequantize(cv, cvs, h.dtype)
+        o = decode_attention(q, kd, vd, cache_len + q.shape[2],
+                             softcap=cfg.attn_softcap)
+        new_kv = (ck, cv, cks, cvs)
+    else:
+        ck, cv = kv_cache
+        ck = lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                      (0, 0, cache_len, 0))
+        cv = lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                      (0, 0, cache_len, 0))
+        o = decode_attention(q, ck, cv, cache_len + q.shape[2],
+                             softcap=cfg.attn_softcap)
+        new_kv = (ck, cv)
+    out = jnp.einsum("bhsk,hkd->bsd", o.astype(h.dtype), p["wo"])
+    return logical_constraint(out, "batch", "seq", "embed"), new_kv
+
+
+def _layer_apply(cfg, p, x, positions, kv_cache=None, cache_len=None):
+    h = _norm(cfg, x, p["ln1"])
+    attn_out, new_kv = _attention_block(cfg, p["attn"], h, positions,
+                                        kv_cache, cache_len)
+    if cfg.parallel_block:
+        ff_in = h
+    else:
+        x = x + attn_out
+        ff_in = _norm(cfg, x, p["ln2"])
+    b, s, d = ff_in.shape
+    if cfg.moe is not None:
+        y2d, aux = moe_apply(
+            partial(moe_ffn, cfg=cfg.moe), p["moe"], ff_in.reshape(b * s, d)
+        )
+        ff_out = y2d.reshape(b, s, d)
+    else:
+        ff_out = _ffn_dense(cfg, p["mlp"], ff_in)
+        aux = None
+    if cfg.parallel_block:
+        x = x + attn_out + ff_out
+    else:
+        x = x + ff_out
+    x = logical_constraint(x, "batch", "seq", "embed")
+    return x, new_kv, aux
+
+
+def _zero_aux(cfg):
+    if cfg.moe is None:
+        return None
+    e = cfg.moe.n_experts
+    return {
+        "router_probs_mean": jnp.zeros((e,), jnp.float32),
+        "router_frac": jnp.zeros((e,), jnp.float32),
+        "router_z": jnp.zeros((), jnp.float32),
+    }
+
+
+def forward(params, tokens, cfg: TransformerConfig):
+    """Training/prefill forward. tokens [B,S] -> logits [B,S,V], aux."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype) * cfg.emb_scale
+    x = logical_constraint(x, "batch", "seq", "embed")
+    positions = jnp.arange(s)
+
+    def body(x, p_l):
+        x, _, aux = _layer_apply(cfg, p_l, x, positions)
+        return x, aux
+
+    if cfg.remat:
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if cfg.remat_policy == "dots" else None
+        )
+        body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+    x, auxs = lax.scan(body, x, params["layers"])
+    x = _norm(cfg, x, params["final_norm"])
+    unembed = (
+        params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    ).astype(cfg.dtype)
+    logits = (x @ unembed) * cfg.logit_scale
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    logits = logical_constraint(logits, "batch", "seq", "vocab")
+    aux = (
+        jax.tree_util.tree_map(lambda a: a.mean(0), auxs)
+        if cfg.moe is not None
+        else None
+    )
+    return logits, aux
+
+
+def loss_fn(params, tokens, labels, cfg: TransformerConfig):
+    logits, aux = forward(params, tokens, cfg)
+    loss = cross_entropy(logits, labels, z_loss=1e-4)
+    if aux is not None:
+        loss = loss + router_aux_loss(aux, cfg.moe)
+    return loss
+
+
+def kv_quantize(x):
+    """[..., D] -> (int8 values, per-row scale [..., 1] bf16)."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    s = jnp.maximum(s, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127
+                 ).astype(jnp.int8)
+    return q, s.astype(jnp.bfloat16)
+
+
+def kv_dequantize(q, s, dtype):
+    return (q.astype(jnp.float32) * s.astype(jnp.float32)).astype(dtype)
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=None):
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.hd)
+    if cfg.kv_quant:
+        sshape = shape[:-1] + (1,)
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(sshape, jnp.bfloat16),
+            "v_scale": jnp.zeros(sshape, jnp.bfloat16),
+        }
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def prefill(params, tokens, cfg: TransformerConfig, max_len: int):
+    """Prefill pass: returns (last-position logits, filled KV cache)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype) * cfg.emb_scale
+    x = logical_constraint(x, "batch", "seq", "embed")
+    positions = jnp.arange(s)
+
+    def body(x, p_l):
+        h = _norm(cfg, x, p_l["ln1"])
+        attn_out, (k, v) = _attention_block(cfg, p_l["attn"], h, positions)
+        if cfg.parallel_block:
+            ff_in, base = h, x
+        else:
+            x = x + attn_out
+            ff_in, base = _norm(cfg, x, p_l["ln2"]), x
+        bb, ss, d = ff_in.shape
+        if cfg.moe is not None:
+            y2d, _ = moe_apply(
+                partial(moe_ffn, cfg=cfg.moe), p_l["moe"],
+                ff_in.reshape(bb * ss, d),
+            )
+            ff_out = y2d.reshape(bb, ss, d)
+        else:
+            ff_out = _ffn_dense(cfg, p_l["mlp"], ff_in)
+        x = base + attn_out + ff_out if cfg.parallel_block else x + ff_out
+        pad = max_len - s
+        kc = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return x, (kc, vc)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, (kcs, vcs) = lax.scan(body, x, params["layers"])
+    x = _norm(cfg, x[:, -1:, :], params["final_norm"])
+    unembed = (
+        params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    ).astype(cfg.dtype)
+    logits = (x @ unembed) * cfg.logit_scale
+    return logits, {"k": kcs, "v": vcs}
+
+
+def decode_step(params, token, cache, cache_len, cfg: TransformerConfig):
+    """One-token decode. token [B,1]; cache leaves [L,B,Hkv,M,hd]."""
+    x = params["embed"][token].astype(cfg.dtype) * cfg.emb_scale
+    positions = jnp.full((token.shape[0], 1), cache_len, jnp.int32)
+
+    if cfg.kv_quant:
+        def body(x, inputs):
+            p_l, ck, cv, cks, cvs = inputs
+            x, nkv, _ = _layer_apply(
+                cfg, p_l, x, positions, kv_cache=(ck, cv, cks, cvs),
+                cache_len=cache_len,
+            )
+            return x, nkv
+
+        x, (nks, nvs, nkss, nvss) = lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"],
+                      cache["k_scale"], cache["v_scale"]),
+        )
+        new_cache = {"k": nks, "v": nvs, "k_scale": nkss, "v_scale": nvss}
+        x = _norm(cfg, x, params["final_norm"])
+        unembed = (
+            params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        ).astype(cfg.dtype)
+        logits = (x @ unembed) * cfg.logit_scale
+        if cfg.logit_softcap:
+            logits = cfg.logit_softcap * jnp.tanh(
+                logits / cfg.logit_softcap
+            )
+        return logits, new_cache
+
+    def body(x, inputs):
+        p_l, ck, cv = inputs
+        x, (nk, nv), _ = _layer_apply(
+            cfg, p_l, x, positions, kv_cache=(ck, cv), cache_len=cache_len
+        )
+        return x, (nk, nv)
+
+    x, (nks, nvs) = lax.scan(body, x, (params["layers"], cache["k"],
+                                       cache["v"]))
+    x = _norm(cfg, x, params["final_norm"])
+    unembed = (
+        params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    ).astype(cfg.dtype)
+    logits = (x @ unembed) * cfg.logit_scale
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits, {"k": nks, "v": nvs}

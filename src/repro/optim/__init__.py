@@ -1,0 +1,1 @@
+from .optimizers import *  # noqa: F401,F403

@@ -1,0 +1,199 @@
+"""Optimizers (optax-free): AdamW, Adafactor, SGD-momentum + schedules,
+global-norm clipping, gradient accumulation, and int8 gradient compression
+with error feedback (the distributed-optimization trick used by the
+compressed-all-reduce data-parallel plan).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Optimizer", "adamw", "adafactor", "sgd", "cosine_schedule",
+    "linear_warmup", "clip_by_global_norm", "global_norm",
+    "compress_int8", "decompress_int8", "GradAccumulator",
+]
+
+
+class Optimizer(NamedTuple):
+    init: Callable    # params -> state
+    update: Callable  # (grads, state, params, step) -> (updates, state)
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    # keep each leaf's dtype (an f32 scale would silently double grad memory)
+    return jax.tree_util.tree_map(
+        lambda x: (x * scale.astype(x.dtype)), tree
+    ), g
+
+
+def cosine_schedule(base_lr: float, total_steps: int, warmup: int = 100,
+                    final_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, step / jnp.maximum(warmup, 1))
+        prog = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * warm * cos
+    return lr
+
+
+def linear_warmup(base_lr: float, warmup: int = 100):
+    return lambda step: base_lr * jnp.minimum(
+        1.0, jnp.asarray(step, jnp.float32) / max(warmup, 1)
+    )
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0):
+    """lr may be a float or a schedule fn(step)."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree_util.tree_map(zeros, params),
+            "nu": jax.tree_util.tree_map(zeros, params),
+        }
+
+    def update(grads, state, params, step):
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state["mu"], grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        mu_hat = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t), mu)
+        nu_hat = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t), nu)
+
+        def upd(p, m, v):
+            u = m / (jnp.sqrt(v) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(upd, params, mu_hat, nu_hat)
+        return updates, {"mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr=1e-2, decay=0.8, eps=1e-30, clip_threshold=1.0):
+    """Factored second-moment optimizer (Shazeer & Stern) — O(n+m) state for
+    [n, m] matrices; the memory-frugal choice for 100B-param training."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        def st(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree_util.tree_map(st, params,
+                                      is_leaf=lambda x: hasattr(x, "shape"))
+
+    def update(grads, state, params, step):
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(p, g, s):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+                denom = (
+                    vr[..., None] * vc[..., None, :]
+                    / jnp.maximum(vr.mean(-1)[..., None, None], eps)
+                )
+                u = gf * jax.lax.rsqrt(denom + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (-lr_t * u).astype(p.dtype), new_s
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state)
+        out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        updates = tdef.unflatten([o[0] for o in out])
+        new_state = tdef.unflatten([o[1] for o in out])
+        return updates, new_state
+
+    return Optimizer(init, update)
+
+
+def sgd(lr=1e-2, momentum=0.9, nesterov=False):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        mom = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state, grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), mom, grads)
+        else:
+            upd = mom
+        updates = jax.tree_util.tree_map(
+            lambda p, u: (-lr_t * u).astype(p.dtype), params, upd)
+        return updates, mom
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression with error feedback
+# ---------------------------------------------------------------------------
+
+def compress_int8(g, err):
+    """Quantize g+err to int8 with per-tensor scale; returns (q, scale,
+    new_err).  Used around the data-parallel all-reduce: 4x less ICI bytes,
+    error feedback keeps the optimizer unbiased over time."""
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_err = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def decompress_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+@dataclasses.dataclass
+class GradAccumulator:
+    """Micro-batch gradient accumulation driver (host-side loop)."""
+    n_micro: int
+
+    def init(self, params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def add(self, acc, grads):
+        return jax.tree_util.tree_map(
+            lambda a, g: a + g.astype(jnp.float32) / self.n_micro, acc, grads)

@@ -1,0 +1,144 @@
+"""Fault tolerance: failure detection, straggler mitigation, preemption.
+
+Designed for the 1000+-node regime where *something is always broken*:
+
+* :class:`HeartbeatMonitor` — workers post heartbeats; a detector thread
+  flags nodes silent for > timeout.  At JAX level a failed host manifests
+  as a collective timeout; the driver's response is restore-on-survivors
+  (see ElasticScaler).
+* :class:`StragglerMonitor` — sliding-window step-time stats; steps slower
+  than ``factor`` x the rolling median mark the epoch as straggling and fire
+  a mitigation callback (the trainer's default: log + after ``patience``
+  consecutive stragglers, request a re-shard without the slow host).
+* :class:`PreemptionGuard` — SIGTERM/SIGINT set a flag the train loop polls;
+  the loop checkpoints and exits cleanly (spot/preemptible-safe).
+* :class:`ElasticScaler` — given the surviving device list, rebuilds the
+  largest valid production mesh and re-lays-out a checkpoint onto it.
+"""
+
+from __future__ import annotations
+
+import collections
+import signal
+import statistics
+import threading
+import time
+
+import jax
+
+__all__ = ["HeartbeatMonitor", "StragglerMonitor", "PreemptionGuard",
+           "ElasticScaler", "largest_mesh_shape"]
+
+
+class HeartbeatMonitor:
+    def __init__(self, timeout_s: float = 60.0):
+        self.timeout_s = timeout_s
+        self._beats: dict[str, float] = {}
+        self._lock = threading.Lock()
+
+    def beat(self, node_id: str, t: float | None = None):
+        with self._lock:
+            self._beats[node_id] = time.monotonic() if t is None else t
+
+    def dead_nodes(self, now: float | None = None):
+        now = time.monotonic() if now is None else now
+        with self._lock:
+            return sorted(
+                n for n, t in self._beats.items()
+                if now - t > self.timeout_s
+            )
+
+    def alive_nodes(self, now: float | None = None):
+        now = time.monotonic() if now is None else now
+        with self._lock:
+            return sorted(
+                n for n, t in self._beats.items()
+                if now - t <= self.timeout_s
+            )
+
+
+class StragglerMonitor:
+    def __init__(self, window: int = 50, factor: float = 2.0,
+                 patience: int = 5, on_straggle=None):
+        self.times = collections.deque(maxlen=window)
+        self.factor = factor
+        self.patience = patience
+        self.on_straggle = on_straggle
+        self.consecutive = 0
+        self.flagged_steps: list[int] = []
+
+    def record(self, step: int, seconds: float) -> bool:
+        """Returns True if this step is a straggler."""
+        is_straggler = False
+        if len(self.times) >= 8:
+            med = statistics.median(self.times)
+            if seconds > self.factor * med:
+                is_straggler = True
+                self.flagged_steps.append(step)
+                self.consecutive += 1
+                if (self.consecutive >= self.patience
+                        and self.on_straggle is not None):
+                    self.on_straggle(step, seconds, med)
+                    self.consecutive = 0
+            else:
+                self.consecutive = 0
+        self.times.append(seconds)
+        return is_straggler
+
+
+class PreemptionGuard:
+    """SIGTERM/SIGINT -> flag; install() is idempotent and test-friendly."""
+
+    def __init__(self):
+        self._flag = threading.Event()
+        self._installed = False
+
+    def install(self):
+        if self._installed:
+            return
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                signal.signal(sig, lambda *_: self._flag.set())
+            except ValueError:   # not main thread (tests)
+                pass
+        self._installed = True
+
+    def trigger(self):           # test hook / external orchestrator
+        self._flag.set()
+
+    @property
+    def should_stop(self) -> bool:
+        return self._flag.is_set()
+
+
+def largest_mesh_shape(n_devices: int, model_parallel: int = 16):
+    """Largest (data, model) mesh on the surviving devices; shrinks model
+    parallelism if necessary (elastic down-scaling policy)."""
+    mp = model_parallel
+    while mp > 1 and n_devices % mp != 0:
+        mp //= 2
+    return (max(1, n_devices // mp), mp)
+
+
+class ElasticScaler:
+    """Rebuild mesh + restore a checkpoint after membership change."""
+
+    def __init__(self, checkpoint_manager, axis_names=("data", "model")):
+        self.ckpt = checkpoint_manager
+        self.axis_names = axis_names
+
+    def rescale(self, target_tree, sharding_fn, devices=None, step=None):
+        """devices: surviving jax devices (default: all visible).
+        sharding_fn(mesh, tree_struct) -> shardings pytree."""
+        devices = devices if devices is not None else jax.devices()
+        shape = largest_mesh_shape(len(devices))
+        mesh = jax.sharding.Mesh(
+            __import__("numpy").array(devices[: shape[0] * shape[1]])
+            .reshape(shape),
+            self.axis_names,
+        )
+        structs = jax.eval_shape(lambda t: t, target_tree)
+        shardings = sharding_fn(mesh, structs)
+        tree, step = self.ckpt.restore(target_tree, step=step,
+                                       shardings=shardings)
+        return tree, mesh, step

@@ -1,0 +1,77 @@
+"""Production training driver: checkpoint/restart, preemption, stragglers.
+
+The loop is deliberately boring — all the machinery lives in the components
+it composes (CheckpointManager, PreemptionGuard, StragglerMonitor) so each
+is testable in isolation (tests/test_runtime.py kills and resumes it).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from ..checkpoint.manager import CheckpointManager
+from .fault_tolerance import PreemptionGuard, StragglerMonitor
+
+__all__ = ["train_loop"]
+
+
+def train_loop(
+    step_fn,                 # (params, opt_state, step_no, batch) -> ...
+    params,
+    opt_state,
+    data_iter,
+    n_steps: int,
+    ckpt_dir: str,
+    ckpt_every: int = 100,
+    log_path: str | None = None,
+    guard: PreemptionGuard | None = None,
+    resume: bool = True,
+    on_metrics=None,
+):
+    """Run (or resume) training; returns (params, opt_state, last_step)."""
+    ckpt = CheckpointManager(ckpt_dir)
+    guard = guard or PreemptionGuard()
+    guard.install()
+    straggler = StragglerMonitor()
+
+    start = 0
+    if resume and ckpt.latest_step() is not None:
+        (params, opt_state), start = ckpt.restore((params, opt_state))
+        start += 1
+
+    logf = open(log_path, "a") if log_path else None
+    step = start - 1
+    import jax.numpy as jnp
+
+    for step in range(start, n_steps):
+        batch = next(data_iter)
+        t0 = time.time()
+        params, opt_state, metrics = step_fn(
+            params, opt_state, jnp.asarray(step), batch
+        )
+        jax.block_until_ready(metrics["loss"])
+        dt = time.time() - t0
+        straggler.record(step, dt)
+        if on_metrics is not None:
+            on_metrics(step, metrics, dt)
+        if logf:
+            logf.write(json.dumps({
+                "step": step,
+                "loss": float(metrics["loss"]),
+                "grad_norm": float(metrics.get("grad_norm", 0.0)),
+                "seconds": dt,
+            }) + "\n")
+            logf.flush()
+        if (step + 1) % ckpt_every == 0 or step == n_steps - 1:
+            ckpt.save(step, (params, opt_state))
+        if guard.should_stop:
+            ckpt.save(step, (params, opt_state), wait=True)
+            break
+    ckpt.wait()
+    if logf:
+        logf.close()
+    return params, opt_state, step

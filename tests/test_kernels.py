@@ -1,0 +1,126 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import attention, decode_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.xla_flash import mea_attention
+from repro.kernels.segment_reduce.ops import segment_sum
+from repro.kernels.segment_reduce.ref import segment_sum_ref
+from repro.kernels.sssp_relax.ops import relax
+from repro.kernels.sssp_relax.ref import relax_ref
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,d", [
+    (1, 4, 4, 128, 64),    # MHA
+    (2, 8, 2, 200, 64),    # GQA + padding path
+    (1, 8, 1, 256, 32),    # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(b, hq, hkv, s, d, dtype, causal):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, hq, s, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), dtype)
+    out = attention(q, k, v, causal=causal, backend="interpret")
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+def test_flash_attention_softcap():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 4, 128, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), jnp.float32)
+    out = attention(q, k, v, softcap=20.0, backend="interpret")
+    ref = attention_ref(q, k, v, softcap=20.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_mea_attention_grads_match_oracle():
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(2, 4, 96, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 2, 96, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 2, 96, 32)), jnp.float32)
+
+    def loss(fn):
+        return lambda q_, k_, v_: (fn(q_, k_, v_) ** 2).sum()
+
+    g1 = jax.grad(loss(lambda a, b, c: mea_attention(a, b, c, True, 0.0, 32,
+                                                     None)),
+                  argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss(lambda a, b, c: attention_ref(a, b, c, causal=True)),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+
+
+def test_decode_attention_matches_last_position():
+    rng = np.random.default_rng(3)
+    b, hq, hkv, s, d = 2, 8, 2, 64, 32
+    q = jnp.asarray(rng.normal(size=(b, hq, s, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    kc = jnp.pad(k, ((0, 0), (0, 0), (0, 16), (0, 0)))
+    vc = jnp.pad(v, ((0, 0), (0, 0), (0, 16), (0, 0)))
+    out = decode_attention(q[:, :, -1:], kc, vc, cache_len=s)
+    ref = attention_ref(q, k, v, causal=True)[:, :, -1:]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("e,f,n", [(64, 8, 13), (1000, 32, 77),
+                                   (257, 1, 300), (128, 128, 5)])
+def test_segment_sum_sweep(e, f, n):
+    rng = np.random.default_rng(4)
+    ids = rng.integers(0, n, e).astype(np.int32)
+    vals = jnp.asarray(rng.normal(size=(e, f)), jnp.float32)
+    out = segment_sum(vals, jnp.asarray(ids), n, backend="interpret")
+    ref = segment_sum_ref(vals, jnp.asarray(np.sort(ids)), n)
+    # unsorted wrapper sorts internally; compare against sorted ref on the
+    # raw jax oracle instead
+    ref2 = jax.ops.segment_sum(vals, jnp.asarray(ids), num_segments=n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref2), atol=1e-4)
+
+
+def test_segment_sum_gradient():
+    rng = np.random.default_rng(5)
+    ids = np.sort(rng.integers(0, 10, 100)).astype(np.int32)
+    vals = jnp.asarray(rng.normal(size=(100, 4)), jnp.float32)
+
+    def f(backend):
+        return lambda v: (
+            segment_sum(v, jnp.asarray(ids), 10, backend=backend) ** 2
+        ).sum()
+
+    g1 = jax.grad(f("interpret"))(vals)
+    g2 = jax.grad(f("xla"))(vals)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4)
+
+
+@pytest.mark.parametrize("np_,e", [(50, 200), (300, 900), (128, 512)])
+def test_relax_sweep(np_, e):
+    rng = np.random.default_rng(6)
+    dist = jnp.asarray(
+        np.where(rng.random(np_) < 0.4, rng.random(np_) * 10, np.inf),
+        jnp.float32,
+    )
+    active = jnp.asarray(rng.random(np_) < 0.5)
+    src = jnp.asarray(rng.integers(0, np_, e), jnp.int32)
+    dstv = np.sort(rng.integers(0, np_, e)).astype(np.int32)
+    # mask some edges dead
+    dstv[rng.random(e) < 0.1] = -1
+    w = jnp.asarray(rng.random(e) * 5, jnp.float32)
+    out = relax(dist, active, w, src, jnp.asarray(dstv), np_,
+                backend="interpret")
+    ref = relax_ref(dist, w, src, jnp.asarray(dstv), active, np_)
+    both_inf = np.isinf(np.asarray(out)) & np.isinf(np.asarray(ref))
+    diff = np.where(both_inf, 0, np.asarray(out) - np.asarray(ref))
+    assert np.max(np.abs(diff)) < 1e-5

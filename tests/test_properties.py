@@ -1,0 +1,155 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import heapq
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build, sssp
+from repro.core.msg import segment_combine, segment_softmax
+from repro.core.triangles import (
+    cca_cost_model,
+    triangle_count_bitset,
+    triangle_count_exact,
+    wedge_count,
+)
+from repro.optim.optimizers import compress_int8, decompress_int8
+
+
+def _dijkstra(src, dst, w, n, source):
+    adj = [[] for _ in range(n)]
+    for s, d, x in zip(src, dst, w):
+        adj[int(s)].append((int(d), float(x)))
+    dist = np.full(n, np.inf)
+    dist[source] = 0.0
+    pq = [(0.0, source)]
+    while pq:
+        d, v = heapq.heappop(pq)
+        if d > dist[v]:
+            continue
+        for u, wt in adj[v]:
+            nd = d + wt
+            if nd < dist[u]:
+                dist[u] = nd
+                heapq.heappush(pq, (nd, u))
+    return dist
+
+
+graphs = st.integers(10, 60).flatmap(
+    lambda n: st.tuples(
+        st.just(n),
+        st.lists(
+            st.tuples(st.integers(0, n - 1), st.integers(0, n - 1),
+                      st.floats(0.1, 10.0)),
+            min_size=1, max_size=4 * n,
+        ),
+    )
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(graphs, st.integers(1, 4))
+def test_sssp_matches_dijkstra(graph, n_cells):
+    n, edges = graph
+    edges = [(s, d, w) for s, d, w in edges if s != d]
+    if not edges:
+        return
+    src = np.array([e[0] for e in edges], np.int32)
+    dst = np.array([e[1] for e in edges], np.int32)
+    w = np.array([e[2] for e in edges], np.float32)
+    ref = _dijkstra(src, dst, w, n, 0)
+    got = sssp(build(src, dst, n, w, n_cells=n_cells), 0,
+               track_parents=False).values
+    a = np.where(np.isinf(got), 1e30, got)
+    b = np.where(np.isinf(ref), 1e30, ref)
+    assert np.allclose(a, b, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(1, 200), st.integers(1, 20),
+    st.sampled_from(["sum", "min", "max", "mean"]),
+)
+def test_segment_combine_matches_numpy(n_vals, n_seg, combine):
+    rng = np.random.default_rng(n_vals * 31 + n_seg)
+    vals = rng.normal(size=(n_vals,)).astype(np.float32)
+    ids = rng.integers(0, n_seg, n_vals)
+    got = np.asarray(segment_combine(
+        jnp.asarray(vals), jnp.asarray(ids), n_seg, combine
+    ))
+    for s in range(n_seg):
+        sel = vals[ids == s]
+        if len(sel) == 0:
+            continue
+        expect = {"sum": sel.sum(), "min": sel.min(), "max": sel.max(),
+                  "mean": sel.mean()}[combine]
+        assert np.isclose(got[s], expect, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 150))
+def test_segment_softmax_normalized(n_vals):
+    rng = np.random.default_rng(n_vals)
+    ids = np.sort(rng.integers(0, 8, n_vals))
+    logits = jnp.asarray(rng.normal(size=(n_vals,)) * 5, jnp.float32)
+    w = np.asarray(segment_softmax(logits, jnp.asarray(ids), 8))
+    sums = np.zeros(8)
+    np.add.at(sums, ids, w)
+    present = np.unique(ids)
+    assert np.allclose(sums[present], 1.0, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(8, 2000))
+def test_int8_compression_error_feedback_is_contraction(size):
+    rng = np.random.default_rng(size)
+    g = jnp.asarray(rng.normal(size=(size,)).astype(np.float32))
+    err = jnp.zeros_like(g)
+    # accumulated (decompressed - true) error stays bounded by one quantum
+    total_true = np.zeros(size)
+    total_sent = np.zeros(size)
+    for _ in range(5):
+        q, scale, err = compress_int8(g, err)
+        total_sent += np.asarray(decompress_int8(q, scale))
+        total_true += np.asarray(g)
+    # error feedback: cumulative difference bounded by the current residual
+    assert np.max(np.abs(total_true - total_sent)) <= float(
+        np.max(np.abs(np.asarray(err)))
+    ) + 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 40), st.integers(0, 300))
+def test_triangle_count_bitset_matches_exact(n, seed):
+    rng = np.random.default_rng(seed)
+    m = rng.integers(0, n * 3)
+    s = rng.integers(0, n, m)
+    d = rng.integers(0, n, m)
+    keep = s != d
+    s, d = s[keep], d[keep]
+    key = s.astype(np.int64) * n + d
+    _, idx = np.unique(key, return_index=True)
+    s, d = s[idx], d[idx]
+    # symmetrize
+    s2 = np.concatenate([s, d])
+    d2 = np.concatenate([d, s])
+    key = s2.astype(np.int64) * n + d2
+    _, idx = np.unique(key, return_index=True)
+    s2, d2 = s2[idx].astype(np.int32), d2[idx].astype(np.int32)
+    if len(s2) == 0:
+        return
+    exact = triangle_count_exact(s2, d2, n)
+    bitset = int(triangle_count_bitset(jnp.asarray(s2), jnp.asarray(d2), n))
+    assert exact == bitset
+
+
+def test_cca_cost_model_matches_paper_table():
+    # Table III: Graph500 scale-24 row -> speedup ~10.7
+    c = cca_cost_model(wedges=2.46e14, triangles=5.05e13)
+    assert 9.0 < c.speedup < 11.5
+    c = cca_cost_model(wedges=1.478e11, triangles=3.48e10)   # twitter
+    assert 9.0 < c.speedup < 10.0
+    c = cca_cost_model(wedges=1.226e13, triangles=9.65e12)   # wdc
+    assert 3.0 < c.speedup < 4.0

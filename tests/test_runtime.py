@@ -1,0 +1,144 @@
+"""Fault-tolerance machinery: checkpoint/restore, elastic reshard, resume,
+preemption, stragglers, heartbeats."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.optim import adamw
+from repro.runtime.fault_tolerance import (
+    HeartbeatMonitor,
+    PreemptionGuard,
+    StragglerMonitor,
+    largest_mesh_shape,
+)
+from repro.runtime.trainer import train_loop
+
+
+def _toy_setup():
+    params = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+    opt = adamw(lr=0.1)
+    state = opt.init(params)
+
+    def loss(p, batch):
+        return jnp.mean((batch["x"] @ p["w"] + p["b"] - batch["y"]) ** 2)
+
+    def step(params, opt_state, step_no, batch):
+        l, g = jax.value_and_grad(loss)(params, batch)
+        upd, opt_state = opt.update(g, opt_state, params, step_no)
+        params = jax.tree_util.tree_map(lambda a, u: a + u, params, upd)
+        return params, opt_state, {"loss": l, "grad_norm": l}
+
+    def data():
+        rng = np.random.default_rng(0)
+        while True:
+            x = rng.normal(size=(8, 4)).astype(np.float32)
+            yield {"x": jnp.asarray(x), "y": jnp.asarray(x.sum(1,
+                   keepdims=True) * np.ones((1, 4), np.float32))}
+
+    return params, state, step, data()
+
+
+def test_checkpoint_roundtrip_and_integrity(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(10.0), "nested": {"b": jnp.ones((3, 3))}}
+    ckpt.save(5, tree, wait=True)
+    ckpt.save(7, tree, wait=True)
+    ckpt.save(9, tree, wait=True)
+    assert ckpt.all_steps() == [7, 9]          # retention pruned step 5
+    restored, step = ckpt.restore(tree)
+    assert step == 9
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+    tree = {"a": jnp.arange(4.0)}
+    ckpt.save(1, tree, wait=True)
+    # corrupt a leaf on disk
+    f = os.path.join(str(tmp_path), "step_1", "a.npy")
+    arr = np.load(f)
+    arr[0] = 999.0
+    np.save(f, arr)
+    with pytest.raises(IOError):
+        ckpt.restore(tree)
+
+
+def test_elastic_restore_onto_new_sharding(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.arange(64.0).reshape(8, 8)}
+    ckpt.save(1, tree, wait=True)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("data", None)
+    )
+    restored, _ = ckpt.restore(tree, shardings={"w": sh})
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+    assert restored["w"].sharding == sh
+
+
+def test_train_loop_resumes_after_kill(tmp_path):
+    params, state, step, data = _toy_setup()
+    ck = str(tmp_path / "ck")
+    # run 10 steps, checkpointing every 4
+    p1, s1, last = train_loop(step, params, state, data, 10, ck,
+                              ckpt_every=4)
+    assert last == 9
+    # "restart": resume from latest (step 9 saved at end)
+    p2, s2, last2 = train_loop(step, params, state, data, 12, ck,
+                               ckpt_every=4)
+    assert last2 == 11   # resumed at 10, ran 10..11
+
+
+def test_preemption_checkpoints_and_stops(tmp_path):
+    params, state, step, data = _toy_setup()
+    guard = PreemptionGuard()
+    calls = []
+
+    def on_metrics(s, m, dt):
+        calls.append(s)
+        if s == 3:
+            guard.trigger()
+
+    _, _, last = train_loop(step, params, state, data, 100,
+                            str(tmp_path / "ck2"), ckpt_every=50,
+                            guard=guard, on_metrics=on_metrics)
+    assert last == 3
+    ckpt = CheckpointManager(str(tmp_path / "ck2"))
+    assert ckpt.latest_step() == 3
+
+
+def test_straggler_monitor_flags_slow_steps():
+    fired = []
+    mon = StragglerMonitor(window=20, factor=2.0, patience=2,
+                           on_straggle=lambda *a: fired.append(a))
+    for i in range(20):
+        mon.record(i, 0.1)
+    assert not mon.record(20, 0.15)
+    assert mon.record(21, 0.5)
+    assert mon.record(22, 0.5)
+    assert fired   # patience reached -> mitigation callback
+    assert mon.flagged_steps == [21, 22]
+
+
+def test_heartbeat_failure_detection():
+    hb = HeartbeatMonitor(timeout_s=10.0)
+    hb.beat("host0", t=100.0)
+    hb.beat("host1", t=100.0)
+    hb.beat("host0", t=105.0)
+    assert hb.dead_nodes(now=112.0) == ["host1"]
+    assert hb.alive_nodes(now=112.0) == ["host0"]
+
+
+def test_largest_mesh_shape_elastic_downscale():
+    assert largest_mesh_shape(512) == (32, 16)
+    assert largest_mesh_shape(256) == (16, 16)
+    assert largest_mesh_shape(248, 16) == (31, 8)   # lost 8 devices
+    assert largest_mesh_shape(7, 16) == (7, 1)
