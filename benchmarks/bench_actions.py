@@ -1,10 +1,15 @@
 """§V.E recommendations, measured: how scheduling depth (the engine's
 ``max_local_iters`` — HPX's predicate-aware scheduling) and partition
-locality change dynamic work (Actions Normalized) and rounds."""
+locality change dynamic work (Actions Normalized) and rounds.  Plus the
+update-path microbenchmark: batched UpdateBatch apply vs the per-edge
+primitive loop (DESIGN.md §2.4)."""
 
 from __future__ import annotations
 
-from repro.core import build, sssp
+import time
+
+from repro.core import NameServer, UpdateBatch, build, sssp
+from repro.core.dynamic import edge_add, edge_delete
 from repro.core.generators import make_graph_family
 
 
@@ -42,6 +47,69 @@ def run(n_nodes: int = 1500, seed: int = 0):
     return rows
 
 
+def bench_updates(n_nodes: int = 1500, n_updates: int = 256, seed: int = 0,
+                  repeats: int = 3):
+    """Batched vs sequential graph mutation: ``n_updates`` edge updates
+    (half inserts, half deletes) applied as one UpdateBatch vs a per-edge
+    primitive loop.  Returns the timing row (seconds, best of repeats)."""
+    import numpy as np
+
+    src, dst, w, n = make_graph_family("scale_free", n_nodes, seed=seed)
+    rng = np.random.default_rng(seed)
+    live = sorted({(int(a), int(b)) for a, b in zip(src, dst)})
+    k = n_updates // 2
+    deletes = [live[i] for i in rng.choice(len(live), k, replace=False)]
+    inserts = [(int(rng.integers(0, n)), int(rng.integers(0, n)),
+                float(1 + rng.random())) for _ in range(k)]
+
+    def fresh():
+        part = build(src, dst, n, w, n_cells=8, edge_slack=0.5,
+                     node_slack=0.1)
+        return part, NameServer(part)
+
+    def run_sequential():
+        part, ns = fresh()
+        sg = part.sg
+        for u, v in deletes:
+            sg = edge_delete(sg, ns, u, v)
+        for u, v, x in inserts:
+            sg = edge_add(sg, ns, u, v, x)
+        sg.edge_ok.block_until_ready()
+        return sg
+
+    def run_batched():
+        part, ns = fresh()
+        batch = UpdateBatch(ns)
+        for u, v in deletes:
+            batch.delete_edge(u, v)
+        for u, v, x in inserts:
+            batch.add_edge(u, v, x)
+        sg, _ = batch.apply(part.sg)
+        sg.edge_ok.block_until_ready()
+        return sg
+
+    def best_of(fn):
+        fn()                               # warm the jit/dispatch caches
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    t_seq = best_of(run_sequential)
+    t_bat = best_of(run_batched)
+
+    sg_a, sg_b = run_sequential(), run_batched()
+    m = np.asarray(sg_a.edge_ok)
+    assert np.array_equal(np.asarray(sg_b.edge_ok), m)
+    assert np.array_equal(np.asarray(sg_a.weight)[m],
+                          np.asarray(sg_b.weight)[m])
+
+    return dict(n_updates=n_updates, sequential_s=t_seq, batched_s=t_bat,
+                speedup=t_seq / t_bat)
+
+
 def main():
     rows = run()
     print(f"{'strategy':10s} {'mli':>4s} {'act/E':>8s} {'rounds':>6s} "
@@ -50,6 +118,12 @@ def main():
         print(f"{r['strategy']:10s} {r['max_local_iters']:4d} "
               f"{r['actions_norm']:8.2f} {r['rounds']:6d} "
               f"{r['operons']:8d} {r['remote_frac']*100:7.1f}%")
+    u = bench_updates()
+    print(f"\nupdate path ({u['n_updates']} edge updates): "
+          f"sequential {u['sequential_s']*1e3:8.1f} ms   "
+          f"batched {u['batched_s']*1e3:8.1f} ms   "
+          f"speedup {u['speedup']:6.1f}x")
+    rows.append(u)
     return rows
 
 

@@ -104,19 +104,60 @@ def _parse_computations(text: str):
     return comps, symtab, entry
 
 
+def _paren_group(s: str) -> str | None:
+    """Contents of the first balanced (...) group of ``s``."""
+    s = s.strip()
+    if not s.startswith("("):
+        return None
+    depth = 0
+    for i, ch in enumerate(s):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return s[1:i]
+    return None
+
+
+def _split_args(arglist: str) -> list[str]:
+    """Split an operand list on top-level commas (shapes contain commas)."""
+    out, depth, cur = [], 0, []
+    for ch in arglist:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return out
+
+
+def _operand_type(arg: str, syms: dict) -> str:
+    """Type string of one operand: inline (newer HLO dumps annotate
+    operands, e.g. ``dot(f32[4,16]{1,0} %a, ...)``) or via symbol table."""
+    if _SHAPE_RE.search(arg):
+        return arg
+    name = arg.split()[-1].lstrip("%") if arg else ""
+    return syms.get(name, "")
+
+
 def _dot_flops(instr: _Instr, syms: dict) -> float:
     result = _shape_elems(instr.type_str)
     out = 1.0
     for d in result:
         out *= d
-    # operand names -> lhs type from the computation's symbol table
-    ops_m = re.match(r"\(([^)]*)\)", instr.rest.strip())
+    group = _paren_group(instr.rest)
     contract = 1.0
     cdims_m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
-    if ops_m and cdims_m:
-        lhs_name = ops_m.group(1).split(",")[0].strip().lstrip("%")
-        lhs_type = syms.get(lhs_name, "")
-        lhs_dims = _shape_elems(lhs_type)
+    if group is not None and cdims_m:
+        args = _split_args(group)
+        lhs_dims = _shape_elems(_operand_type(args[0] if args else "", syms))
         for ci in cdims_m.group(1).split(","):
             if ci and int(ci) < len(lhs_dims):
                 contract *= lhs_dims[int(ci)]
@@ -150,14 +191,12 @@ _BYTES_SKIP_OPS = {
 
 
 def _operand_bytes(ins: _Instr, syms: dict) -> int:
-    m = re.match(r"\(([^)]*)\)", ins.rest.strip())
-    if not m:
+    group = _paren_group(ins.rest)
+    if group is None:
         return 0
     total = 0
-    for name in m.group(1).split(","):
-        name = name.strip().lstrip("%")
-        if name in syms:
-            total += _shape_bytes(syms[name])
+    for arg in _split_args(group):
+        total += _shape_bytes(_operand_type(arg, syms))
     return total
 
 
@@ -195,13 +234,12 @@ def analyze_hlo(text: str) -> dict:
                 continue
             if ins.op == "dynamic-update-slice":
                 # in-place slice write: traffic = the update, not the stack
-                m = re.match(r"\(([^)]*)\)", ins.rest.strip())
+                group = _paren_group(ins.rest)
                 upd = 0
-                if m:
-                    ops = [o.strip().lstrip("%")
-                           for o in m.group(1).split(",")]
-                    if len(ops) > 1 and ops[1] in syms:
-                        upd = _shape_bytes(syms[ops[1]])
+                if group is not None:
+                    ops = _split_args(group)
+                    if len(ops) > 1:
+                        upd = _shape_bytes(_operand_type(ops[1], syms))
                 acc += 2 * upd
                 continue
             if ins.op in ("dynamic-slice", "gather"):

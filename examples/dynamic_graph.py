@@ -1,46 +1,47 @@
 """Dynamic graph processing — the paper's headline capability.
 
-Streams edge insertions/deletions into a live SSSP fixed point; each batch
-of updates is repaired by re-diffusion from the affected frontier (no
-global recompute), using the seven graph primitives of §VI.
+Streams edge insertions/deletions into a live SSSP fixed point through the
+:class:`DiffusionSession` API: updates accumulate in a batch (the seven
+graph primitives of §VI, applied as vectorized scatters), and ``commit()``
+repairs the cached fixed point by re-diffusion from the affected frontier
+(no global recompute).
 
     PYTHONPATH=src python examples/dynamic_graph.py
 """
 
 import numpy as np
 
-from repro.core import build
-from repro.core.diffuse import diffuse
-from repro.core.dynamic import NameServer, incremental_sssp
+from repro.core import DiffusionSession
 from repro.core.event import build_adjacency, event_sssp
 from repro.core.generators import make_graph_family
-from repro.core.programs import sssp_program
 
 rng = np.random.default_rng(0)
 src, dst, w, n = make_graph_family("small_world", 800, seed=1)
-part = build(src, dst, n, w, n_cells=8, strategy="locality",
-             edge_slack=0.3, node_slack=0.05)
-ns = NameServer(part)
+sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=8,
+                                   strategy="locality",
+                                   edge_slack=0.3, node_slack=0.05)
 
-vstate, st0 = diffuse(part, sssp_program(0))
-print(f"initial diffusion: rounds={int(st0.rounds)} "
-      f"actions={int(st0.actions)}")
+res = sess.query("sssp", source=0)
+print(f"initial diffusion: rounds={int(res.stats.rounds)} "
+      f"actions={int(res.stats.actions)}")
 
 edges = {(int(s), int(d)): float(x) for s, d, x in zip(src, dst, w)}
 for batch_id in range(5):
-    # random update batch: 3 deletes + 3 inserts
+    # random update batch: 3 deletes + 3 inserts, one commit
     live = list(edges)
     deletes = [live[i] for i in rng.choice(len(live), 3, replace=False)]
     inserts = [(int(rng.integers(0, n)), int(rng.integers(0, n)),
                 float(1 + 7 * rng.random())) for _ in range(3)]
-    part, vstate, st = incremental_sssp(part, ns, vstate, 0,
-                                        inserts=inserts, deletes=deletes)
-    for e in deletes:
-        edges.pop(e, None)
+    for u, v in deletes:
+        sess.delete_edge(u, v)
+        edges.pop((u, v), None)
     for u, v, x in inserts:
+        sess.add_edge(u, v, x)
         edges[(u, v)] = x
-    print(f"update batch {batch_id}: repair rounds={int(st.rounds)} "
-          f"actions={int(st.actions)} "
+    info = sess.commit()
+    (strategy, st), = info.repairs.values()
+    print(f"update batch {batch_id}: strategy={strategy} "
+          f"repair rounds={int(st.rounds)} actions={int(st.actions)} "
           f"({float(st.actions)/len(edges):.3f} per edge)")
 
 # verify against a from-scratch oracle on the final graph
@@ -48,7 +49,7 @@ s2 = np.array([e[0] for e in edges])
 d2 = np.array([e[1] for e in edges])
 w2 = np.array(list(edges.values()))
 ref, _ = event_sssp(build_adjacency(s2, d2, w2, n), n, 0)
-got = np.asarray(part.to_global_layout(vstate["dist"]))[: part.n_real]
+got = sess.query("sssp", source=0).values[:n]
 a = np.where(np.isinf(got), 1e30, got)
 b = np.where(np.isinf(np.array(ref)), 1e30, np.array(ref))
 assert np.allclose(a, b, atol=1e-4)

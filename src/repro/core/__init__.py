@@ -1,6 +1,9 @@
 # The paper's primary contribution: the diffusive-computation engine
 # (memory-driven, message-driven dynamic graph processing) realized as a
 # bulk-asynchronous sharded JAX system.  See DESIGN.md SS2-3.
+#
+# Front door: DiffusionSession (session.py) — static queries, batched
+# mutation, and incremental recomputation through one message-driven API.
 from .api import (
     Result,
     bfs,
@@ -12,6 +15,7 @@ from .api import (
     sssp,
 )
 from .diffuse import DiffuseStats, diffuse, diffuse_from, make_spmd_diffuse
+from .dynamic import NameServer
 from .graph import Graph, ShardedGraph, from_edges
 from .partition import Partitioned, partition
 from .programs import (
@@ -21,6 +25,12 @@ from .programs import (
     ppr_program,
     sssp_program,
 )
+from .session import (
+    DiffusionSession,
+    ProgramSpec,
+    register_program,
+)
+from .updates import AppliedUpdates, UpdateBatch
 
 __all__ = [
     "Result", "bfs", "build", "connected_components", "personalized_pagerank",
@@ -28,4 +38,6 @@ __all__ = [
     "make_spmd_diffuse", "Graph", "ShardedGraph", "from_edges",
     "Partitioned", "partition", "VertexProgram", "bfs_program",
     "cc_program", "ppr_program", "sssp_program",
+    "DiffusionSession", "ProgramSpec", "register_program",
+    "UpdateBatch", "AppliedUpdates", "NameServer",
 ]

@@ -1,31 +1,23 @@
-"""Public API — the framework's equivalent of the paper's ``hpx_diffuse``.
+"""Stateless convenience API — thin wrappers over :class:`DiffusionSession`.
+
+The session (session.py) is the real front door — the framework's
+equivalent of the paper's ``hpx_diffuse``::
 
     hpx_diffuse(vertex_id, vertex_func, args..., terminator, predicate)
       ==>
-    diffuse(graph, program, n_cells=..., engine=...)
+    DiffusionSession.query(prog, engine=...)
 
-where the program bundles vertex_func + predicate (programs.py) and the
-terminator is the engine's quiescence detector (termination.py).
+These free functions keep the original one-shot call style
+(``sssp(part, 0)``) for scripts and notebooks; each builds a transient
+session, so both styles share one execution path (DESIGN.md §2.4).
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
-
-import numpy as np
-
-from .diffuse import DiffuseStats, diffuse as _diffuse_sharded
-from .event import build_adjacency, event_sssp
-from .generators import make_graph_family
-from .graph import Graph, from_edges
+from .graph import from_edges
 from .partition import Partitioned, partition
-from .programs import (
-    VertexProgram,
-    bfs_program,
-    cc_program,
-    ppr_program,
-    sssp_program,
-)
+from .programs import VertexProgram
+from .session import DiffusionSession, Result
 
 __all__ = [
     "build",
@@ -37,12 +29,6 @@ __all__ = [
     "pagerank",
     "Result",
 ]
-
-
-class Result(NamedTuple):
-    values: np.ndarray          # per-vertex result in global vertex order
-    stats: DiffuseStats
-    extra: dict
 
 
 def build(
@@ -65,6 +51,14 @@ def build(
     return partition(g, n_cells, strategy=strategy)
 
 
+def _trim(part: Partitioned, res: Result) -> Result:
+    return Result(
+        values=res.values[: part.n_real],
+        stats=res.stats,
+        extra={k: v[: part.n_real] for k, v in res.extra.items()},
+    )
+
+
 def run(
     part: Partitioned,
     prog: VertexProgram,
@@ -72,42 +66,37 @@ def run(
     max_local_iters: int = 64,
     max_rounds: int = 10_000,
 ) -> Result:
-    vstate, stats = _diffuse_sharded(
-        part, prog, max_local_iters=max_local_iters, max_rounds=max_rounds
-    )
-    values = np.asarray(part.to_global_layout(vstate[value_key]))[: part.n_real]
-    extra = {
-        k: np.asarray(part.to_global_layout(v))[: part.n_real]
-        for k, v in vstate.items()
-        if k != value_key
-    }
-    return Result(values=values, stats=stats, extra=extra)
+    sess = DiffusionSession(part, max_local_iters=max_local_iters,
+                            max_rounds=max_rounds)
+    return _trim(part, sess.query(prog, value_key=value_key))
+
+
+def _named(part: Partitioned, name: str, max_local_iters: int,
+           **kwargs) -> Result:
+    sess = DiffusionSession(part, max_local_iters=max_local_iters)
+    return _trim(part, sess.query(name, **kwargs))
 
 
 def sssp(part: Partitioned, source: int, track_parents: bool = True,
          max_local_iters: int = 64) -> Result:
-    return run(part, sssp_program(source, track_parents), "dist",
-               max_local_iters=max_local_iters)
+    return _named(part, "sssp", max_local_iters, source=source,
+                  track_parents=track_parents)
 
 
 def bfs(part: Partitioned, source: int, max_local_iters: int = 64) -> Result:
-    return run(part, bfs_program(source), "dist",
-               max_local_iters=max_local_iters)
+    return _named(part, "bfs", max_local_iters, source=source)
 
 
 def connected_components(part: Partitioned, max_local_iters: int = 64) -> Result:
-    return run(part, cc_program(), "comp", max_local_iters=max_local_iters)
+    return _named(part, "cc", max_local_iters)
 
 
 def personalized_pagerank(part: Partitioned, source: int, alpha: float = 0.15,
                           eps: float = 1e-5, max_local_iters: int = 64) -> Result:
-    return run(part, ppr_program(source, alpha, eps), "rank",
-               max_local_iters=max_local_iters)
+    return _named(part, "ppr", max_local_iters, source=source, alpha=alpha,
+                  eps=eps)
 
 
 def pagerank(part: Partitioned, alpha: float = 0.15, eps: float = 1e-7,
              max_local_iters: int = 64) -> Result:
-    from .programs import pagerank_program
-
-    return run(part, pagerank_program(alpha, eps), "rank",
-               max_local_iters=max_local_iters)
+    return _named(part, "pagerank", max_local_iters, alpha=alpha, eps=eps)

@@ -26,10 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .diffuse import diffuse_from
 from .graph import ShardedGraph
 from .partition import Partitioned
-from .programs import sssp_program
 
 __all__ = [
     "NameServer",
@@ -61,6 +59,11 @@ class NameServer:
             self._free_local[s] = [
                 i for i in range(part.sg.n_per_shard) if not taken[s, i]
             ]
+
+    def best_shard(self) -> int:
+        """The compute cell with the most free vertex slots (load spread
+        for dynamic vertex placement)."""
+        return max(self._free_local, key=lambda s: len(self._free_local[s]))
 
     def allocate(self, shard: int) -> tuple[int, int, int]:
         """-> (gid, owner shard, local slot). Raises if the cell is full."""
@@ -224,42 +227,36 @@ def incremental_sssp(
     """Apply edge updates and repair the SSSP fixed point by re-diffusion.
 
     inserts: iterable of (u, v, w); deletes: iterable of (u, v).
-    Returns (part with updated sg, new vstate, stats of the repair diffusion).
+    Returns (part with updated sg, new vstate, stats of the repair
+    diffusion).
+
+    Back-compat wrapper: the batched mutation + generic frontier repair now
+    live in :class:`repro.core.session.DiffusionSession` (the 'parents'
+    strategy); this adopts the caller's fixed point into a transient
+    session and commits one batch through the same code path.
     """
-    sg = part.sg
+    from .session import DiffusionSession
+
+    sess = DiffusionSession(part, ns=ns, max_local_iters=max_local_iters)
+    key = sess.adopt("sssp", vstate, source=source)
+    batch = sess.update()
     for u, v in deletes:
-        sg = edge_delete(sg, ns, u, v)
+        batch.delete_edge(u, v)
     for u, v, w in inserts:
-        sg = edge_add(sg, ns, u, v, w)
-    part.sg = sg
+        batch.add_edge(u, v, w)
+    info = sess.commit()
+    _, stats = info.repairs[key]
+    vstate = sess.vertex_state("sssp", source=source)
+    if stats is None:
+        # empty / all-phantom batch: the session skips repair, but this
+        # function's contract is to always return repair-diffusion stats —
+        # run the (immediately quiescent) diffusion for real counters.
+        from .diffuse import diffuse_from
+        from .programs import sssp_program
 
-    prog = sssp_program(source, track_parents=True)
-
-    # Deleted tree edges invalidate their downstream subtree.
-    tree_roots = []
-    for u, v in deletes:
-        sv, lv = ns.resolve(v)
-        if int(vstate["parent"][sv, lv]) == u:
-            tree_roots.append(v)
-    dist = vstate["dist"]
-    parent = vstate["parent"]
-    if tree_roots:
-        invalid = _invalidate_subtrees(part, ns, vstate, tree_roots)
-        dist = jnp.where(invalid, jnp.inf, dist)
-        parent = jnp.where(invalid, -1, parent)
-
-    vstate = {"dist": dist, "parent": parent}
-    # Frontier: endpoints of inserts + every still-finite vertex when any
-    # subtree was invalidated (they re-emit once; receivers' predicates
-    # discard non-improvements — pure diffusion semantics, no special cases).
-    active = jnp.zeros(dist.shape, bool)
-    for u, v, w in inserts:
-        su, lu = ns.resolve(u)
-        active = active.at[su, lu].set(True)
-    if tree_roots:
-        active = active | (jnp.isfinite(dist) & sg.node_ok)
-
-    vstate, stats = diffuse_from(
-        sg, prog, vstate, active, max_local_iters=max_local_iters
-    )
+        vstate, stats = diffuse_from(
+            part.sg, sssp_program(source, track_parents=True),
+            vstate, jnp.zeros(vstate["dist"].shape, bool),
+            max_local_iters=max_local_iters,
+        )
     return part, vstate, stats

@@ -1,0 +1,557 @@
+"""DiffusionSession — one message-driven front door for the whole system.
+
+The paper's thesis is that static queries, graph mutation, and incremental
+recomputation belong to **one** programming model (diffusive computation),
+not three code paths.  The session realizes that (DESIGN.md §2.4):
+
+* it owns the :class:`ShardedGraph`, the :class:`NameServer` (the paper's
+  hardware name server), and cached per-program vertex state;
+* **queries** go through one interface — ``session.query("sssp",
+  source=0)`` — for every registered program (SSSP / BFS / CC / PPR /
+  PageRank / triangle counting), on any execution backend
+  (``engine="sharded" | "event" | "spmd"``);
+* **mutations** accumulate in an :class:`UpdateBatch` (the seven
+  primitives of §VI, batched) and land with ``session.commit()``, which
+  applies them as vectorized scatters and then *repairs* every cached
+  program by re-diffusing only the affected frontier — the generic form
+  of the paper's dynamic-graph processing.
+
+Repair strategies (per registered program, picked to reproduce the
+from-scratch fixed point exactly):
+
+* ``parents``   — shortest-path trees: deleted tree edges invalidate
+  their downstream subtree via parent-pointer chasing through the global
+  namespace, then every still-finite vertex re-emits once (SSSP).
+* ``component`` — label diffusions: deletes reset every vertex of the
+  affected components to its init label; all live vertices re-emit (CC).
+* ``restart``   — residual-push programs (PPR / PageRank): their
+  finite-eps fixed point is push-order-dependent, so only a fresh
+  diffusion reproduces the from-scratch bits; insert-only traffic on
+  monotone programs still takes the warm frontier path.
+
+Engine matrix (DESIGN.md §2.5): ``sharded`` is the bulk-asynchronous
+logical engine (default, any program); ``spmd`` shard_maps one compute
+cell per mesh device (any program, needs >= n_cells devices); ``event``
+is the message-at-a-time host oracle with real Dijkstra–Scholten
+termination (programs that register an ``event_fn``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .diffuse import _sg_as_dict, diffuse, diffuse_from, make_spmd_diffuse
+from .dynamic import NameServer, _invalidate_subtrees
+from .graph import from_edges
+from .partition import Partitioned, partition
+from .programs import (
+    VertexProgram,
+    bfs_program,
+    cc_program,
+    pagerank_program,
+    ppr_program,
+    sssp_program,
+)
+from .updates import AppliedUpdates, UpdateBatch
+
+__all__ = [
+    "DiffusionSession",
+    "ProgramSpec",
+    "Result",
+    "register_program",
+    "PROGRAMS",
+]
+
+ENGINES = ("sharded", "event", "spmd")
+
+
+class Result(NamedTuple):
+    values: np.ndarray          # per-vertex result in global vertex order
+    stats: Any                  # DiffuseStats | EventStats | None (cached)
+    extra: dict
+
+
+class ProgramSpec(NamedTuple):
+    """Registry entry making a program invocable by name (DESIGN.md §2.4)."""
+
+    name: str
+    factory: Callable           # (**kwargs) -> VertexProgram
+    value_key: str
+    repair: str = "restart"     # 'parents' | 'component' | 'restart'
+    monotone: bool = False      # insert-only warm start is sound
+    event_fn: Callable | None = None   # (session, **kwargs) -> (values, st)
+    run_fn: Callable | None = None     # custom query (e.g. triangles)
+
+
+def _event_sssp(session, source: int = 0, unit_weights: bool = False,
+                **_):
+    from .event import build_adjacency, event_sssp
+
+    src, dst, w = session.edge_list()
+    if unit_weights:
+        w = np.ones_like(w)
+    n = session.n_ids
+    dist, st = event_sssp(build_adjacency(src, dst, w, n), n, source)
+    return np.array(dist), st
+
+
+def _run_triangles(session, engine=None, **kwargs):
+    from .triangles import triangle_count_bitset
+
+    src, dst, _ = session.edge_list()
+    count = int(triangle_count_bitset(src, dst, session.n_ids))
+    return Result(values=np.array(count), stats=None,
+                  extra={"triangles": count})
+
+
+PROGRAMS: dict[str, ProgramSpec] = {}
+
+
+def register_program(spec: ProgramSpec):
+    PROGRAMS[spec.name] = spec
+    return spec
+
+
+register_program(ProgramSpec(
+    "sssp", sssp_program, "dist", repair="parents", monotone=True,
+    event_fn=_event_sssp,
+))
+register_program(ProgramSpec(
+    "bfs", bfs_program, "dist", repair="restart", monotone=True,
+    event_fn=lambda session, **kw: _event_sssp(session, unit_weights=True,
+                                               **kw),
+))
+register_program(ProgramSpec(
+    "cc", cc_program, "comp", repair="component", monotone=True,
+))
+register_program(ProgramSpec(
+    "ppr", ppr_program, "rank", repair="restart",
+))
+register_program(ProgramSpec(
+    "pagerank", pagerank_program, "rank", repair="restart",
+))
+register_program(ProgramSpec(
+    "triangles", None, "", run_fn=_run_triangles,
+))
+
+
+@dataclasses.dataclass
+class _Entry:
+    """One cached (program, kwargs) fixed point."""
+
+    spec: ProgramSpec
+    prog: VertexProgram
+    value_key: str
+    kwargs: dict
+    vstate: Any
+    stats: Any
+    engine: str
+
+
+class CommitInfo(NamedTuple):
+    applied: AppliedUpdates
+    repairs: dict               # query key -> (strategy, stats)
+
+
+class DiffusionSession:
+    """Stateful front door: build once, query / mutate / commit forever."""
+
+    def __init__(self, part: Partitioned, ns: NameServer | None = None,
+                 engine: str = "sharded", max_local_iters: int = 64,
+                 max_rounds: int = 10_000):
+        if engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, "
+                             f"got {engine!r}")
+        self.part = part
+        self._ns = ns                # lazily built: queries don't need one
+        self.engine = engine
+        self.max_local_iters = max_local_iters
+        self.max_rounds = max_rounds
+        self._cache: dict[tuple, _Entry] = {}
+        self._pending: UpdateBatch | None = None
+        self._spmd_fns: dict = {}
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def from_edges(cls, src, dst, n_nodes: int, weight=None,
+                   n_cells: int = 4, strategy: str = "block",
+                   edge_slack: float = 0.0, node_slack: float = 0.0,
+                   engine: str = "sharded", **kw) -> "DiffusionSession":
+        """Build + partition a graph over n_cells compute cells.
+
+        ``edge_slack`` / ``node_slack`` reserve free capacity slots per
+        cell for the dynamic primitives (paper §VI)."""
+        g = from_edges(src, dst, n_nodes, weight,
+                       edge_slack=edge_slack, node_slack=node_slack)
+        part = partition(g, n_cells, strategy=strategy)
+        return cls(part, engine=engine, **kw)
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+
+    @property
+    def sg(self):
+        return self.part.sg
+
+    @property
+    def ns(self) -> NameServer:
+        """The global namespace (built on first mutation/resolution)."""
+        if self._ns is None:
+            self._ns = NameServer(self.part)
+        return self._ns
+
+    @property
+    def n_cells(self) -> int:
+        return self.sg.n_shards
+
+    @property
+    def n_ids(self) -> int:
+        """Size of the global id space (capacity + dynamically added)."""
+        if self._ns is not None:
+            return int(self._ns.owner.shape[0])
+        return int(np.asarray(self.part.owner).shape[0])
+
+    def _layout(self):
+        if self._ns is not None:
+            return self._ns.owner, self._ns.local
+        return np.asarray(self.part.owner), np.asarray(self.part.local)
+
+    def to_global(self, values) -> np.ndarray:
+        """[S, Np] shard layout -> [n_ids] gid order (via the name server,
+        so dynamically added vertices resolve too).
+
+        Dead ids (free capacity slots, deleted vertices) keep a stale
+        slot mapping and may alias a live vertex's value — mask with
+        :meth:`live_ids` when iterating the full id space."""
+        owner, local = self._layout()
+        return np.asarray(values)[owner, local]
+
+    def live_ids(self) -> np.ndarray:
+        """[n_ids] bool: ids currently naming a live vertex."""
+        owner, local = self._layout()
+        ok = np.asarray(self.sg.node_ok)[owner, local]
+        gid = np.asarray(self.sg.gid)[owner, local]
+        return ok & (gid == np.arange(owner.shape[0]))
+
+    def edge_list(self):
+        """Host copy of the live edge set as (src_gid, dst_gid, weight)."""
+        sg = self.sg
+        ok = np.asarray(sg.edge_ok)
+        src_gid = np.asarray(sg.gid)[
+            np.arange(sg.n_shards)[:, None], np.asarray(sg.src_local)
+        ]
+        return (src_gid[ok].astype(np.int32),
+                np.asarray(sg.dst_gid)[ok].astype(np.int32),
+                np.asarray(sg.weight)[ok].astype(np.float32))
+
+    # ------------------------------------------------------------------
+    # static queries
+    # ------------------------------------------------------------------
+
+    def _key(self, name: str, engine: str, kwargs: dict) -> tuple:
+        return (name, engine, tuple(sorted(kwargs.items())))
+
+    def query(self, prog, engine: str | None = None, refresh: bool = False,
+              value_key: str | None = None, **kwargs) -> Result:
+        """Run (or serve from cache) a named or ad-hoc vertex program.
+
+        ``prog`` is a registry name ("sssp", "cc", "ppr", "pagerank",
+        "bfs", "triangles", ...) or a raw :class:`VertexProgram` (then
+        ``value_key`` selects the result field).  ``sharded``/``spmd``
+        fixed points are cached and repaired incrementally by later
+        ``commit()`` calls; ``event`` (the host oracle) and custom
+        ``run_fn`` queries recompute on every call — they always see the
+        current graph and hold no device state to repair.
+        """
+        engine = engine or self.engine
+        if engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, "
+                             f"got {engine!r}")
+
+        if isinstance(prog, VertexProgram):
+            if value_key is None:
+                raise ValueError("value_key= is required for a raw "
+                                 "VertexProgram")
+            spec = ProgramSpec(f"adhoc:{id(prog)}", lambda: prog, value_key)
+            name = spec.name
+        else:
+            if prog not in PROGRAMS:
+                raise KeyError(
+                    f"unknown program {prog!r}; registered: "
+                    f"{sorted(PROGRAMS)} (register_program to add)")
+            spec = PROGRAMS[prog]
+            name = prog
+            if spec.run_fn is not None:
+                return spec.run_fn(self, engine=engine, **kwargs)
+
+        key = self._key(name, engine, kwargs)
+        if not refresh and key in self._cache:
+            return self._result(self._cache[key])
+
+        if engine == "event":
+            if spec.event_fn is None:
+                raise ValueError(
+                    f"program {name!r} has no event-engine oracle; "
+                    f"use engine='sharded' or 'spmd'")
+            values, st = spec.event_fn(self, **kwargs)
+            return Result(values=values, stats=st,
+                          extra={"live": self.live_ids()})
+
+        program = spec.factory(**kwargs) if not isinstance(prog, VertexProgram) else prog
+        vk = value_key or spec.value_key
+        if engine == "sharded":
+            vstate, stats = diffuse(
+                self.sg, program, max_local_iters=self.max_local_iters,
+                max_rounds=self.max_rounds)
+        else:  # spmd
+            vstate, stats = self._run_spmd(program)
+        entry = _Entry(spec, program, vk, dict(kwargs), vstate, stats,
+                       engine)
+        self._cache[key] = entry
+        return self._result(entry)
+
+    def adopt(self, name: str, vstate, stats=None, engine: str = "sharded",
+              **kwargs) -> tuple:
+        """Register an existing fixed point with the session so commit()
+        repairs it; returns the cache key."""
+        spec = PROGRAMS[name]
+        prog = spec.factory(**kwargs)
+        key = self._key(name, engine, kwargs)
+        self._cache[key] = _Entry(spec, prog, spec.value_key, dict(kwargs),
+                                  vstate, stats, engine)
+        return key
+
+    def vertex_state(self, name: str, engine: str | None = None, **kwargs):
+        """The cached [S, Np]-layout vertex-state pytree of a query."""
+        key = self._key(name, engine or self.engine, kwargs)
+        return self._cache[key].vstate
+
+    def _run_spmd(self, program: VertexProgram):
+        S = self.n_cells
+        if len(jax.devices()) < S:
+            raise RuntimeError(
+                f"engine='spmd' needs >= {S} devices (one per compute "
+                f"cell); this process has {len(jax.devices())}. Set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={S} "
+                f"before importing jax, or use engine='sharded'.")
+        from ..launch.mesh import mesh_context
+
+        fkey = (program, S)
+        if fkey not in self._spmd_fns:
+            mesh = jax.make_mesh((S,), ("cells",))
+            self._spmd_fns[fkey] = (mesh, make_spmd_diffuse(
+                mesh, program, self.sg, axis_name="cells",
+                max_local_iters=self.max_local_iters,
+                max_rounds=self.max_rounds))
+        mesh, fn = self._spmd_fns[fkey]
+        with mesh_context(mesh):
+            return fn(_sg_as_dict(self.sg))
+
+    def _result(self, entry: _Entry) -> Result:
+        values = self.to_global(entry.vstate[entry.value_key])
+        extra = {k: self.to_global(v) for k, v in entry.vstate.items()
+                 if k != entry.value_key}
+        extra["live"] = self.live_ids()
+        return Result(values=values, stats=entry.stats, extra=extra)
+
+    # ------------------------------------------------------------------
+    # the seven primitives, batched
+    # ------------------------------------------------------------------
+
+    def update(self) -> UpdateBatch:
+        """The pending mutation batch (created lazily)."""
+        if self._pending is None:
+            self._pending = UpdateBatch(self.ns)
+        return self._pending
+
+    def add_vertex(self, shard: int | None = None) -> int:
+        return self.update().add_vertex(shard)
+
+    def delete_vertex(self, gid: int):
+        self.update().delete_vertex(gid)
+        return self
+
+    def add_edge(self, u: int, v: int, w: float = 1.0):
+        self.update().add_edge(u, v, w)
+        return self
+
+    def delete_edge(self, u: int, v: int):
+        self.update().delete_edge(u, v)
+        return self
+
+    def touch(self, gid: int):
+        self.update().touch_vertex(gid)
+        return self
+
+    def peek(self, u: int, prog: str = "sssp", **kwargs):
+        """The paper's peek primitive: u's per-out-edge neighbour values
+        of a cached program's result (NaN on dead slots)."""
+        from .dynamic import peek as _peek
+
+        engine = kwargs.pop("engine", None) or self.engine
+        if engine == "event":
+            raise ValueError(
+                "peek reads a cached shard-layout state; the event oracle "
+                "holds none — use engine='sharded' or 'spmd'")
+        key = self._key(prog, engine, kwargs)
+        if key not in self._cache:
+            same = [k for k in self._cache if k[0] == prog]
+            if not kwargs and len(same) == 1:
+                key = same[0]      # unique cached variant of this program
+            else:
+                self.query(prog, engine=engine, **kwargs)
+        entry = self._cache[key]
+        return _peek(self.sg, entry.vstate[entry.value_key], self.ns, u)
+
+    # ------------------------------------------------------------------
+    # commit: apply the batch + incremental repair
+    # ------------------------------------------------------------------
+
+    def commit(self, max_local_iters: int | None = None) -> CommitInfo:
+        """Apply the pending UpdateBatch (vectorized) and repair every
+        cached program fixed point by frontier re-diffusion."""
+        mli = max_local_iters or self.max_local_iters
+        if self._pending is None or len(self._pending) == 0:
+            applied = AppliedUpdates((), (), (), (), ())
+        else:
+            self.part.sg, applied = self._pending.apply(self.part.sg)
+            self._pending = None
+
+        repairs = {}
+        for key, entry in list(self._cache.items()):
+            if applied.n_ops == 0:
+                repairs[key] = ("noop", None)
+                continue
+            repairs[key] = self._repair_entry(entry, applied, mli)
+        return CommitInfo(applied=applied, repairs=repairs)
+
+    def _repair_entry(self, entry: _Entry, applied: AppliedUpdates,
+                      mli: int):
+        sg = self.sg
+        strategy = entry.spec.repair
+        if not applied.has_deletes and entry.spec.monotone:
+            strategy = "frontier"
+        elif strategy == "parents" and "parent" not in entry.vstate:
+            strategy = "restart"
+
+        if strategy == "restart":
+            if entry.engine == "spmd":
+                vstate, stats = self._run_spmd(entry.prog)
+            else:
+                vstate, stats = diffuse(sg, entry.prog,
+                                        max_local_iters=mli,
+                                        max_rounds=self.max_rounds)
+            entry.vstate, entry.stats = vstate, stats
+            return ("restart", stats)
+
+        vstate, active = self._warm_state(entry, applied, strategy)
+        vstate, stats = diffuse_from(sg, entry.prog, vstate, active,
+                                     max_local_iters=mli,
+                                     max_rounds=self.max_rounds)
+        entry.vstate, entry.stats = vstate, stats
+        return (strategy, stats)
+
+    # -- repair state builders -------------------------------------------
+
+    def _slots(self, gids) -> tuple[np.ndarray, np.ndarray]:
+        s = np.array([self.ns.resolve(g)[0] for g in gids], np.int32)
+        l = np.array([self.ns.resolve(g)[1] for g in gids], np.int32)
+        return s, l
+
+    def _splice_init(self, entry: _Entry, vstate, gids):
+        """Reset the given vertices' state to the program's init values
+        (fresh slots may hold stale state from a previously deleted
+        occupant)."""
+        if not gids:
+            return vstate
+        init_v, _ = entry.prog.init(self.sg)
+        s, l = self._slots(gids)
+        return jax.tree_util.tree_map(
+            lambda cur, ini: cur.at[s, l].set(ini[s, l]), vstate, init_v
+        )
+
+    def _base_frontier(self, applied: AppliedUpdates):
+        """Insert source endpoints + touched + newly added vertices."""
+        sg = self.sg
+        active = jnp.zeros((sg.n_shards, sg.n_per_shard), bool)
+        gids = ([u for u, _, _ in applied.edge_adds]
+                + list(applied.touched)
+                + [g for g, _, _ in applied.vertex_adds])
+        if gids:
+            s, l = self._slots(gids)
+            active = active.at[s, l].set(True)
+        return active & sg.node_ok
+
+    def _warm_state(self, entry: _Entry, applied: AppliedUpdates,
+                    strategy: str):
+        sg = self.sg
+        vstate = entry.vstate
+        # new vertices (and reused slots) start from init state
+        fresh = [g for g, _, _ in applied.vertex_adds]
+        vstate = self._splice_init(entry, vstate, fresh)
+        active = self._base_frontier(applied)
+
+        if strategy == "frontier":
+            return vstate, active
+
+        if strategy == "parents":
+            # roots: deleted tree edges + orphans of deleted vertices
+            parent = vstate["parent"]
+            roots = []
+            dead = set(applied.vertex_deletes)
+            for u, v in applied.edge_deletes:
+                sv, lv = self.ns.resolve(v)
+                if int(parent[sv, lv]) == u:
+                    roots.append(v)
+            if dead:
+                par_np = self.to_global(parent)
+                for v in range(par_np.shape[0]):
+                    if int(par_np[v]) in dead and v not in dead:
+                        roots.append(v)
+            dist = vstate["dist"]
+            parent_a = parent
+            if roots or dead:
+                all_roots = list(dict.fromkeys(roots)) + list(dead)
+                invalid = _invalidate_subtrees(
+                    self.part, self.ns, vstate, all_roots)
+                dist = jnp.where(invalid, jnp.inf, dist)
+                parent_a = jnp.where(invalid, -1, parent_a)
+                # every still-finite vertex re-emits once; receivers'
+                # predicates discard non-improvements (pure diffusion)
+                active = active | (jnp.isfinite(dist) & sg.node_ok)
+            out = dict(vstate)
+            out["dist"], out["parent"] = dist, parent_a
+            return out, active
+
+        if strategy == "component":
+            comp = vstate[entry.value_key]
+            affected = set()
+            for u, v in applied.edge_deletes:
+                for g in (u, v):
+                    s_, l_ = self.ns.resolve(g)
+                    affected.add(int(comp[s_, l_]))
+            for g in applied.vertex_deletes:
+                s_, l_ = self.ns.resolve(g)
+                affected.add(int(comp[s_, l_]))
+            if affected:
+                init_v, _ = entry.prog.init(sg)
+                aff = jnp.isin(comp, jnp.asarray(sorted(affected),
+                                                 comp.dtype))
+                comp = jnp.where(aff, init_v[entry.value_key], comp)
+                # all live vertices re-emit so cross-component inflow
+                # re-arrives; min-combine discards non-improvements
+                active = active | sg.node_ok
+            out = dict(vstate)
+            out[entry.value_key] = comp
+            return out, active
+
+        raise ValueError(f"unknown repair strategy {strategy!r}")

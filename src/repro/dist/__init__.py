@@ -1,0 +1,15 @@
+"""Distribution machinery shared by every cell: logical sharding rules
+(GSPMD annotations by *name*, not by mesh axis), pipeline parallelism,
+compressed data-parallel all-reduce, and the MoE expert-parallel plan.
+
+See DESIGN.md §3 for how these compose with the diffusive engine's
+operon routing.
+"""
+
+from . import rules  # noqa: F401
+from .sharding import (  # noqa: F401
+    current_context,
+    logical_constraint,
+    moe_apply,
+    sharding_context,
+)

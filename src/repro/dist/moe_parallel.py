@@ -1,0 +1,31 @@
+"""MoE expert-parallel plan (DESIGN.md §3).
+
+The plan is a plain dict consumed by :func:`repro.dist.sharding.moe_apply`:
+it names the mesh, the token (data) axes, the tensor (model) axis carrying
+the d_ff shards, and the FSDP axis for parameter storage.  Keeping it a
+dict keeps the contract between the cell builders and the sharding layer
+serializable and inspectable.
+"""
+
+from __future__ import annotations
+
+__all__ = ["make_moe_plan"]
+
+
+def make_moe_plan(mesh, data_axes=("data",), model_axis: str = "model",
+                  fsdp_axis: str = "data") -> dict:
+    """Build the expert-parallel plan for ``mesh``.
+
+    data_axes: mesh axes tokens are sharded over (("pod", "data") on the
+    two-pod mesh).  model_axis: the d_ff / expert tensor axis.  fsdp_axis:
+    where expert parameters are stored when sharded at rest.
+    """
+    data_axes = tuple(a for a in data_axes if a in mesh.shape)
+    n_tensor = mesh.shape.get(model_axis, 1)
+    return {
+        "mesh": mesh,
+        "data_axes": data_axes,
+        "model_axis": model_axis,
+        "fsdp_axis": fsdp_axis,
+        "n_tensor_shards": n_tensor,
+    }

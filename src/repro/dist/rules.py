@@ -1,0 +1,70 @@
+"""Per-family logical sharding rules and parameter shardings.
+
+One rules dict per model family maps logical dim names to mesh axes; the
+same model code then shards correctly on a (data, model) pod mesh or a
+(pod, data, model) two-pod mesh (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["logical_rules", "param_sharding", "FAMILIES"]
+
+FAMILIES = ("lm", "gnn_geometric", "gnn_scalar", "recsys")
+
+
+def _data_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def logical_rules(mesh, family: str) -> dict:
+    """Logical dim name -> mesh axes for ``family`` on ``mesh``."""
+    data = _data_axes(mesh)
+    if family == "lm":
+        return {
+            "batch": data,
+            "seq": (),
+            "embed": (),
+            "heads": "model",
+            "kv_heads": "model",
+            "ffn": "model",
+            "vocab": "model",
+            "experts": "model",
+        }
+    if family in ("gnn_geometric", "gnn_scalar"):
+        return {
+            "nodes": data,
+            "edges": data,
+            "channels": "model",
+        }
+    if family == "recsys":
+        return {
+            "batch": data,
+            "embed": "model",
+            "candidates": data + ("model",),
+        }
+    raise ValueError(f"unknown rules family {family!r}")
+
+
+def param_sharding(params_struct, mesh, family: str):
+    """NamedSharding pytree for a parameter struct: shard the largest dim
+    of every big leaf over the model axis (tensor parallelism); replicate
+    small leaves.  Memory-driven rather than name-driven — the layout the
+    dry-runs use to prove the big configs fit."""
+    import jax
+
+    model = mesh.shape.get("model", 1)
+
+    def pick(leaf):
+        shape = leaf.shape
+        if model <= 1 or len(shape) == 0 or max(shape) < 1024:
+            return NamedSharding(mesh, P())
+        dim = max(range(len(shape)), key=lambda i: shape[i])
+        if shape[dim] % model != 0:
+            return NamedSharding(mesh, P())
+        entries = [None] * len(shape)
+        entries[dim] = "model"
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map(pick, params_struct)

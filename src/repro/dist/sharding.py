@@ -1,0 +1,171 @@
+"""Logical sharding: name-based GSPMD constraints (DESIGN.md §3).
+
+Model code annotates tensors with *logical* dimension names ("batch",
+"heads", "nodes", "channels", ...).  A :func:`sharding_context` binds those
+names to mesh axes through a rules dict; :func:`logical_constraint` turns
+the names into ``with_sharding_constraint`` calls, silently dropping axes
+that do not apply (indivisible dims, axes already claimed by an earlier
+dim, axes missing from the mesh).  Outside a context — or outside a trace —
+it is the identity, so the same model code runs single-device eagerly and
+sharded under jit without edits.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from math import prod
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "sharding_context",
+    "current_context",
+    "logical_constraint",
+    "moe_apply",
+]
+
+_STATE = threading.local()
+
+
+def current_context() -> dict | None:
+    """The innermost active sharding context, or None.
+
+    The context is a dict with keys ``mesh``, ``rules`` (logical name ->
+    tuple of mesh axis names) and ``plan`` (MoE expert-parallel plan or
+    None).  Model code may read it to build explicit shard_map paths.
+    """
+    stack = getattr(_STATE, "stack", None)
+    return stack[-1] if stack else None
+
+
+def _as_axes(axes) -> tuple:
+    if axes is None:
+        return ()
+    if isinstance(axes, str):
+        return (axes,)
+    return tuple(axes)
+
+
+@contextmanager
+def sharding_context(mesh, rules: dict, plan: dict | None = None):
+    """Bind logical dimension names to mesh axes for the enclosed scope.
+
+    ``rules`` values may be a mesh axis name, a tuple of axis names, or
+    None; they are stored verbatim (model code reads them back through
+    :func:`current_context`) and normalized at constraint time.
+    """
+    ctx = {"mesh": mesh, "rules": dict(rules), "plan": plan}
+    stack = getattr(_STATE, "stack", None)
+    if stack is None:
+        stack = _STATE.stack = []
+    stack.append(ctx)
+    try:
+        yield ctx
+    finally:
+        stack.pop()
+
+
+def _spec_for(shape, names, mesh, rules):
+    """Resolve logical names to a PartitionSpec, first-come-first-served.
+
+    Each mesh axis may be claimed by at most one dim; an axis is dropped
+    when the dim size is not divisible by it (GSPMD would pad — we prefer
+    the unsharded layout), keeping any divisible prefix of a multi-axis
+    rule.
+    """
+    used: set[str] = set()
+    entries = []
+    for dim, name in zip(shape, names):
+        axes = _as_axes(rules.get(name)) if name is not None else ()
+        picked = []
+        size = 1
+        for a in axes:
+            if a in used or a not in mesh.shape:
+                continue
+            nxt = size * mesh.shape[a]
+            if dim % nxt != 0:
+                break
+            picked.append(a)
+            size = nxt
+        used.update(picked)
+        if not picked:
+            entries.append(None)
+        elif len(picked) == 1:
+            entries.append(picked[0])
+        else:
+            entries.append(tuple(picked))
+    return P(*entries)
+
+
+def logical_constraint(x, *names):
+    """Constrain ``x``'s layout by logical dim names (None = unsharded).
+
+    Identity outside a sharding context or outside a jit trace.
+    """
+    ctx = current_context()
+    if ctx is None or len(names) != getattr(x, "ndim", -1):
+        return x
+    mesh, rules = ctx["mesh"], ctx["rules"]
+    spec = _spec_for(x.shape, names, mesh, rules)
+    if not isinstance(x, jax.core.Tracer):
+        # eager arrays: the constraint is a layout hint for the compiler;
+        # committing data here would silently devolve into a device_put.
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# MoE expert-parallel apply
+# ---------------------------------------------------------------------------
+
+# sharding of the MoE parameter pytree under the expert plan: router
+# replicated, gate/up sharded over d_ff, down sharded over its d_ff input —
+# the partial-sum layout moe_ffn documents (one psum, inserted by GSPMD).
+_MOE_PARAM_DIMS = {
+    "router": (None, None),
+    "w_gate": (None, None, "model"),
+    "w_up": (None, None, "model"),
+    "w_down": (None, "model", None),
+}
+
+
+def moe_apply(fn, params, x):
+    """Run an MoE layer ``fn(params, x2d) -> (y2d, aux)`` under the active
+    expert-parallel plan (DESIGN.md §3), or plainly when no plan is bound.
+    """
+    ctx = current_context()
+    plan = ctx.get("plan") if ctx else None
+    if plan is None or not isinstance(x, jax.core.Tracer):
+        return fn(params, x)
+    mesh = plan["mesh"]
+    model = plan["model_axis"]
+    data = tuple(plan["data_axes"])
+
+    def pin(leaf, dims):
+        entries = []
+        for d, tag in zip(leaf.shape, dims):
+            if tag == "model" and model in mesh.shape and \
+                    d % mesh.shape[model] == 0:
+                entries.append(model)
+            else:
+                entries.append(None)
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, P(*entries))
+        )
+
+    params = {
+        k: pin(v, _MOE_PARAM_DIMS.get(k, (None,) * v.ndim))
+        for k, v in params.items()
+    }
+    n_data = prod(mesh.shape[a] for a in data if a in mesh.shape)
+    tok_spec = data if n_data > 1 and x.shape[0] % n_data == 0 else None
+    x = jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(tok_spec, None))
+    )
+    y, aux = fn(params, x)
+    y = jax.lax.with_sharding_constraint(
+        y, NamedSharding(mesh, P(tok_spec, None))
+    )
+    return y, aux

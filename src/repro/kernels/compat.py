@@ -1,0 +1,13 @@
+"""Pallas API compatibility shims shared by every kernel.
+
+Mirrors launch/mesh.py's role for the mesh API: version drift in the
+Pallas surface is absorbed here, once.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["CompilerParams"]
+
+# pallas renamed TPUCompilerParams -> CompilerParams across JAX versions
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

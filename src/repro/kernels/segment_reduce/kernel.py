@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import CompilerParams as _CompilerParams
+
 __all__ = ["segment_sum_sorted"]
 
 
@@ -81,7 +83,7 @@ def segment_sum_sorted(
             jax.ShapeDtypeStruct((nblocks, block_e, f), jnp.float32),
             jax.ShapeDtypeStruct((nblocks, block_e), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

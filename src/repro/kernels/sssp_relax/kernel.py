@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import CompilerParams as _CompilerParams
+
 __all__ = ["relax_sorted"]
 
 INF = jnp.inf
@@ -86,7 +88,7 @@ def relax_sorted(
             jax.ShapeDtypeStruct((nblocks, block_e), jnp.float32),
             jax.ShapeDtypeStruct((nblocks, block_e), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

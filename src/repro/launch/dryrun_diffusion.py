@@ -25,6 +25,7 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.core.diffuse import make_spmd_diffuse  # noqa: E402
 from repro.core.programs import sssp_program      # noqa: E402
+from repro.launch.mesh import mesh_context        # noqa: E402
 
 
 def build_specs(scale: int, n_cells: int, edge_factor: int = 16):
@@ -64,7 +65,7 @@ def main():
     prog = sssp_program(0, track_parents=False)
     fn = make_spmd_diffuse(mesh, prog, sgd, axis_name="cells",
                            max_local_iters=args.max_local_iters)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = jax.jit(fn).lower(sgd)
         compiled = lowered.compile()
     ma = compiled.memory_analysis()

@@ -8,7 +8,23 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh"]
+__all__ = ["make_production_mesh", "mesh_context"]
+
+
+def mesh_context(mesh):
+    """Enter ``mesh`` as the ambient mesh, across JAX versions.
+
+    Newer JAX exposes ``jax.set_mesh`` / ``jax.sharding.use_mesh``; older
+    versions (this container's 0.4.x) use the Mesh object itself as the
+    context manager.  Every call site that needs an ambient mesh goes
+    through here so the repo tracks the JAX API with one-line changes.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    return mesh  # jax.sharding.Mesh is itself a context manager
 
 
 def make_production_mesh(*, multi_pod: bool = False):

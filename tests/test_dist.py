@@ -31,7 +31,8 @@ def test_pipeline_two_stages_matches_sequential():
 
         fn = make_pipeline_fn(mesh, stage_fn, n_stages=2, n_micro=4,
                               axis="pod")
-        with jax.set_mesh(mesh):
+        from repro.launch.mesh import mesh_context
+        with mesh_context(mesh):
             ys = jax.jit(fn)(ws, xs)
         ref = jnp.stack([stage_fn(ws[1], stage_fn(ws[0], x)) for x in xs])
         assert np.allclose(np.asarray(ys), np.asarray(ref), atol=1e-5), (
@@ -72,7 +73,8 @@ def test_compressed_psum_single_shard_roundtrip():
 
         fn = shard_map(body, mesh=mesh, in_specs=(P("dp"), P("dp")),
                        out_specs=(P("dp"), P("dp")), check_rep=False)
-        with jax.set_mesh(mesh):
+        from repro.launch.mesh import mesh_context
+        with mesh_context(mesh):
             mean, err = jax.jit(fn)(g_global, jnp.zeros_like(g_global))
         true_mean = np.asarray(g_global).mean(0)
         got = np.asarray(mean)

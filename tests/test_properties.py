@@ -5,7 +5,10 @@ import heapq
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import build, sssp
 from repro.core.msg import segment_combine, segment_softmax

@@ -118,11 +118,13 @@ def test_ds_termination_fires_exactly_at_quiescence():
 def test_spmd_engine_matches_logical_engine():
     import jax
 
+    from repro.launch.mesh import mesh_context
+
     src, dst, w, n = make_graph_family("erdos_renyi", 120, seed=9)
     part = build(src, dst, n, w, n_cells=1)
     mesh = jax.make_mesh((1,), ("cells",))
     fn = make_spmd_diffuse(mesh, sssp_program(3), part.sg, axis_name="cells")
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         vs, st = fn(_sg_as_dict(part.sg))
     ref = sssp(part, 3)
     got = np.asarray(part.to_global_layout(vs["dist"]))[: part.n_real]
@@ -130,7 +132,16 @@ def test_spmd_engine_matches_logical_engine():
 
 
 def test_dynamic_graph_primitives_and_incremental_sssp():
+    """Dynamic-graph round trip through the session API, with the legacy
+    ``incremental_sssp`` wrapper checked for agreement along the way."""
+    from repro.core import DiffusionSession
+
     src, dst, w, n = make_graph_family("erdos_renyi", 120, seed=10)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=4,
+                                       edge_slack=0.3, node_slack=0.1)
+    sess.query("sssp", source=0)
+
+    # legacy path on an identical twin (same partition, same updates)
     part = build(src, dst, n, w, n_cells=4, edge_slack=0.3, node_slack=0.1)
     ns = NameServer(part)
     vstate, _ = diffuse(part, sssp_program(0))
@@ -141,8 +152,18 @@ def test_dynamic_graph_primitives_and_incremental_sssp():
                for i in rng.choice(len(src), 4, replace=False)]
     inserts = [(int(rng.integers(0, n)), int(rng.integers(0, n)),
                 float(1 + rng.random() * 5)) for _ in range(4)]
+
+    for u, v in deletes:
+        sess.delete_edge(u, v)
+    for u, v, x in inserts:
+        sess.add_edge(u, v, x)
+    sess.commit()
+    got = sess.query("sssp", source=0).values[:n]
+
     part, vstate, _ = incremental_sssp(part, ns, vstate, 0,
                                        inserts=inserts, deletes=deletes)
+    legacy = np.asarray(part.to_global_layout(vstate["dist"]))[: part.n_real]
+    assert _dist_close(got, legacy)
 
     edges = {}
     for s, d, x in zip(src, dst, w):
@@ -155,20 +176,31 @@ def test_dynamic_graph_primitives_and_incremental_sssp():
     d2 = np.array([e[1] for e in edges])
     w2 = np.array(list(edges.values()))
     dist_ev, _ = event_sssp(build_adjacency(s2, d2, w2, n), n, 0)
-    got = np.asarray(part.to_global_layout(vstate["dist"]))[: part.n_real]
     assert _dist_close(got, np.array(dist_ev))
 
-    sg, gid = vertex_add(part.sg, ns, shard=1)
-    sg = edge_add(sg, ns, 0, gid, 2.5)
+    # vertex primitives through the session + raw-primitive parity
+    gid = sess.add_vertex(shard=1)
+    sess.add_edge(0, gid, 2.5)
+    sess.commit()
+    assert np.isfinite(sess.query("sssp", source=0).values[gid])
+    pk = sess.peek(0, source=0)
+    assert np.isfinite(np.asarray(pk)).sum() > 0
+
+    sg, gid2 = vertex_add(part.sg, ns, shard=1)
+    sg = edge_add(sg, ns, 0, gid2, 2.5)
     part.sg = sg
     vstate, _ = diffuse(part, sssp_program(0))
-    s_, l_ = ns.resolve(gid)
+    s_, l_ = ns.resolve(gid2)
     assert np.isfinite(float(vstate["dist"][s_, l_]))
     pk = peek(part.sg, vstate["dist"], ns, 0)
     assert np.isfinite(np.asarray(pk)).sum() > 0
-    part.sg = vertex_delete(part.sg, ns, gid)
+    part.sg = vertex_delete(part.sg, ns, gid2)
     vstate, _ = diffuse(part, sssp_program(0))
     assert np.isinf(float(vstate["dist"][s_, l_]))
+
+    sess.delete_vertex(gid)
+    sess.commit()
+    assert np.isinf(sess.query("sssp", source=0).values[gid])
 
 
 def test_global_pagerank_matches_power_iteration():
