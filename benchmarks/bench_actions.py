@@ -1,8 +1,9 @@
 """§V.E recommendations, measured: how scheduling depth (the engine's
 ``max_local_iters`` — HPX's predicate-aware scheduling) and partition
-locality change dynamic work (Actions Normalized) and rounds.  Plus the
-update-path microbenchmark: batched UpdateBatch apply vs the per-edge
-primitive loop (DESIGN.md §2.4)."""
+locality change dynamic work (Actions Normalized) and rounds.  Plus two
+microbenchmarks: batched UpdateBatch apply vs the per-edge primitive loop
+(DESIGN.md §2.4), and the xla-vs-pallas edge-relaxation sweep over the
+blocked-CSR stream (DESIGN.md §2.6)."""
 
 from __future__ import annotations
 
@@ -110,6 +111,59 @@ def bench_updates(n_nodes: int = 1500, n_updates: int = 256, seed: int = 0,
                 speedup=t_seq / t_bat)
 
 
+def bench_edge_relax(edge_sizes=(1_000, 4_000, 16_000), n_cells: int = 4,
+                     seed: int = 0, repeats: int = 5):
+    """xla-vs-pallas edge sweep: one relaxation step (gather -> emit ->
+    segment-combine over the destination-sorted blocked-CSR stream) per
+    backend, across edge-stream sizes and both monoid classes — sssp (min:
+    xla takes the flat segment path) and pagerank (sum: xla takes the
+    blocked path, so the block_e flop overhead of bitwise parity is
+    visible here).  The pallas numbers on CPU measure *interpret mode*
+    (the CI path) — on TPU the same kernel compiles; the bench exists so
+    the perf trajectory of both paths accumulates per PR.
+
+    Returns one row per (prog, edges, backend): us_per_call + us/kedge.
+    """
+    import jax
+    import numpy as np
+
+    from repro.core.diffuse import _sg_as_dict
+    from repro.core.programs import pagerank_program, sssp_program
+    from repro.core.relax import make_relax
+
+    progs = [("sssp", sssp_program(0)), ("pagerank", pagerank_program())]
+    rows = []
+    for e_target in edge_sizes:
+        n = max(64, e_target // 8)
+        rng = np.random.default_rng(seed)
+        src = rng.integers(0, n, e_target).astype(np.int32)
+        dst = rng.integers(0, n, e_target).astype(np.int32)
+        w = (1 + rng.random(e_target)).astype(np.float32)
+        part = build(src, dst, n, w, n_cells=n_cells)
+        sg = part.sg
+        sgd = _sg_as_dict(sg)
+        for prog_name, prog in progs:
+            vstate, active = prog.init(sg)
+            for backend in ("xla", "pallas"):
+                relax = make_relax(prog, sg.n_shards, sg.n_per_shard,
+                                   sg.csr_block, backend)
+                step = jax.jit(jax.vmap(relax))
+                jax.block_until_ready(step(vstate, active, sgd))   # warm
+                ts = []
+                for _ in range(repeats):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(step(vstate, active, sgd))
+                    ts.append(time.perf_counter() - t0)
+                sec = min(ts)
+                rows.append(dict(
+                    bench="edge_relax", prog=prog_name, backend=backend,
+                    edges=int(e_target), n_cells=n_cells,
+                    us_per_call=sec * 1e6,
+                    us_per_kedge=sec * 1e9 / e_target,
+                ))
+    return rows
+
+
 def main():
     rows = run()
     print(f"{'strategy':10s} {'mli':>4s} {'act/E':>8s} {'rounds':>6s} "
@@ -124,6 +178,12 @@ def main():
           f"batched {u['batched_s']*1e3:8.1f} ms   "
           f"speedup {u['speedup']:6.1f}x")
     rows.append(u)
+    print(f"\n{'prog':>9s} {'edges':>8s} {'backend':>8s} "
+          f"{'us/call':>10s} {'us/kedge':>9s}")
+    for r in bench_edge_relax():
+        print(f"{r['prog']:>9s} {r['edges']:8d} {r['backend']:>8s} "
+              f"{r['us_per_call']:10.1f} {r['us_per_kedge']:9.2f}")
+        rows.append(r)
     return rows
 
 

@@ -1,21 +1,43 @@
 """Benchmark driver — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call for the timed
-benches; derived = the paper-comparable metric).
+benches; derived = the paper-comparable metric) and writes the same
+records, plus the kernel-backend tag, to ``BENCH_pr2.json`` at the repo
+root so the perf trajectory accumulates machine-readably across PRs.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
+# runnable as `python benchmarks/run.py` (CI smoke) and `-m benchmarks.run`
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-def _csv(name, us, derived):
+_RECORDS: list[dict] = []
+
+
+_MODE = "full"
+
+
+def _csv(name, us, derived, backend: str | None = None):
+    # backend is only meaningful for benches that exercise the relax
+    # kernels; everything else records null rather than asserting "xla"
     print(f"{name},{us:.1f},{derived}")
+    _RECORDS.append(
+        dict(name=name, us_per_call=round(us, 3), derived=derived,
+             backend=backend, mode=_MODE)
+    )
 
 
 def main() -> None:
+    global _MODE
     quick = "--quick" in sys.argv
+    # quick (CI smoke) records are tagged so they are never mistaken for
+    # the full-size trajectory numbers when the JSON is diffed across PRs
+    _MODE = "quick" if quick else "full"
 
     # Figures 1-5: SSSP scaling (time + actions normalized per family)
     from benchmarks import bench_sssp_scaling
@@ -61,6 +83,16 @@ def main() -> None:
             f"actions_norm={r['actions_norm']:.2f};rounds={r['rounds']}",
         )
 
+    # DESIGN.md §2.6: xla-vs-pallas relaxation sweep over the CSR stream
+    sizes = (1_000, 4_000) if quick else (1_000, 4_000, 16_000)
+    for r in bench_actions.bench_edge_relax(edge_sizes=sizes):
+        _csv(
+            f"edge_relax/{r['prog']}/{r['backend']}/e{r['edges']}",
+            r["us_per_call"],
+            f"us_per_kedge={r['us_per_kedge']:.2f};cells={r['n_cells']}",
+            backend=r["backend"],
+        )
+
     # Roofline table from any dry-run artifacts present
     from benchmarks import roofline
     rows = roofline.table()
@@ -72,6 +104,15 @@ def main() -> None:
             f"mfu={mfu*100:.1f}%" if mfu else
             f"bottleneck={r['bottleneck']};mfu=n/a",
         )
+
+    # quick (CI smoke) runs write a sibling file so they never clobber the
+    # committed full-size trajectory records
+    fname = "BENCH_pr2.quick.json" if quick else "BENCH_pr2.json"
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "..", fname)
+    with open(os.path.abspath(out), "w") as f:
+        json.dump(_RECORDS, f, indent=1)
+    print(f"# wrote {len(_RECORDS)} records to {fname}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -65,38 +65,44 @@ def run(
     value_key: str,
     max_local_iters: int = 64,
     max_rounds: int = 10_000,
+    backend: str = "xla",
 ) -> Result:
     sess = DiffusionSession(part, max_local_iters=max_local_iters,
-                            max_rounds=max_rounds)
+                            max_rounds=max_rounds, backend=backend)
     return _trim(part, sess.query(prog, value_key=value_key))
 
 
 def _named(part: Partitioned, name: str, max_local_iters: int,
-           **kwargs) -> Result:
-    sess = DiffusionSession(part, max_local_iters=max_local_iters)
+           backend: str = "xla", **kwargs) -> Result:
+    sess = DiffusionSession(part, max_local_iters=max_local_iters,
+                            backend=backend)
     return _trim(part, sess.query(name, **kwargs))
 
 
 def sssp(part: Partitioned, source: int, track_parents: bool = True,
-         max_local_iters: int = 64) -> Result:
-    return _named(part, "sssp", max_local_iters, source=source,
+         max_local_iters: int = 64, backend: str = "xla") -> Result:
+    return _named(part, "sssp", max_local_iters, backend, source=source,
                   track_parents=track_parents)
 
 
-def bfs(part: Partitioned, source: int, max_local_iters: int = 64) -> Result:
-    return _named(part, "bfs", max_local_iters, source=source)
+def bfs(part: Partitioned, source: int, max_local_iters: int = 64,
+        backend: str = "xla") -> Result:
+    return _named(part, "bfs", max_local_iters, backend, source=source)
 
 
-def connected_components(part: Partitioned, max_local_iters: int = 64) -> Result:
-    return _named(part, "cc", max_local_iters)
+def connected_components(part: Partitioned, max_local_iters: int = 64,
+                         backend: str = "xla") -> Result:
+    return _named(part, "cc", max_local_iters, backend)
 
 
 def personalized_pagerank(part: Partitioned, source: int, alpha: float = 0.15,
-                          eps: float = 1e-5, max_local_iters: int = 64) -> Result:
-    return _named(part, "ppr", max_local_iters, source=source, alpha=alpha,
-                  eps=eps)
+                          eps: float = 1e-5, max_local_iters: int = 64,
+                          backend: str = "xla") -> Result:
+    return _named(part, "ppr", max_local_iters, backend, source=source,
+                  alpha=alpha, eps=eps)
 
 
 def pagerank(part: Partitioned, alpha: float = 0.15, eps: float = 1e-7,
-             max_local_iters: int = 64) -> Result:
-    return _named(part, "pagerank", max_local_iters, alpha=alpha, eps=eps)
+             max_local_iters: int = 64, backend: str = "xla") -> Result:
+    return _named(part, "pagerank", max_local_iters, backend, alpha=alpha,
+                  eps=eps)

@@ -10,6 +10,12 @@ TPU-native realization of the paper's diffusive computation (DESIGN.md §2):
   accumulate into per-destination **outboxes**, coalesced with the program's
   combine monoid (min for SSSP — duplicate relaxations merge in the mailbox,
   the TPU analogue of the paper's many-small-messages traffic).
+* The relaxation step itself (gather ``vstate[src]`` → ``prog.emit`` →
+  segment-combine by destination) is delegated to a pluggable backend
+  (``backend="xla" | "pallas"`` — see relax.py): both consume the graph's
+  destination-sorted blocked-CSR edge stream and return the same combined
+  per-destination message table bit for bit, so the engine's while-loop
+  structure is backend-independent.
 * At the round boundary the outboxes are exchanged (``all_to_all`` on a real
   mesh; an axis-reduce in the single-device logical engine) and receivers run
   the program's predicate to decide whether to (re)activate — Code Listing
@@ -31,10 +37,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .graph import ShardedGraph
-from .msg import identity_for, segment_combine
+from .graph import DEFAULT_EDGE_BLOCK, ShardedGraph
+from .msg import identity_for
 from .partition import Partitioned
 from .programs import VertexProgram
+from .relax import make_relax
 from .termination import quiescent
 
 __all__ = [
@@ -75,52 +82,31 @@ def _gate(prog, vstate, active, threshold):
     return active & (prog.priority(vstate) <= threshold)
 
 
-def _local_iter_shard(prog: VertexProgram, np_, s_, my_shard, sg_s, st,
+def _local_iter_shard(prog: VertexProgram, np_, s_, my_shard, sg_s, st, relax,
                       threshold=None):
-    """One local relaxation sub-iteration, per-shard view (vmapped over S)."""
+    """One local relaxation sub-iteration, per-shard view (vmapped over S).
+
+    The gather→emit→segment-combine step is delegated to ``relax`` (built by
+    :func:`repro.core.relax.make_relax`): it maps this cell's vertex block +
+    destination-sorted CSR edge stream to the combined [S, Np] message table.
+    Row ``my_shard`` is applied as the local inbox inside this sub-iteration;
+    the other rows merge into the cross-cell outbox.
+    """
     (vstate, active, outbox, outbox_has, outbox_pay) = st
-    src_local = sg_s["src_local"]
-    edge_ok = sg_s["edge_ok"]
     ident = identity_for(prog.combine, prog.msg_dtype)
 
     senders = _gate(prog, vstate, active, threshold)
-    src_state = jax.tree_util.tree_map(lambda a: a[src_local], vstate)
-    send_edge = senders[src_local] & edge_ok
-    src_gid = sg_s["gid"][src_local]
-    msg = prog.emit(src_state, sg_s["weight"], src_gid, sg_s["dst_gid"])
-    msg = jnp.where(send_edge, msg, ident).astype(prog.msg_dtype)
+    table, cnt, pay = relax(vstate, senders, sg_s)
+    mine = (jnp.arange(s_, dtype=jnp.int32) == my_shard)[:, None]   # [S, 1]
 
-    pay = None
-    if prog.with_payload:
-        pay = prog.payload(src_state, src_gid)
+    inbox = jnp.take(table, my_shard, axis=0)
+    has_local = jnp.take(cnt, my_shard, axis=0) > 0
+    pay_in = jnp.take(pay, my_shard, axis=0) if prog.with_payload else None
 
-    is_local = sg_s["dst_shard"] == my_shard
-    lmask = send_edge & is_local
-    # out-of-range segment ids are dropped by XLA scatter => masking for free
-    seg_local = jnp.where(lmask, sg_s["dst_local"], np_)
-    inbox = segment_combine(msg, seg_local, np_, prog.combine)
-    has_local = (
-        segment_combine(lmask.astype(jnp.int32), seg_local, np_, "sum") > 0
-    )
-    pay_in = None
+    contrib = jnp.where(mine, ident, table)
+    contrib_has = (cnt > 0) & ~mine
     if prog.with_payload:
-        win = lmask & (msg == inbox[sg_s["dst_local"]])
-        pay_in = segment_combine(
-            jnp.where(win, pay, -1), seg_local, np_, "max"
-        )
-
-    rmask = send_edge & ~is_local
-    rseg = jnp.where(rmask, sg_s["dst_shard"] * np_ + sg_s["dst_local"], s_ * np_)
-    contrib = segment_combine(msg, rseg, s_ * np_, prog.combine).reshape(s_, np_)
-    contrib_has = (
-        segment_combine(rmask.astype(jnp.int32), rseg, s_ * np_, "sum") > 0
-    ).reshape(s_, np_)
-    if prog.with_payload:
-        contrib_flat = contrib.reshape(-1)
-        win_r = rmask & (msg == contrib_flat[rseg])
-        pay_contrib = segment_combine(
-            jnp.where(win_r, pay, -1), rseg, s_ * np_, "max"
-        ).reshape(s_, np_)
+        pay_contrib = jnp.where(mine, -1, pay)
         take_new = contrib_has & (
             (contrib < outbox) if prog.combine == "min" else contrib_has
         )
@@ -134,42 +120,49 @@ def _local_iter_shard(prog: VertexProgram, np_, s_, my_shard, sg_s, st,
     )
     activated = activated | (active & ~senders)   # withheld stay active
 
+    n_send = jnp.sum(cnt)                          # sending edges (actions)
     counts = {
-        "actions": jnp.sum(send_edge.astype(jnp.int32)),
-        "remote": jnp.sum(rmask.astype(jnp.int32)),
+        "actions": n_send,
+        "remote": n_send - jnp.sum(jnp.where(mine, cnt, 0)),
     }
     return (vstate, activated, outbox, outbox_has, outbox_pay), counts
 
 
 def _sg_as_dict(sg: ShardedGraph):
-    return {
-        "src_local": sg.src_local,
-        "dst_shard": sg.dst_shard,
-        "dst_local": sg.dst_local,
-        "dst_gid": sg.dst_gid,
-        "weight": sg.weight,
-        "edge_ok": sg.edge_ok,
+    """ShardedGraph -> the engine-facing array dict: the per-cell vertex
+    block (``node_ok``/``gid``/``out_degree``) plus the destination-sorted
+    blocked-CSR streams the relax backends consume (built on demand for
+    graphs with an invalidated CSR view).  The unsorted edge arrays stay
+    out — the engines never read them, and under shard_map they would be
+    real per-device inputs doubling edge-stream transfer/residency."""
+    if sg.csr_perm is None:
+        sg = sg.with_csr()
+    d = {
         "node_ok": sg.node_ok,
         "gid": sg.gid,
         "out_degree": sg.out_degree,
     }
+    d.update(sg.csr_view())
+    return d
 
 
 @partial(jax.jit, static_argnames=("prog", "max_local_iters", "max_rounds",
-                                   "delta"))
+                                   "delta", "backend"))
 def _diffuse_jit(sg: ShardedGraph, prog: VertexProgram, max_local_iters: int,
-                 max_rounds: int, delta=None):
+                 max_rounds: int, delta=None, backend: str = "xla"):
     vstate0, active0 = prog.init(sg)
     return _run_rounds(sg, prog, vstate0, active0, max_local_iters,
-                       max_rounds, delta)
+                       max_rounds, delta, backend)
 
 
 @partial(jax.jit, static_argnames=("prog", "max_local_iters", "max_rounds",
-                                   "delta"))
+                                   "delta", "backend"))
 def _run_rounds(sg: ShardedGraph, prog: VertexProgram, vstate0, active0,
-                max_local_iters: int, max_rounds: int, delta=None):
+                max_local_iters: int, max_rounds: int, delta=None,
+                backend: str = "xla"):
     S, Np = sg.n_shards, sg.n_per_shard
     sgd = _sg_as_dict(sg)
+    relax = make_relax(prog, S, Np, sg.csr_block, backend)
     ident = identity_for(prog.combine, prog.msg_dtype)
 
     outbox0 = jnp.full((S, S, Np), ident, prog.msg_dtype)
@@ -192,7 +185,7 @@ def _run_rounds(sg: ShardedGraph, prog: VertexProgram, vstate0, active0,
         st, stats, liters, thr = c
         local_iter = jax.vmap(
             lambda i, g, s: _local_iter_shard(
-                prog, Np, S, i, g, s, thr if use_gate else None
+                prog, Np, S, i, g, s, relax, thr if use_gate else None
             ),
             in_axes=(0, 0, 0),
         )
@@ -273,16 +266,18 @@ def diffuse(
     max_local_iters: int = 64,
     max_rounds: int = 10_000,
     delta=None,
+    backend: str = "xla",
 ):
     """Run a diffusive computation to quiescence.
 
     Returns (vertex_state pytree in [S, Np] layout, DiffuseStats).
     Equivalent of the paper's ``hpx_diffuse`` (Code Listing 3): the program
     carries vertex_func/predicate; the terminator is the engine's built-in
-    counting quiescence detector.
+    counting quiescence detector.  ``backend`` selects the relaxation
+    kernel (see relax.py); both choices reach the same fixed point bitwise.
     """
     sg = part.sg if isinstance(part, Partitioned) else part
-    return _diffuse_jit(sg, prog, max_local_iters, max_rounds, delta)
+    return _diffuse_jit(sg, prog, max_local_iters, max_rounds, delta, backend)
 
 
 def diffuse_from(
@@ -292,14 +287,19 @@ def diffuse_from(
     active,
     max_local_iters: int = 64,
     max_rounds: int = 10_000,
+    delta=None,
+    backend: str = "xla",
 ):
     """Resume / continue a diffusion from an explicit (state, frontier).
 
     Used by the dynamic-graph repair path (incremental SSSP) — the paper's
     point that diffusive computations restart from *within* the data rather
-    than from a central coordinator."""
+    than from a central coordinator.  ``delta`` applies the same
+    delta-stepping priority gate as :func:`diffuse`, so a gated query's
+    incremental repair runs gated too."""
     sg = part.sg if isinstance(part, Partitioned) else part
-    return _run_rounds(sg, prog, vstate, active, max_local_iters, max_rounds)
+    return _run_rounds(sg, prog, vstate, active, max_local_iters, max_rounds,
+                       delta, backend)
 
 
 # --------------------------------------------------------------------------
@@ -307,16 +307,21 @@ def diffuse_from(
 # --------------------------------------------------------------------------
 
 def diffuse_spmd_step(prog: VertexProgram, axis_name: str, n_shards: int,
-                      n_per_shard: int, max_local_iters: int, max_rounds: int):
+                      n_per_shard: int, max_local_iters: int, max_rounds: int,
+                      block_e: int = DEFAULT_EDGE_BLOCK,
+                      backend: str = "xla"):
     """Build the per-device diffusion function for use inside shard_map.
 
     The returned fn takes per-device blocks of the ShardedGraph arrays
-    (leading dim 1 = this device's shard) and runs rounds of
-    (local relax -> all_to_all operon exchange -> receive) until a psum'd
-    quiescence check fires.  The local while_loop has device-dependent trip
-    count — cells genuinely run ahead of each other between exchanges.
+    (leading dim 1 = this device's shard, including the ``csr_*`` sorted
+    edge streams) and runs rounds of (local relax -> all_to_all operon
+    exchange -> receive) until a psum'd quiescence check fires.  The local
+    while_loop has device-dependent trip count — cells genuinely run ahead
+    of each other between exchanges.  The relaxation step dispatches to the
+    same ``backend`` implementations as the logical engine.
     """
     S, Np = n_shards, n_per_shard
+    relax = make_relax(prog, S, Np, block_e, backend)
     ident_f = lambda: identity_for(prog.combine, prog.msg_dtype)
 
     def per_device(sgd):
@@ -341,7 +346,8 @@ def diffuse_spmd_step(prog: VertexProgram, axis_name: str, n_shards: int,
 
         def local_body(c):
             st, stats, liters = c
-            st, counts = _local_iter_shard(prog, Np, S, my_shard, sg_s, st)
+            st, counts = _local_iter_shard(prog, Np, S, my_shard, sg_s, st,
+                                           relax)
             stats = stats._replace(
                 local_iters=stats.local_iters + 1,
                 actions=stats.actions + counts["actions"],
@@ -415,11 +421,15 @@ def diffuse_spmd_step(prog: VertexProgram, axis_name: str, n_shards: int,
 
 def make_spmd_diffuse(mesh, prog: VertexProgram, sg_template,
                       axis_name: str = "cells", max_local_iters: int = 64,
-                      max_rounds: int = 10_000):
+                      max_rounds: int = 10_000, backend: str = "xla",
+                      block_e: int | None = None):
     """Wrap the per-device engine in shard_map over ``axis_name``.
 
     ``sg_template`` may be a ShardedGraph or a dict of (ShapeDtypeStruct)
-    arrays matching :func:`_sg_as_dict` — the latter is what the dry-run uses.
+    arrays matching :func:`_sg_as_dict` — the latter is what the dry-run
+    uses; dict templates must carry the ``csr_*`` stream fields, padded to
+    a multiple of ``block_e`` (pass it when the streams were built with a
+    non-default :meth:`ShardedGraph.with_csr` block).
     Returns a function (sgd dict) -> (vertex_state [S, Np] layout, stats).
     """
     import types as _types
@@ -427,16 +437,23 @@ def make_spmd_diffuse(mesh, prog: VertexProgram, sg_template,
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
 
-    sgd_t = (
-        _sg_as_dict(sg_template)
-        if isinstance(sg_template, ShardedGraph)
-        else dict(sg_template)
-    )
+    if isinstance(sg_template, ShardedGraph):
+        sgd_t = _sg_as_dict(sg_template)
+        block_e = block_e or sg_template.csr_block
+    else:
+        sgd_t = dict(sg_template)
+        block_e = block_e or DEFAULT_EDGE_BLOCK
+    if sgd_t["csr_key"].shape[-1] % block_e:
+        raise ValueError(
+            f"csr streams of width {sgd_t['csr_key'].shape[-1]} are not a "
+            f"multiple of block_e={block_e}; pass the block the template "
+            f"was padded with")
     S = sgd_t["gid"].shape[0]
     Np = sgd_t["gid"].shape[1]
 
     per_device = diffuse_spmd_step(
-        prog, axis_name, S, Np, max_local_iters, max_rounds
+        prog, axis_name, S, Np, max_local_iters, max_rounds,
+        block_e=block_e, backend=backend,
     )
 
     # Derive the vertex-state pytree structure from prog.init (shape-only).

@@ -116,7 +116,7 @@ def vertex_delete(sg: ShardedGraph, ns: NameServer, gid: int):
         sg, edge_ok=sg.edge_ok & ~dead_in, out_degree=deg_fix
     )
     ns.release(gid)
-    return sg
+    return sg.invalidate_csr()
 
 
 def vertex_touch(sg: ShardedGraph, ns: NameServer, gids):
@@ -147,7 +147,7 @@ def edge_add(sg: ShardedGraph, ns: NameServer, u: int, v: int, w: float):
     )
     if not bool(ok):
         raise RuntimeError(f"compute cell {su} has no free edge slots")
-    return sg
+    return sg.invalidate_csr()
 
 
 def edge_delete(sg: ShardedGraph, ns: NameServer, u: int, v: int):
@@ -163,7 +163,7 @@ def edge_delete(sg: ShardedGraph, ns: NameServer, u: int, v: int):
         ),
         out_degree=sg.out_degree.at[su, lu].add(-ok.astype(jnp.int32)),
     )
-    return sg
+    return sg.invalidate_csr()
 
 
 def edge_touch(sg: ShardedGraph, ns: NameServer, u: int):
@@ -190,7 +190,6 @@ def peek(sg: ShardedGraph, values: jnp.ndarray, ns: NameServer, u: int):
 def _invalidate_subtrees(part: Partitioned, ns: NameServer, vstate, root_gids):
     """Mark every vertex whose shortest-path tree passes through an
     invalidated parent edge; pointer-chase through the global namespace."""
-    sg = part.sg
     owner = jnp.asarray(ns.owner)
     local = jnp.asarray(ns.local)
     parent = vstate["parent"]           # [S, Np] global parent gid, -1 = none

@@ -22,7 +22,42 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["Graph", "ShardedGraph", "from_edges"]
+__all__ = ["Graph", "ShardedGraph", "from_edges", "DEFAULT_EDGE_BLOCK"]
+
+# Edge-block width of the blocked-CSR view.  128 matches the TPU lane width
+# (and segment_reduce's dense-rank tile); the Pallas edge_relax kernel and
+# its XLA reference both combine within blocks of exactly this many edges.
+DEFAULT_EDGE_BLOCK = 128
+
+
+def build_csr(dst_shard, dst_local, edge_ok, n_shards: int, n_per_shard: int,
+              block: int):
+    """Destination-sorted blocked-CSR permutation of per-shard edge slots.
+
+    Sort key per live edge is the flat destination ``dst_shard * Np +
+    dst_local`` (so one combine pass produces the whole [S, Np] message
+    table); dead/padding slots sort last.  Returns
+
+    * ``perm``  [S, Eb] int32 — sorted position -> original edge slot,
+    * ``key``   [S, Eb] int32 — sorted destination key, ``-1`` on dead and
+      padding positions (always trailing),
+
+    with ``Eb`` = edge capacity rounded up to a multiple of ``block`` so
+    every kernel block is fully resident.  Pure jnp — safe inside jit and
+    cheap enough to rerun on every topology change.
+    """
+    ep = dst_shard.shape[-1]
+    eb = -(-ep // block) * block
+    sentinel = n_shards * n_per_shard
+    key = jnp.where(edge_ok, dst_shard * n_per_shard + dst_local, sentinel)
+    perm = jnp.argsort(key, axis=-1, stable=True).astype(jnp.int32)
+    skey = jnp.take_along_axis(key, perm, axis=-1)
+    skey = jnp.where(skey >= sentinel, -1, skey).astype(jnp.int32)
+    pad = eb - ep
+    if pad:
+        perm = jnp.pad(perm, ((0, 0), (0, pad)))
+        skey = jnp.pad(skey, ((0, 0), (0, pad)), constant_values=-1)
+    return perm, skey
 
 
 @partial(
@@ -106,8 +141,10 @@ def from_edges(
         "node_ok",
         "gid",
         "out_degree",
+        "csr_perm",
+        "csr_key",
     ],
-    meta_fields=["n_shards", "n_per_shard", "n_nodes"],
+    meta_fields=["n_shards", "n_per_shard", "n_nodes", "csr_block"],
 )
 @dataclasses.dataclass(frozen=True)
 class ShardedGraph:
@@ -118,6 +155,15 @@ class ShardedGraph:
     edges.  ``gid`` maps (shard, local) -> original vertex id; ``dst_gid`` is
     the global id of each edge's destination (used for payload messages such
     as parent pointers).
+
+    ``csr_perm``/``csr_key`` are the blocked-CSR view (:func:`build_csr`):
+    the per-shard edge stream sorted by destination ``(dst_shard,
+    dst_local)`` and padded to a ``csr_block`` multiple — the layout the
+    relaxation kernels assume.  Built at partition time and kept current
+    by ``UpdateBatch.apply`` (eager :meth:`with_csr`); the sequential
+    per-edge primitives instead :meth:`invalidate_csr` and the engines
+    rebuild lazily at the next diffusion, so ``csr_view()`` raises on a
+    graph mutated that way until ``with_csr()`` is called.
     """
 
     src_local: jnp.ndarray   # [S, Ep] int32 — local index of the edge source
@@ -132,10 +178,50 @@ class ShardedGraph:
     n_shards: int
     n_per_shard: int
     n_nodes: int             # number of real (unpadded) vertices
+    csr_perm: jnp.ndarray | None = None  # [S, Eb] int32 sorted pos -> slot
+    csr_key: jnp.ndarray | None = None   # [S, Eb] int32 sorted dst key | -1
+    csr_block: int = DEFAULT_EDGE_BLOCK
 
     @property
     def edges_per_shard(self) -> int:
         return int(self.src_local.shape[1])
+
+    def with_csr(self, block: int | None = None) -> "ShardedGraph":
+        """Rebuild the blocked-CSR view from the current topology."""
+        block = block or self.csr_block
+        perm, key = build_csr(self.dst_shard, self.dst_local, self.edge_ok,
+                              self.n_shards, self.n_per_shard, block)
+        return dataclasses.replace(
+            self, csr_perm=perm, csr_key=key, csr_block=block
+        )
+
+    def invalidate_csr(self) -> "ShardedGraph":
+        """Drop the CSR view without paying the re-sort.  Used by the
+        sequential per-edge primitives so a k-update loop defers the sort
+        to the next diffusion (via ``_sg_as_dict``) instead of sorting k
+        times.  The rebuild happens in-trace on a local copy — an
+        invalidated graph re-sorts on *every* diffusion until the caller
+        persists it with :meth:`with_csr`; the batched
+        ``UpdateBatch.apply`` rebuilds eagerly so committed graphs never
+        carry that recurring cost."""
+        return dataclasses.replace(self, csr_perm=None, csr_key=None)
+
+    def csr_view(self) -> dict:
+        """The destination-sorted edge streams the relax backends consume.
+
+        [S, Eb] gathers of the edge fields through ``csr_perm``; positions
+        with ``csr_key == -1`` (dead/padding) carry garbage and must be
+        masked by the key.
+        """
+        if self.csr_perm is None:
+            raise ValueError("ShardedGraph has no CSR view; call with_csr()")
+        take = lambda a: jnp.take_along_axis(a, self.csr_perm, axis=-1)
+        return {
+            "csr_key": self.csr_key,
+            "csr_src": take(self.src_local),
+            "csr_weight": take(self.weight),
+            "csr_dst_gid": take(self.dst_gid),
+        }
 
     def n_edges(self) -> jnp.ndarray:
         return jnp.sum(self.edge_ok.astype(jnp.int64))

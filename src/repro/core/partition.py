@@ -177,5 +177,5 @@ def partition(
         n_shards=S,
         n_per_shard=n_per,
         n_nodes=n,
-    )
+    ).with_csr()    # blocked-CSR view built once here; updates refresh it
     return Partitioned(sg, owner, local, n_real=int(nok.sum()))

@@ -1,0 +1,71 @@
+"""Relaxation backends — the engine's gather→emit→segment-combine step as a
+pluggable interface.
+
+The diffusive engines (logical sharded and SPMD shard_map — diffuse.py) run
+the same bulk-asynchronous while-loop structure; what differs per backend is
+only how one cell turns its vertex block + destination-sorted edge stream
+into the combined per-destination message table:
+
+* ``"xla"``     — segment ops over the sorted stream (flat for the
+  order-free min/max monoids, blocked reference for sum); the default and
+  the CPU/GPU production path.
+* ``"pallas"``  — the fused ``kernels/edge_relax`` kernel: vertex block
+  pinned in VMEM across the edge sweep, dense-rank in-block combine
+  (interpret mode off-TPU, so CI exercises the same code path).
+
+Both backends return bitwise-identical tables (see kernels/edge_relax), so
+``backend=`` is a pure execution choice — every future perf kernel
+(delta-bucketed relaxation, rhizome splitting of heavy vertices) slots in
+as another entry here without touching engine or program code.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+__all__ = ["RELAX_BACKENDS", "make_relax"]
+
+# the one registry of relaxation backends; kernels/edge_relax re-exports it
+RELAX_BACKENDS = ("xla", "pallas")
+
+
+def make_relax(prog, n_shards: int, n_per_shard: int, block_e: int,
+               backend: str = "xla") -> Callable:
+    """Build the per-cell relaxation step for ``prog`` on ``backend``.
+
+    The returned function maps one cell's (vstate [Np] pytree, senders
+    [Np] bool, sg_s dict with the ``csr_*`` sorted streams) to
+
+        table [S, Np]  combined messages per destination (identity = none)
+        cnt   [S, Np]  int32 sending-edge count per destination
+        pay   [S, Np]  int32 argmin payload, or None
+
+    over the flat destination key space — row ``my_shard`` is the local
+    inbox, the other rows are outbox contributions.  vmap it over cells in
+    the logical engine; call it per device under shard_map in SPMD.
+    """
+    if backend not in RELAX_BACKENDS:
+        raise ValueError(
+            f"backend must be one of {RELAX_BACKENDS}, got {backend!r}")
+    # deferred import: kernels ←→ core import cycles resolve at call time
+    from ..kernels.edge_relax.ops import edge_relax
+
+    n_keys = n_shards * n_per_shard
+    interpret = backend == "pallas" and jax.default_backend() != "tpu"
+
+    def relax(vstate, senders, sg_s):
+        table, cnt, pay = edge_relax(
+            prog, vstate, senders, sg_s["gid"],
+            sg_s["csr_key"], sg_s["csr_src"], sg_s["csr_weight"],
+            sg_s["csr_dst_gid"],
+            n_keys=n_keys, block_e=block_e, backend=backend,
+            interpret=interpret,
+        )
+        table = table.reshape(n_shards, n_per_shard)
+        cnt = cnt.reshape(n_shards, n_per_shard)
+        pay = pay.reshape(n_shards, n_per_shard) if pay is not None else None
+        return table, cnt, pay
+
+    return relax

@@ -34,6 +34,10 @@ logical engine (default, any program); ``spmd`` shard_maps one compute
 cell per mesh device (any program, needs >= n_cells devices); ``event``
 is the message-at-a-time host oracle with real Dijkstra–Scholten
 termination (programs that register an ``event_fn``).
+
+Orthogonally, ``backend="xla" | "pallas"`` (DESIGN.md §2.6) picks the
+relaxation-kernel implementation inside the sharded/spmd engines; both
+produce bitwise-identical fixed points, so it is a pure execution choice.
 """
 
 from __future__ import annotations
@@ -49,6 +53,7 @@ from .diffuse import _sg_as_dict, diffuse, diffuse_from, make_spmd_diffuse
 from .dynamic import NameServer, _invalidate_subtrees
 from .graph import from_edges
 from .partition import Partitioned, partition
+from .relax import RELAX_BACKENDS
 from .programs import (
     VertexProgram,
     bfs_program,
@@ -151,6 +156,8 @@ class _Entry:
     vstate: Any
     stats: Any
     engine: str
+    backend: str = "xla"
+    delta: float | None = None   # delta-stepping gate, kept across repairs
 
 
 class CommitInfo(NamedTuple):
@@ -162,14 +169,18 @@ class DiffusionSession:
     """Stateful front door: build once, query / mutate / commit forever."""
 
     def __init__(self, part: Partitioned, ns: NameServer | None = None,
-                 engine: str = "sharded", max_local_iters: int = 64,
-                 max_rounds: int = 10_000):
+                 engine: str = "sharded", backend: str = "xla",
+                 max_local_iters: int = 64, max_rounds: int = 10_000):
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, "
                              f"got {engine!r}")
+        if backend not in RELAX_BACKENDS:
+            raise ValueError(f"backend must be one of {RELAX_BACKENDS}, "
+                             f"got {backend!r}")
         self.part = part
         self._ns = ns                # lazily built: queries don't need one
         self.engine = engine
+        self.backend = backend
         self.max_local_iters = max_local_iters
         self.max_rounds = max_rounds
         self._cache: dict[tuple, _Entry] = {}
@@ -257,11 +268,21 @@ class DiffusionSession:
     # static queries
     # ------------------------------------------------------------------
 
-    def _key(self, name: str, engine: str, kwargs: dict) -> tuple:
-        return (name, engine, tuple(sorted(kwargs.items())))
+    def _key(self, name: str, engine: str, kwargs: dict,
+             backend: str = "xla", delta: float | None = None) -> tuple:
+        key = (name, engine, tuple(sorted(kwargs.items())))
+        # default (xla, ungated) keys stay in the PR-1 shape so
+        # adopt()/peek() callers keep working; variants get suffixed keys.
+        if backend != "xla":
+            key = key + (backend,)
+        if delta is not None:
+            key = key + (("delta", delta),)
+        return key
 
-    def query(self, prog, engine: str | None = None, refresh: bool = False,
-              value_key: str | None = None, **kwargs) -> Result:
+    def query(self, prog, engine: str | None = None,
+              backend: str | None = None, refresh: bool = False,
+              value_key: str | None = None, delta: float | None = None,
+              **kwargs) -> Result:
         """Run (or serve from cache) a named or ad-hoc vertex program.
 
         ``prog`` is a registry name ("sssp", "cc", "ppr", "pagerank",
@@ -271,11 +292,29 @@ class DiffusionSession:
         ``commit()`` calls; ``event`` (the host oracle) and custom
         ``run_fn`` queries recompute on every call — they always see the
         current graph and hold no device state to repair.
+
+        ``backend`` picks the relaxation kernel ("xla" | "pallas"; both
+        bitwise-identical); ``delta`` enables the delta-stepping priority
+        gate for programs with a priority, and is remembered so commit()'s
+        incremental repair re-diffuses under the same gate.
         """
         engine = engine or self.engine
+        explicit_backend = backend
+        backend = backend or self.backend
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, "
                              f"got {engine!r}")
+        if backend not in RELAX_BACKENDS:
+            raise ValueError(f"backend must be one of {RELAX_BACKENDS}, "
+                             f"got {backend!r}")
+        if delta is not None and engine != "sharded":
+            raise ValueError(
+                "delta-stepping is only gated on engine='sharded'; the "
+                f"{engine!r} engine would silently run ungated")
+        if explicit_backend is not None and engine == "event":
+            raise ValueError(
+                "the event oracle runs on the host and has no relax "
+                "backend; backend= would be silently ignored")
 
         if isinstance(prog, VertexProgram):
             if value_key is None:
@@ -293,7 +332,7 @@ class DiffusionSession:
             if spec.run_fn is not None:
                 return spec.run_fn(self, engine=engine, **kwargs)
 
-        key = self._key(name, engine, kwargs)
+        key = self._key(name, engine, kwargs, backend, delta)
         if not refresh and key in self._cache:
             return self._result(self._cache[key])
 
@@ -311,31 +350,38 @@ class DiffusionSession:
         if engine == "sharded":
             vstate, stats = diffuse(
                 self.sg, program, max_local_iters=self.max_local_iters,
-                max_rounds=self.max_rounds)
+                max_rounds=self.max_rounds, delta=delta, backend=backend)
         else:  # spmd
-            vstate, stats = self._run_spmd(program)
+            vstate, stats = self._run_spmd(program, backend)
         entry = _Entry(spec, program, vk, dict(kwargs), vstate, stats,
-                       engine)
+                       engine, backend=backend, delta=delta)
         self._cache[key] = entry
         return self._result(entry)
 
     def adopt(self, name: str, vstate, stats=None, engine: str = "sharded",
+              backend: str | None = None, delta: float | None = None,
               **kwargs) -> tuple:
         """Register an existing fixed point with the session so commit()
-        repairs it; returns the cache key."""
+        repairs it (on the session's backend unless overridden); returns
+        the cache key."""
         spec = PROGRAMS[name]
         prog = spec.factory(**kwargs)
-        key = self._key(name, engine, kwargs)
+        backend = backend or self.backend
+        key = self._key(name, engine, kwargs, backend, delta)
         self._cache[key] = _Entry(spec, prog, spec.value_key, dict(kwargs),
-                                  vstate, stats, engine)
+                                  vstate, stats, engine, backend=backend,
+                                  delta=delta)
         return key
 
-    def vertex_state(self, name: str, engine: str | None = None, **kwargs):
+    def vertex_state(self, name: str, engine: str | None = None,
+                     backend: str | None = None, delta: float | None = None,
+                     **kwargs):
         """The cached [S, Np]-layout vertex-state pytree of a query."""
-        key = self._key(name, engine or self.engine, kwargs)
+        key = self._key(name, engine or self.engine, kwargs,
+                        backend or self.backend, delta)
         return self._cache[key].vstate
 
-    def _run_spmd(self, program: VertexProgram):
+    def _run_spmd(self, program: VertexProgram, backend: str = "xla"):
         S = self.n_cells
         if len(jax.devices()) < S:
             raise RuntimeError(
@@ -345,13 +391,13 @@ class DiffusionSession:
                 f"before importing jax, or use engine='sharded'.")
         from ..launch.mesh import mesh_context
 
-        fkey = (program, S)
+        fkey = (program, S, backend)
         if fkey not in self._spmd_fns:
             mesh = jax.make_mesh((S,), ("cells",))
             self._spmd_fns[fkey] = (mesh, make_spmd_diffuse(
                 mesh, program, self.sg, axis_name="cells",
                 max_local_iters=self.max_local_iters,
-                max_rounds=self.max_rounds))
+                max_rounds=self.max_rounds, backend=backend))
         mesh, fn = self._spmd_fns[fkey]
         with mesh_context(mesh):
             return fn(_sg_as_dict(self.sg))
@@ -398,17 +444,26 @@ class DiffusionSession:
         from .dynamic import peek as _peek
 
         engine = kwargs.pop("engine", None) or self.engine
+        backend = kwargs.pop("backend", None) or self.backend
+        delta = kwargs.pop("delta", None)
         if engine == "event":
             raise ValueError(
                 "peek reads a cached shard-layout state; the event oracle "
                 "holds none — use engine='sharded' or 'spmd'")
-        key = self._key(prog, engine, kwargs)
+        key = self._key(prog, engine, kwargs, backend, delta)
         if key not in self._cache:
-            same = [k for k in self._cache if k[0] == prog]
-            if not kwargs and len(same) == 1:
-                key = same[0]      # unique cached variant of this program
+            # fall back to the unique cached variant of this program (and,
+            # when kwargs were given, of these kwargs) — a delta/backend/
+            # engine-variant entry serves a plain peek instead of paying a
+            # fresh diffusion
+            kw = tuple(sorted(kwargs.items()))
+            same = [k for k in self._cache
+                    if k[0] == prog and (not kwargs or k[2] == kw)]
+            if len(same) == 1:
+                key = same[0]
             else:
-                self.query(prog, engine=engine, **kwargs)
+                self.query(prog, engine=engine, backend=backend, delta=delta,
+                           **kwargs)
         entry = self._cache[key]
         return _peek(self.sg, entry.vstate[entry.value_key], self.ns, u)
 
@@ -445,18 +500,24 @@ class DiffusionSession:
 
         if strategy == "restart":
             if entry.engine == "spmd":
-                vstate, stats = self._run_spmd(entry.prog)
+                vstate, stats = self._run_spmd(entry.prog, entry.backend)
             else:
                 vstate, stats = diffuse(sg, entry.prog,
                                         max_local_iters=mli,
-                                        max_rounds=self.max_rounds)
+                                        max_rounds=self.max_rounds,
+                                        delta=entry.delta,
+                                        backend=entry.backend)
             entry.vstate, entry.stats = vstate, stats
             return ("restart", stats)
 
         vstate, active = self._warm_state(entry, applied, strategy)
+        # resume under the entry's own delta gate + kernel backend, so the
+        # repair diffusion is work-gated exactly like the original query
         vstate, stats = diffuse_from(sg, entry.prog, vstate, active,
                                      max_local_iters=mli,
-                                     max_rounds=self.max_rounds)
+                                     max_rounds=self.max_rounds,
+                                     delta=entry.delta,
+                                     backend=entry.backend)
         entry.vstate, entry.stats = vstate, stats
         return (strategy, stats)
 

@@ -20,8 +20,6 @@ This module provides both detectors used in the framework:
 
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 __all__ = ["quiescent", "DijkstraScholten"]
 
 

@@ -129,6 +129,9 @@ class UpdateBatch:
         if self._eadds:
             sg = self._apply_edge_adds(sg)
 
+        if self._edels or self._vdels or self._eadds:
+            sg = sg.with_csr()     # topology changed: refresh the CSR view
+
         # NameServer slot release happens only after every group applied
         # cleanly: if edge adds raise (cell full), the graph is unchanged
         # and the whole batch can be retried or amended without the name

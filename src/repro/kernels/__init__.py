@@ -5,6 +5,7 @@ Each kernel package has kernel.py (pl.pallas_call + BlockSpec), ops.py
 ref.py (pure-jnp oracle used for interpret-mode validation and as the
 CPU/GPU execution path).
 """
+from .edge_relax.ops import edge_relax
 from .flash_attention.ops import attention, decode_attention
 from .segment_reduce.ops import segment_sum, segment_sum_presorted
 from .sssp_relax.ops import relax
@@ -12,6 +13,7 @@ from .sssp_relax.ops import relax
 __all__ = [
     "attention",
     "decode_attention",
+    "edge_relax",
     "segment_sum",
     "segment_sum_presorted",
     "relax",

@@ -1,0 +1,111 @@
+"""Pallas TPU program-parametric edge relaxation — the paper's memory-driven
+hot loop as one kernel.
+
+This is the diffusive engine's relaxation step (gather ``vstate[src]`` →
+``prog.emit`` → segment-combine by destination) fused into a single
+VMEM-resident pipeline, generalizing ``sssp_relax`` to every combine monoid
+the engine supports (min / max / sum) and to the parent-payload path:
+
+* the **vertex block stays pinned in VMEM** across the whole edge stream —
+  the paper's memory-driven execution model: compute (the edge sweep) moves
+  to where the vertex data lives, instead of three XLA scatter passes each
+  re-streaming the vertex arrays through HBM;
+* edges arrive in the graph's **blocked-CSR layout** (sorted by
+  ``(dst_shard, dst_local)``, ``-1``-padded to a block multiple — see
+  ``ShardedGraph.with_csr``), so each block's combine is the dense-rank
+  one-hot reduction shared with ``segment_reduce`` (MXU-shaped for sum);
+* ``prog.emit`` / ``prog.payload`` are traced *into* the kernel body, so any
+  registered vertex program (SSSP / BFS / CC / PPR / PageRank) runs on this
+  path unchanged.
+
+Phase 2 (cross-block combine of the tiny per-block partial tables) is XLA
+code shared with the reference — see ops.py.  The per-block math itself
+lives in ref.py (:func:`~.ref.block_combine`) and is executed verbatim here,
+which is what makes the two backends bitwise-interchangeable.
+
+Interpret-mode caveat: on CPU/GPU (CI) the kernel runs under
+``pl.pallas_call(..., interpret=True)`` — same ops, no Mosaic lowering — so
+the bitwise backend-equivalence tests run everywhere; compiled TPU execution
+additionally wants ``n_per_shard`` padded to the lane width.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..compat import CompilerParams as _CompilerParams
+from .ref import block_combine, edge_messages
+
+__all__ = ["edge_relax_blocks"]
+
+
+def _kernel(*refs, prog, treedef, n_leaves: int, block_e: int):
+    vrefs = refs[:n_leaves]
+    senders_ref, gid_ref, key_ref, src_ref, w_ref, dstg_ref = (
+        refs[n_leaves:n_leaves + 6]
+    )
+    outs = refs[n_leaves + 6:]
+    vstate = jax.tree_util.tree_unflatten(
+        treedef, [r[0] for r in vrefs]      # [Np] leaves, VMEM-resident
+    )
+    cand, send, pay = edge_messages(
+        prog, vstate, senders_ref[0], gid_ref[0], key_ref[0], src_ref[0],
+        w_ref[0], dstg_ref[0],
+    )
+    part, cnt, uniq, pay_part = block_combine(
+        cand, send, key_ref[0], pay, prog.combine, block_e
+    )
+    outs[0][0] = part
+    outs[1][0] = cnt
+    outs[2][0] = uniq
+    if pay_part is not None:
+        outs[3][0] = pay_part
+
+
+def edge_relax_blocks(prog, vstate, senders, gid, key, src, weight, dst_gid,
+                      block_e: int, interpret: bool = False):
+    """Per-block partial tables for one relaxation sweep of one cell.
+
+    Inputs are this cell's vertex block ([Np] vstate leaves, ``senders``,
+    ``gid``) and its destination-sorted edge streams ([Eb], Eb a multiple
+    of ``block_e``).  Returns (part, cnt, uniq[, pay]) each [nb, block_e] —
+    feed to ``ops._combine_blocks`` for the cross-block phase.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(vstate)
+    np_ = gid.shape[0]
+    e = key.shape[0]
+    assert e % block_e == 0, "pad the stream via ShardedGraph.with_csr"
+    nb = e // block_e
+
+    pinned = lambda: pl.BlockSpec((1, np_), lambda i: (0, 0))
+    stream = lambda: pl.BlockSpec((1, block_e), lambda i: (0, i))
+    out_blk = lambda: pl.BlockSpec((1, block_e), lambda i: (i, 0))
+
+    n_out = 4 if prog.with_payload else 3
+    out_dtypes = [prog.msg_dtype, jnp.int32, jnp.int32, jnp.int32][:n_out]
+    outs = pl.pallas_call(
+        functools.partial(_kernel, prog=prog, treedef=treedef,
+                          n_leaves=len(leaves), block_e=block_e),
+        grid=(nb,),
+        in_specs=(
+            [pinned() for _ in leaves]          # vstate: whole cell, pinned
+            + [pinned(), pinned()]              # senders, gid
+            + [stream() for _ in range(4)]      # key, src, weight, dst_gid
+        ),
+        out_specs=[out_blk() for _ in range(n_out)],
+        out_shape=[jax.ShapeDtypeStruct((nb, block_e), dt)
+                   for dt in out_dtypes],
+        compiler_params=_CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(
+        *[leaf[None] for leaf in leaves],
+        senders[None], gid[None],
+        key[None], src[None], weight[None], dst_gid[None],
+    )
+    part, cnt, uniq = outs[0], outs[1], outs[2]
+    pay = outs[3] if prog.with_payload else None
+    return part, cnt, uniq, pay

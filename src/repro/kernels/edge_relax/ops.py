@@ -1,0 +1,74 @@
+"""Public wrapper for the edge_relax kernel: backend dispatch + the shared
+cross-block combine (phase 2).
+
+The contract both backends satisfy: given one cell's vertex block and its
+destination-sorted edge streams, return the combined per-destination
+message table over the flat key space ``dst_shard * Np + dst_local``:
+
+    table [n_keys] msg_dtype   combined messages (identity where none)
+    cnt   [n_keys] int32       number of sending edges per destination
+    pay   [n_keys] int32|None  argmin payload (min-combine programs only)
+
+``backend="xla"`` uses the flat segment path for the order-free monoids
+(min/max) and the vmapped blocked reference for sum; ``backend="pallas"``
+runs the fused kernel (interpret mode off-TPU).  Both share phase 2
+verbatim, and the sum paths share the per-block body, so the two backends
+are bitwise-identical — asserted program-by-program in tests/test_session.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.msg import identity_for
+from ...core.relax import RELAX_BACKENDS
+from .kernel import edge_relax_blocks
+from .ref import edge_relax_blocks_ref, edge_relax_flat
+
+__all__ = ["edge_relax", "RELAX_BACKENDS"]
+
+
+def _combine_blocks(part, cnt, uniq, pay, n_keys: int, combine: str,
+                    msg_dtype):
+    """Phase 2: scatter the per-block partial tables into the flat key
+    space — O(blocks * block_e) rows, shared by both backends."""
+    ident = identity_for(combine, msg_dtype)
+    ids = jnp.where(uniq < 0, n_keys, uniq).reshape(-1)
+    p = part.reshape(-1)
+    table = jnp.full((n_keys + 1,), ident, msg_dtype)
+    if combine == "min":
+        table = table.at[ids].min(p)
+    elif combine == "max":
+        table = table.at[ids].max(p)
+    else:
+        table = table.at[ids].add(p)
+    cnt_t = jnp.zeros((n_keys + 1,), jnp.int32).at[ids].add(cnt.reshape(-1))
+    pay_t = None
+    if pay is not None:
+        # winners: block partials equal to the globally combined value
+        win = jnp.where(p == table[ids], pay.reshape(-1), -1)
+        pay_t = jnp.full((n_keys + 1,), -1, jnp.int32).at[ids].max(win)
+        pay_t = pay_t[:n_keys]
+    return table[:n_keys], cnt_t[:n_keys], pay_t
+
+
+def edge_relax(prog, vstate, senders, gid, key, src, weight, dst_gid,
+               n_keys: int, block_e: int, backend: str = "xla",
+               interpret: bool = False):
+    """One relaxation sweep of one cell; see module docstring for the
+    returned (table, cnt, pay) contract."""
+    if backend not in RELAX_BACKENDS:
+        raise ValueError(
+            f"backend must be one of {RELAX_BACKENDS}, got {backend!r}")
+    if backend == "xla":
+        if prog.combine in ("min", "max"):
+            return edge_relax_flat(prog, vstate, senders, gid, key, src,
+                                   weight, dst_gid, n_keys)
+        part, cnt, uniq, pay = edge_relax_blocks_ref(
+            prog, vstate, senders, gid, key, src, weight, dst_gid, block_e)
+    else:
+        part, cnt, uniq, pay = edge_relax_blocks(
+            prog, vstate, senders, gid, key, src, weight, dst_gid, block_e,
+            interpret=interpret)
+    return _combine_blocks(part, cnt, uniq, pay, n_keys, prog.combine,
+                           prog.msg_dtype)

@@ -1,0 +1,136 @@
+"""Shared math + XLA reference paths for the edge_relax kernel.
+
+``block_combine`` is the *single source of truth* for the blocked
+dense-rank segment combine: the Pallas kernel (kernel.py) and the XLA
+blocked reference (:func:`edge_relax_blocks_ref`) both execute exactly this
+function, op for op, so their results are bitwise identical on a given
+backend — which is what lets the engine promise ``backend="pallas"``
+reproduces ``backend="xla"`` fixed points bit-for-bit even for the
+order-sensitive sum monoid.
+
+``edge_relax_flat`` is the fast unblocked path for the order-free monoids
+(min/max): plain segment ops over the sorted stream.  Min/max over a set
+is association-free, so flat and blocked agree bitwise by construction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.msg import identity_for, segment_combine
+
+__all__ = [
+    "edge_messages",
+    "block_combine",
+    "edge_relax_blocks_ref",
+    "edge_relax_flat",
+]
+
+
+def edge_messages(prog, vstate, senders, gid, key, src, weight, dst_gid):
+    """Gather + emit along the destination-sorted edge stream.
+
+    Elementwise: per edge, gather the source vertex state, run the
+    program's ``emit``, and mask non-sending / dead edges to the combine
+    identity.  Runs identically inside the Pallas kernel (on VMEM-resident
+    vertex blocks) and in the XLA paths.
+
+    Returns (cand [E] msg_dtype, send [E] bool, pay [E] int32 | None).
+    """
+    src_state = jax.tree_util.tree_map(lambda a: a[src], vstate)
+    valid = key >= 0
+    send = senders[src] & valid
+    msg = prog.emit(src_state, weight, gid[src], dst_gid)
+    ident = identity_for(prog.combine, prog.msg_dtype)
+    cand = jnp.where(send, msg, ident).astype(prog.msg_dtype)
+    pay = None
+    if prog.with_payload:
+        pay = prog.payload(src_state, gid[src]).astype(jnp.int32)
+        pay = jnp.where(send, pay, -1)
+    return cand, send, pay
+
+
+def block_combine(cand, send, key, pay, combine: str, block_e: int):
+    """One block of the dense-rank segment combine (see module docstring).
+
+    ``key`` is sorted within the block with ``-1`` padding trailing, so
+    each destination's messages form a contiguous run; ``rank`` densely
+    numbers the runs and the combine reduces over a one-hot [E, W] mask
+    (the same trick as segment_reduce — on TPU the sum case is MXU food).
+
+    Returns (part [Be], cnt [Be] int32, uniq [Be] int32, pay_part | None).
+    """
+    valid = key >= 0
+    prev = jnp.concatenate([jnp.full((1,), -2, jnp.int32), key[:-1]])
+    new_seg = (key != prev) & valid
+    rank = jnp.cumsum(new_seg.astype(jnp.int32)) - 1
+    rank = jnp.where(valid, rank, -1)
+
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (block_e, block_e), 1)
+    onehot = (rank[:, None] == lanes) & valid[:, None]        # [Be, W]
+    ident = identity_for(combine, cand.dtype)
+    if combine == "min":
+        part = jnp.min(jnp.where(onehot, cand[:, None], ident), axis=0)
+    elif combine == "max":
+        part = jnp.max(jnp.where(onehot, cand[:, None], ident), axis=0)
+    elif combine == "sum":
+        part = jnp.sum(jnp.where(onehot, cand[:, None],
+                                 jnp.zeros((), cand.dtype)), axis=0)
+    else:  # pragma: no cover
+        raise ValueError(f"unknown combine {combine!r}")
+    cnt = jnp.sum(jnp.where(onehot, send[:, None].astype(jnp.int32), 0),
+                  axis=0)
+    uniq = jnp.max(jnp.where(onehot, key[:, None], -1), axis=0)
+    pay_part = None
+    if pay is not None:
+        win = onehot & send[:, None] & (cand[:, None] == part[None, :])
+        pay_part = jnp.max(jnp.where(win, pay[:, None], -1), axis=0)
+    return part, cnt, uniq, pay_part
+
+
+def edge_relax_blocks_ref(prog, vstate, senders, gid, key, src, weight,
+                          dst_gid, block_e: int):
+    """XLA reference: the blocked combine vmapped over edge blocks.
+
+    Bitwise-identical to the Pallas kernel's per-block outputs (shared
+    :func:`block_combine` body) — the engine's ``backend="xla"`` sum path.
+    """
+    cand, send, pay = edge_messages(prog, vstate, senders, gid, key, src,
+                                    weight, dst_gid)
+    nb = key.shape[0] // block_e
+    blk = lambda a: a.reshape(nb, block_e)
+    if pay is None:
+        part, cnt, uniq, _ = jax.vmap(
+            lambda c, s, k: block_combine(c, s, k, None, prog.combine,
+                                          block_e)
+        )(blk(cand), blk(send), blk(key))
+        return part, cnt, uniq, None
+    part, cnt, uniq, pay_part = jax.vmap(
+        lambda c, s, k, p: block_combine(c, s, k, p, prog.combine, block_e)
+    )(blk(cand), blk(send), blk(key), blk(pay))
+    return part, cnt, uniq, pay_part
+
+
+def edge_relax_flat(prog, vstate, senders, gid, key, src, weight, dst_gid,
+                    n_keys: int):
+    """Unblocked segment-combine over the sorted stream (min/max only).
+
+    Order-free monoids make this bitwise-equal to the blocked paths while
+    doing O(E) scatter work — the engine's ``backend="xla"`` fast path.
+
+    Returns (table [n_keys], cnt [n_keys] int32, pay [n_keys] | None).
+    """
+    cand, send, pay = edge_messages(prog, vstate, senders, gid, key, src,
+                                    weight, dst_gid)
+    ids = jnp.where(send, key, n_keys)       # non-senders dropped off-range
+    table = segment_combine(cand, ids, n_keys + 1, prog.combine,
+                            indices_are_sorted=False)
+    cnt = segment_combine(send.astype(jnp.int32), ids, n_keys + 1, "sum")
+    pay_t = None
+    if pay is not None:
+        win = send & (cand == table[ids])
+        pay_t = segment_combine(jnp.where(win, pay, -1), ids, n_keys + 1,
+                                "max")
+        pay_t = jnp.where(cnt[:n_keys] > 0, pay_t[:n_keys], -1)
+    return table[:n_keys], cnt[:n_keys], pay_t

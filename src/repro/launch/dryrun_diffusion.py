@@ -29,22 +29,25 @@ from repro.launch.mesh import mesh_context        # noqa: E402
 
 
 def build_specs(scale: int, n_cells: int, edge_factor: int = 16):
+    from repro.core.graph import DEFAULT_EDGE_BLOCK
+
     n = 1 << scale
     e = n * edge_factor * 2          # symmetrized
     np_ = n // n_cells
     ep = e // n_cells
+    eb = -(-ep // DEFAULT_EDGE_BLOCK) * DEFAULT_EDGE_BLOCK   # CSR padding
     S = n_cells
     i32 = jnp.int32
+    # the engine-facing view (diffuse._sg_as_dict): vertex block + the
+    # destination-sorted blocked-CSR streams (ShardedGraph.csr_view)
     return {
-        "src_local": jax.ShapeDtypeStruct((S, ep), i32),
-        "dst_shard": jax.ShapeDtypeStruct((S, ep), i32),
-        "dst_local": jax.ShapeDtypeStruct((S, ep), i32),
-        "dst_gid": jax.ShapeDtypeStruct((S, ep), i32),
-        "weight": jax.ShapeDtypeStruct((S, ep), jnp.float32),
-        "edge_ok": jax.ShapeDtypeStruct((S, ep), jnp.bool_),
         "node_ok": jax.ShapeDtypeStruct((S, np_), jnp.bool_),
         "gid": jax.ShapeDtypeStruct((S, np_), i32),
         "out_degree": jax.ShapeDtypeStruct((S, np_), i32),
+        "csr_key": jax.ShapeDtypeStruct((S, eb), i32),
+        "csr_src": jax.ShapeDtypeStruct((S, eb), i32),
+        "csr_weight": jax.ShapeDtypeStruct((S, eb), jnp.float32),
+        "csr_dst_gid": jax.ShapeDtypeStruct((S, eb), i32),
     }, np_, ep
 
 

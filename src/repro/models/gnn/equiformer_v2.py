@@ -181,7 +181,6 @@ def _edge_messages(p, x, snd_c, rcv_c, vec_c, emask_c, cfg, g, psum_axis=None):
 
     Returns (logits [Ec,H] f32, vals [Ec, nsph, C_local] f32 rotated back,
     geom_ok mask)."""
-    c_local = x.shape[-1]
     pos, neg = _m_layout(cfg.l_max, cfg.m_max)
     r = jnp.linalg.norm(vec_c, axis=-1)
     geom_ok = (r > 1e-6) & emask_c
@@ -195,7 +194,6 @@ def _edge_messages(p, x, snd_c, rcv_c, vec_c, emask_c, cfg, g, psum_axis=None):
     msg = msg * radial[:, None, :]
     # attention logits: per-group partial + (optional cross-shard) combine
     idx0 = jnp.asarray(pos[0])
-    n0 = len(pos[0])
     inv = jnp.concatenate([msg[:, idx0, :], radial[:, None, :]], axis=1)
     inv_g = _grouped(inv, g)                               # [Ec,g,(n0+1)cg]
     part = jnp.einsum("egi,gio->eo", inv_g, p["alpha_w1"])

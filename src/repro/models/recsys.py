@@ -19,7 +19,6 @@ import jax
 import jax.numpy as jnp
 
 from ..dist.sharding import logical_constraint
-from .common import dense_init
 from .gnn.common import mlp_init, mlp_apply
 
 __all__ = ["TwoTowerConfig", "init_params", "embedding_bag",

@@ -16,7 +16,6 @@ from repro.core.triangles import (
     cca_cost_model,
     triangle_count_bitset,
     triangle_count_exact,
-    wedge_count,
 )
 from repro.optim.optimizers import compress_int8, decompress_int8
 

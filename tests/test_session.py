@@ -273,8 +273,85 @@ def test_vertex_add_delete_through_session():
 
 
 # ---------------------------------------------------------------------------
-# uniform engine selection
+# uniform engine + backend selection
 # ---------------------------------------------------------------------------
+
+PROGRAM_MATRIX = [("sssp", dict(source=0)), ("bfs", dict(source=0)),
+                  ("cc", {}), ("ppr", dict(source=0)), ("pagerank", {})]
+
+
+def test_backend_matrix_pallas_matches_xla_bitwise():
+    """Acceptance: backend='pallas' (interpret mode on CPU) reproduces the
+    backend='xla' fixed point bitwise for every registered diffusion
+    program — values and every extra state field (incl. SSSP parents)."""
+    sess, _ = _session(seed=8, family="small_world", n=120)
+    for name, kw in PROGRAM_MATRIX:
+        rx = sess.query(name, backend="xla", **kw)
+        rp = sess.query(name, backend="pallas", **kw)
+        assert np.array_equal(_mask_inf(rx.values), _mask_inf(rp.values)), name
+        for k, v in rx.extra.items():
+            if k == "live":
+                continue
+            a, b = np.asarray(v), np.asarray(rp.extra[k])
+            assert np.array_equal(_mask_inf(a), _mask_inf(b)), (name, k)
+
+
+def test_backend_matrix_spmd_engine():
+    """The SPMD engine dispatches through the same relax backends."""
+    src, dst, w, n = make_graph_family("erdos_renyi", 100, seed=4)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=1)
+    rx = sess.query("sssp", engine="spmd", backend="xla", source=0)
+    rp = sess.query("sssp", engine="spmd", backend="pallas", source=0)
+    assert np.array_equal(_mask_inf(rx.values), _mask_inf(rp.values))
+
+
+def test_backend_survives_commit_repair():
+    """A pallas-backed cached query is repaired on the pallas path and
+    still reproduces the from-scratch fixed point bitwise."""
+    sess, (src, dst, w, n) = _session(seed=21, n=100)
+    sess.query("sssp", backend="pallas", source=0)
+    rng = np.random.default_rng(6)
+    dels, ins = _random_updates(src, dst, n, rng, n_del=3, n_ins=3)
+    for u, v in dels:
+        sess.delete_edge(u, v)
+    for u, v, x in ins:
+        sess.add_edge(u, v, x)
+    sess.commit()
+    got = sess.query("sssp", backend="pallas", source=0).values
+    vstate, _ = diffuse(sess.sg, sssp_program(0), backend="pallas")
+    ref = sess.to_global(vstate["dist"])
+    assert np.array_equal(_mask_inf(got), _mask_inf(ref))
+
+
+def test_delta_gate_threads_through_resume_and_repair():
+    """Satellite: diffuse_from honours the delta-stepping gate (fewer
+    actions, same fixed point), and a delta-gated query's commit() repair
+    still matches the from-scratch result."""
+    from repro.core.diffuse import diffuse_from
+
+    src, dst, w, n = make_graph_family("scale_free", 300, seed=15)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=4,
+                                       edge_slack=0.4)
+    prog = sssp_program(0)
+    vs0, active0 = prog.init(sess.sg)
+    _, st_ungated = diffuse_from(sess.sg, prog, vs0, active0)
+    vs_g, st_gated = diffuse_from(sess.sg, prog, vs0, active0, delta=2.0)
+    ref, _ = diffuse(sess.sg, prog)
+    assert np.array_equal(_mask_inf(np.asarray(vs_g["dist"])),
+                          _mask_inf(np.asarray(ref["dist"])))
+    assert int(st_gated.actions) < int(st_ungated.actions)
+
+    sess.query("sssp", source=0, delta=2.0)
+    rng = np.random.default_rng(7)
+    for _ in range(4):
+        sess.add_edge(int(rng.integers(0, n)), int(rng.integers(0, n)),
+                      float(0.5 + rng.random()))
+    sess.commit()
+    got = sess.query("sssp", source=0, delta=2.0).values
+    vstate, _ = diffuse(sess.sg, prog)
+    assert np.array_equal(_mask_inf(got),
+                          _mask_inf(sess.to_global(vstate["dist"])))
+
 
 def test_engine_matrix_same_fixed_point():
     src, dst, w, n = make_graph_family("erdos_renyi", 120, seed=9)

@@ -1,6 +1,5 @@
 """End-to-end behaviour of the paper's system: diffusive computation."""
 
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
