@@ -1,0 +1,103 @@
+"""Lane-scaling microbenchmark: B personalized queries (PPR forward push)
+served as B lanes of one diffusion vs B sequential single-source queries
+(DESIGN.md §2.7).
+
+Two numbers per batch size:
+
+* ``speedup_cold`` — end-to-end wall-clock including program build + jit
+  compilation.  The single-source API bakes the source into the program,
+  so B distinct users cost B compiles; the laned program compiles *once*
+  for the batch.  This is the realistic serving cost the ROADMAP's
+  "millions of users" scenario cares about.
+* ``speedup_warm`` — steady-state recompute (refresh=True on already-built
+  programs): the pure engine-side effect of sharing one sweep.  On CPU
+  this sits below 1 at larger graphs (the segmented scan is memory-bound,
+  so B lanes move ~B× the stream traffic while iterating the union of
+  the lanes' frontier schedules); it is reported for transparency — the
+  end-to-end (cold) number is the serving-cost metric.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import DiffusionSession
+from repro.core.generators import make_graph_family
+
+
+def bench_lane_batch(n_nodes: int = 1500, batch: int = 32, seed: int = 0,
+                     n_cells: int = 4, prog: str = "ppr",
+                     repeats: int = 2, eps: float = 1e-4):
+    """One (batch size) measurement row; see module docstring."""
+    src, dst, w, n = make_graph_family("scale_free", n_nodes, seed=seed)
+    rng = np.random.default_rng(seed)
+    sources = [int(s) for s in rng.choice(n, batch, replace=False)]
+
+    def fresh():
+        return DiffusionSession.from_edges(src, dst, n, w, n_cells=n_cells)
+
+    # ---- cold: program build + compile + run, fresh sessions ----
+    sess_seq = fresh()
+    t0 = time.perf_counter()
+    for s in sources:
+        sess_seq.query(prog, source=s, eps=eps)
+    t_seq_cold = time.perf_counter() - t0
+
+    sess_bat = fresh()
+    t0 = time.perf_counter()
+    batch_res = sess_bat.query(prog, sources=sources, eps=eps)
+    t_bat_cold = time.perf_counter() - t0
+
+    # lanes must reproduce the sequential fixed points bitwise
+    for s, r in zip(sources, batch_res):
+        ref = sess_seq.query(prog, source=s, eps=eps)   # cache hit
+        assert np.array_equal(r.values, ref.values), s
+
+    # ---- warm: steady-state recompute on built programs ----
+    def best_of(fn):
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    t_seq_warm = best_of(lambda: [sess_seq.query(prog, source=s, eps=eps,
+                                                 refresh=True)
+                                  for s in sources])
+    t_bat_warm = best_of(lambda: sess_bat.query(prog, sources=sources,
+                                                eps=eps, refresh=True))
+
+    return dict(
+        bench="lanes", prog=prog, batch=batch, n_nodes=n_nodes,
+        n_cells=n_cells,
+        sequential_cold_s=t_seq_cold, batched_cold_s=t_bat_cold,
+        speedup_cold=t_seq_cold / t_bat_cold,
+        sequential_warm_s=t_seq_warm, batched_warm_s=t_bat_warm,
+        speedup_warm=t_seq_warm / t_bat_warm,
+    )
+
+
+def run(batch_sizes=(1, 2, 4, 8, 16, 32, 64), n_nodes: int = 1500,
+        quick: bool = False):
+    if quick:
+        batch_sizes, n_nodes = (1, 4, 8), 400
+    return [bench_lane_batch(n_nodes=n_nodes, batch=b) for b in batch_sizes]
+
+
+def main():
+    rows = run()
+    print(f"{'B':>4s} {'seq cold':>10s} {'bat cold':>10s} {'x cold':>7s} "
+          f"{'seq warm':>10s} {'bat warm':>10s} {'x warm':>7s}")
+    for r in rows:
+        print(f"{r['batch']:4d} {r['sequential_cold_s']*1e3:9.1f}ms "
+              f"{r['batched_cold_s']*1e3:9.1f}ms {r['speedup_cold']:6.1f}x "
+              f"{r['sequential_warm_s']*1e3:9.1f}ms "
+              f"{r['batched_warm_s']*1e3:9.1f}ms {r['speedup_warm']:6.1f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call for the timed
 benches; derived = the paper-comparable metric) and writes the same
-records, plus the kernel-backend tag, to ``BENCH_pr2.json`` at the repo
+records, plus the kernel-backend tag, to ``BENCH_pr3.json`` at the repo
 root so the perf trajectory accumulates machine-readably across PRs.
 """
 
@@ -93,6 +93,18 @@ def main() -> None:
             backend=r["backend"],
         )
 
+    # DESIGN.md §2.7: multi-query lanes — B PPR sources batched into one
+    # diffusion vs B sequential single-source queries
+    from benchmarks import bench_lanes
+    for r in bench_lanes.run(quick=quick):
+        _csv(
+            f"lanes/{r['prog']}/b{r['batch']}",
+            r["batched_cold_s"] * 1e6,
+            f"speedup_cold={r['speedup_cold']:.2f};"
+            f"speedup_warm={r['speedup_warm']:.2f}",
+            backend="xla",
+        )
+
     # Roofline table from any dry-run artifacts present
     from benchmarks import roofline
     rows = roofline.table()
@@ -107,7 +119,7 @@ def main() -> None:
 
     # quick (CI smoke) runs write a sibling file so they never clobber the
     # committed full-size trajectory records
-    fname = "BENCH_pr2.quick.json" if quick else "BENCH_pr2.json"
+    fname = "BENCH_pr3.quick.json" if quick else "BENCH_pr3.json"
     out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                        "..", fname)
     with open(os.path.abspath(out), "w") as f:

@@ -4,6 +4,9 @@
 #
 # Front door: DiffusionSession (session.py) — static queries, batched
 # mutation, and incremental recomputation through one message-driven API.
+# Programs are declarative, user-registrable specs (programs.py §2.7):
+# @diffusive registers a DiffusiveProgram factory across every engine,
+# kernel backend, the session cache, and commit()-time repair.
 from .api import (
     Result,
     bfs,
@@ -11,19 +14,30 @@ from .api import (
     connected_components,
     pagerank,
     personalized_pagerank,
+    reachable,
     run,
     sssp,
+    widest_path,
 )
 from .diffuse import DiffuseStats, diffuse, diffuse_from, make_spmd_diffuse
 from .dynamic import NameServer
 from .graph import Graph, ShardedGraph, from_edges
+from .monoid import MONOIDS, Monoid, register_monoid
 from .partition import Partitioned, partition
 from .programs import (
+    BoundQuery,
+    DiffusiveProgram,
+    Field,
     VertexProgram,
     bfs_program,
     cc_program,
+    diffusive,
+    make_laned,
+    pagerank_program,
     ppr_program,
+    reach_program,
     sssp_program,
+    widest_program,
 )
 from .session import (
     DiffusionSession,
@@ -34,10 +48,15 @@ from .updates import AppliedUpdates, UpdateBatch
 
 __all__ = [
     "Result", "bfs", "build", "connected_components", "personalized_pagerank",
-    "run", "sssp", "pagerank", "DiffuseStats", "diffuse", "diffuse_from",
+    "run", "sssp", "pagerank", "widest_path", "reachable",
+    "DiffuseStats", "diffuse", "diffuse_from",
     "make_spmd_diffuse", "Graph", "ShardedGraph", "from_edges",
-    "Partitioned", "partition", "VertexProgram", "bfs_program",
-    "cc_program", "ppr_program", "sssp_program",
+    "Partitioned", "partition",
+    "Monoid", "MONOIDS", "register_monoid",
+    "VertexProgram", "DiffusiveProgram", "Field", "BoundQuery",
+    "diffusive", "make_laned",
+    "bfs_program", "cc_program", "ppr_program", "sssp_program",
+    "pagerank_program", "widest_program", "reach_program",
     "DiffusionSession", "ProgramSpec", "register_program",
     "UpdateBatch", "AppliedUpdates", "NameServer",
 ]

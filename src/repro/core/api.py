@@ -27,6 +27,8 @@ __all__ = [
     "connected_components",
     "personalized_pagerank",
     "pagerank",
+    "widest_path",
+    "reachable",
     "Result",
 ]
 
@@ -73,21 +75,30 @@ def run(
 
 
 def _named(part: Partitioned, name: str, max_local_iters: int,
-           backend: str = "xla", **kwargs) -> Result:
+           backend: str = "xla", **kwargs):
     sess = DiffusionSession(part, max_local_iters=max_local_iters,
                             backend=backend)
-    return _trim(part, sess.query(name, **kwargs))
+    res = sess.query(name, **kwargs)
+    if isinstance(res, list):                 # multi-query lanes
+        return [_trim(part, r) for r in res]
+    return _trim(part, res)
 
 
-def sssp(part: Partitioned, source: int, track_parents: bool = True,
+def sssp(part: Partitioned, source, track_parents: bool = True,
          max_local_iters: int = 64, backend: str = "xla") -> Result:
-    return _named(part, "sssp", max_local_iters, backend, source=source,
-                  track_parents=track_parents)
+    """Single-source shortest paths; a list-valued ``source`` fans out
+    into query lanes sharing one diffusion (one Result per source)."""
+    kw = ({"sources": list(source)} if isinstance(source, (list, tuple))
+          else {"source": source})
+    return _named(part, "sssp", max_local_iters, backend,
+                  track_parents=track_parents, **kw)
 
 
-def bfs(part: Partitioned, source: int, max_local_iters: int = 64,
+def bfs(part: Partitioned, source, max_local_iters: int = 64,
         backend: str = "xla") -> Result:
-    return _named(part, "bfs", max_local_iters, backend, source=source)
+    kw = ({"sources": list(source)} if isinstance(source, (list, tuple))
+          else {"source": source})
+    return _named(part, "bfs", max_local_iters, backend, **kw)
 
 
 def connected_components(part: Partitioned, max_local_iters: int = 64,
@@ -95,14 +106,34 @@ def connected_components(part: Partitioned, max_local_iters: int = 64,
     return _named(part, "cc", max_local_iters, backend)
 
 
-def personalized_pagerank(part: Partitioned, source: int, alpha: float = 0.15,
+def personalized_pagerank(part: Partitioned, source, alpha: float = 0.15,
                           eps: float = 1e-5, max_local_iters: int = 64,
                           backend: str = "xla") -> Result:
-    return _named(part, "ppr", max_local_iters, backend, source=source,
-                  alpha=alpha, eps=eps)
+    """Forward-push PPR; a list-valued ``source`` runs one lane per
+    source through a single sum-combine diffusion."""
+    kw = ({"sources": list(source)} if isinstance(source, (list, tuple))
+          else {"source": source})
+    return _named(part, "ppr", max_local_iters, backend,
+                  alpha=alpha, eps=eps, **kw)
 
 
 def pagerank(part: Partitioned, alpha: float = 0.15, eps: float = 1e-7,
              max_local_iters: int = 64, backend: str = "xla") -> Result:
     return _named(part, "pagerank", max_local_iters, backend, alpha=alpha,
                   eps=eps)
+
+
+def widest_path(part: Partitioned, source: int, track_parents: bool = False,
+                max_local_iters: int = 64, backend: str = "xla") -> Result:
+    """Max-bottleneck (widest) path widths from ``source`` — a max-combine
+    diffusion registered through the public @diffusive extension point."""
+    return _named(part, "widest", max_local_iters, backend, source=source,
+                  track_parents=track_parents)
+
+
+def reachable(part: Partitioned, sources, max_local_iters: int = 64,
+              backend: str = "xla") -> Result:
+    """Reachability from a vertex set (one diffusion, all sources at
+    once); ``values[v] == 1`` iff some source reaches v."""
+    return _named(part, "reach", max_local_iters, backend,
+                  sources=tuple(int(s) for s in sources))

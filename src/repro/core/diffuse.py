@@ -8,8 +8,9 @@ TPU-native realization of the paper's diffusive computation (DESIGN.md §2):
   local quiescence** — unordered, data-driven work exactly like the paper's
   asynchronous diffusion, but vectorized.  Cross-cell messages ("operons")
   accumulate into per-destination **outboxes**, coalesced with the program's
-  combine monoid (min for SSSP — duplicate relaxations merge in the mailbox,
-  the TPU analogue of the paper's many-small-messages traffic).
+  combine :class:`~.monoid.Monoid` (min for SSSP — duplicate relaxations
+  merge in the mailbox, the TPU analogue of the paper's many-small-messages
+  traffic).
 * The relaxation step itself (gather ``vstate[src]`` → ``prog.emit`` →
   segment-combine by destination) is delegated to a pluggable backend
   (``backend="xla" | "pallas"`` — see relax.py): both consume the graph's
@@ -22,6 +23,16 @@ TPU-native realization of the paper's diffusive computation (DESIGN.md §2):
   1's ``if v.distance >= distance``.
 * Termination = global quiescence: no vertex active and no operon in flight
   (the paper's §V.A step 6), detected by counting — see termination.py.
+
+**Multi-query lanes** (DESIGN.md §2.7): a program built by
+:func:`~.programs.make_laned` carries ``lanes=L`` and lane-stacked vertex
+state (per shard: [L, Np] leaves).  The engine then broadcasts the whole
+gather→emit→combine over lanes — one edge sweep serves L queries — with
+outboxes gaining a lane axis and quiescence tracked per lane: a converged
+lane is masked out of message generation while the slowest lanes finish.
+Because emit/receive are identical across lanes and extra (quiescent)
+rounds are bitwise no-ops, each lane reproduces its single-query fixed
+point exactly.
 
 ``max_local_iters=1`` degenerates the engine to classic BSP; larger values
 give the paper's asynchronous behaviour.  The benchmark suite uses this knob
@@ -38,7 +49,6 @@ import jax.numpy as jnp
 from jax import lax
 
 from .graph import DEFAULT_EDGE_BLOCK, ShardedGraph
-from .msg import identity_for
 from .partition import Partitioned
 from .programs import VertexProgram
 from .relax import make_relax
@@ -63,41 +73,38 @@ class DiffuseStats(NamedTuple):
     max_frontier: jnp.ndarray      # introspection: peak active count
 
 
-def _combine_elem(combine: str, a, b, b_has):
-    if combine == "min":
-        return jnp.minimum(a, b)
-    if combine == "max":
-        return jnp.maximum(a, b)
-    if combine == "sum":
-        return a + jnp.where(b_has, b, jnp.zeros_like(b))
-    raise ValueError(combine)
-
-
 def _gate(prog, vstate, active, threshold):
     """Delta-stepping-style priority gate: only vertices whose priority is
     within the current bucket fire (beyond-paper optimization; None
-    threshold or priority-less programs = the paper's ungated diffusion)."""
+    threshold or priority-less programs = the paper's ungated diffusion).
+    Laned runs carry a per-lane threshold [L, 1] that broadcasts."""
     if prog.priority is None or threshold is None:
         return active
     return active & (prog.priority(vstate) <= threshold)
 
 
 def _local_iter_shard(prog: VertexProgram, np_, s_, my_shard, sg_s, st, relax,
-                      threshold=None):
+                      threshold=None, lane_live=None):
     """One local relaxation sub-iteration, per-shard view (vmapped over S).
 
     The gather→emit→segment-combine step is delegated to ``relax`` (built by
     :func:`repro.core.relax.make_relax`): it maps this cell's vertex block +
-    destination-sorted CSR edge stream to the combined [S, Np] message table.
-    Row ``my_shard`` is applied as the local inbox inside this sub-iteration;
-    the other rows merge into the cross-cell outbox.
+    destination-sorted CSR edge stream to the combined [S, Np] message table
+    ([S, L, Np] for laned programs).  Row ``my_shard`` is applied as the
+    local inbox inside this sub-iteration; the other rows merge into the
+    cross-cell outbox.  ``lane_live`` masks converged lanes out of message
+    generation.
     """
     (vstate, active, outbox, outbox_has, outbox_pay) = st
-    ident = identity_for(prog.combine, prog.msg_dtype)
+    monoid = prog.monoid
+    ident = monoid.identity(prog.msg_dtype)
 
     senders = _gate(prog, vstate, active, threshold)
+    if lane_live is not None:
+        senders = senders & lane_live[:, None]
     table, cnt, pay = relax(vstate, senders, sg_s)
-    mine = (jnp.arange(s_, dtype=jnp.int32) == my_shard)[:, None]   # [S, 1]
+    mine = (jnp.arange(s_, dtype=jnp.int32) == my_shard).reshape(
+        (s_,) + (1,) * (table.ndim - 1))
 
     inbox = jnp.take(table, my_shard, axis=0)
     has_local = jnp.take(cnt, my_shard, axis=0) > 0
@@ -107,11 +114,9 @@ def _local_iter_shard(prog: VertexProgram, np_, s_, my_shard, sg_s, st, relax,
     contrib_has = (cnt > 0) & ~mine
     if prog.with_payload:
         pay_contrib = jnp.where(mine, -1, pay)
-        take_new = contrib_has & (
-            (contrib < outbox) if prog.combine == "min" else contrib_has
-        )
+        take_new = contrib_has & monoid.improves(contrib, outbox)
         outbox_pay = jnp.where(take_new, pay_contrib, outbox_pay)
-    outbox = _combine_elem(prog.combine, outbox, contrib, contrib_has)
+    outbox = monoid.merge(outbox, contrib, contrib_has)
     outbox_has = outbox_has | contrib_has
 
     vstate = prog.on_send(vstate, senders)
@@ -161,44 +166,22 @@ def _run_rounds(sg: ShardedGraph, prog: VertexProgram, vstate0, active0,
                 max_local_iters: int, max_rounds: int, delta=None,
                 backend: str = "xla"):
     S, Np = sg.n_shards, sg.n_per_shard
+    L = prog.lanes
+    lane = (L,) if L else ()
     sgd = _sg_as_dict(sg)
     relax = make_relax(prog, S, Np, sg.csr_block, backend)
-    ident = identity_for(prog.combine, prog.msg_dtype)
+    monoid = prog.monoid
+    ident = monoid.identity(prog.msg_dtype)
 
-    outbox0 = jnp.full((S, S, Np), ident, prog.msg_dtype)
-    has0 = jnp.zeros((S, S, Np), bool)
-    pay0 = jnp.full((S, S, Np), -1, jnp.int32) if prog.with_payload else None
+    outbox0 = jnp.full((S, S) + lane + (Np,), ident, prog.msg_dtype)
+    has0 = jnp.zeros((S, S) + lane + (Np,), bool)
+    pay0 = (jnp.full((S, S) + lane + (Np,), -1, jnp.int32)
+            if prog.with_payload else None)
 
     stats0 = DiffuseStats(*[jnp.zeros((), jnp.int32) for _ in range(7)])
 
     shard_ids = jnp.arange(S, dtype=jnp.int32)
     use_gate = delta is not None and prog.priority is not None
-
-    def local_cond(c):
-        st, stats, liters, thr = c
-        gated = jax.vmap(lambda vs, a: _gate(prog, vs, a,
-                                             thr if use_gate else None))(
-            st[0], st[1])
-        return jnp.any(gated) & (liters < max_local_iters)
-
-    def local_body(c):
-        st, stats, liters, thr = c
-        local_iter = jax.vmap(
-            lambda i, g, s: _local_iter_shard(
-                prog, Np, S, i, g, s, relax, thr if use_gate else None
-            ),
-            in_axes=(0, 0, 0),
-        )
-        st, counts = local_iter(shard_ids, sgd, st)
-        stats = stats._replace(
-            local_iters=stats.local_iters + 1,
-            actions=stats.actions + jnp.sum(counts["actions"]),
-            remote_actions=stats.remote_actions + jnp.sum(counts["remote"]),
-            max_frontier=jnp.maximum(
-                stats.max_frontier, jnp.sum(st[1].astype(jnp.int32))
-            ),
-        )
-        return st, stats, liters + 1, thr
 
     def round_cond(c):
         st, stats = c
@@ -211,29 +194,59 @@ def _run_rounds(sg: ShardedGraph, prog: VertexProgram, vstate0, active0,
     def round_body(c):
         st, stats = c
         if use_gate:
-            # bucket threshold: min active priority + delta, per round
+            # bucket threshold: min active priority + delta, per round —
+            # computed per lane so a gated laned run reproduces each
+            # single-query bucket sequence exactly
             prio = jax.vmap(prog.priority)(st[0])
-            minp = jnp.min(jnp.where(st[1], prio, jnp.inf))
-            thr = minp + delta
+            masked = jnp.where(st[1], prio, jnp.inf)
+            if L:
+                thr = jnp.min(masked, axis=(0, masked.ndim - 1))[:, None] + delta
+            else:
+                thr = jnp.min(masked) + delta
         else:
             thr = jnp.inf
-        st, stats, _, _ = lax.while_loop(
-            local_cond, local_body,
-            (st, stats, jnp.zeros((), jnp.int32), thr),
+        # per-lane quiescence: converged lanes stop generating messages
+        lane_live = jnp.any(st[1], axis=(0, st[1].ndim - 1)) if L else None
+
+        def local_cond(c2):
+            st2, stats2, liters = c2
+            gated = jax.vmap(lambda vs, a: _gate(prog, vs, a,
+                                                 thr if use_gate else None))(
+                st2[0], st2[1])
+            return jnp.any(gated) & (liters < max_local_iters)
+
+        def local_body(c2):
+            st2, stats2, liters = c2
+            local_iter = jax.vmap(
+                lambda i, g, s: _local_iter_shard(
+                    prog, Np, S, i, g, s, relax,
+                    thr if use_gate else None, lane_live,
+                ),
+                in_axes=(0, 0, 0),
+            )
+            st2, counts = local_iter(shard_ids, sgd, st2)
+            stats2 = stats2._replace(
+                local_iters=stats2.local_iters + 1,
+                actions=stats2.actions + jnp.sum(counts["actions"]),
+                remote_actions=stats2.remote_actions
+                + jnp.sum(counts["remote"]),
+                max_frontier=jnp.maximum(
+                    stats2.max_frontier, jnp.sum(st2[1].astype(jnp.int32))
+                ),
+            )
+            return st2, stats2, liters + 1
+
+        st, stats, _ = lax.while_loop(
+            local_cond, local_body, (st, stats, jnp.zeros((), jnp.int32))
         )
         vstate, active, outbox, outbox_has, outbox_pay = st
         # ---- exchange: deliver every outbox to its destination cell ----
         n_ops = jnp.sum(outbox_has.astype(jnp.int32))
-        if prog.combine == "min":
-            inbox_all = outbox.min(axis=0)              # [S_dst, Np]
-        elif prog.combine == "max":
-            inbox_all = outbox.max(axis=0)
-        else:
-            inbox_all = jnp.where(outbox_has, outbox, 0).sum(axis=0)
+        inbox_all = monoid.reduce_rows(outbox, outbox_has, axis=0)
         has_all = outbox_has.any(axis=0)
         pay_all = None
         if prog.with_payload:
-            src_idx = jnp.argmin(outbox, axis=0)        # min-combine only
+            src_idx = monoid.argbest(outbox, axis=0)
             pay_all = jnp.take_along_axis(outbox_pay, src_idx[None], axis=0)[0]
         recv = jax.vmap(
             lambda vs, ib, hs, pl, nok: prog.receive(vs, ib, hs, pl, nok)
@@ -270,9 +283,10 @@ def diffuse(
 ):
     """Run a diffusive computation to quiescence.
 
-    Returns (vertex_state pytree in [S, Np] layout, DiffuseStats).
-    Equivalent of the paper's ``hpx_diffuse`` (Code Listing 3): the program
-    carries vertex_func/predicate; the terminator is the engine's built-in
+    Returns (vertex_state pytree in [S, Np] layout — [S, L, Np] for laned
+    programs — and DiffuseStats).  Equivalent of the paper's
+    ``hpx_diffuse`` (Code Listing 3): the program carries
+    vertex_func/predicate; the terminator is the engine's built-in
     counting quiescence detector.  ``backend`` selects the relaxation
     kernel (see relax.py); both choices reach the same fixed point bitwise.
     """
@@ -318,11 +332,15 @@ def diffuse_spmd_step(prog: VertexProgram, axis_name: str, n_shards: int,
     exchange -> receive) until a psum'd quiescence check fires.  The local
     while_loop has device-dependent trip count — cells genuinely run ahead
     of each other between exchanges.  The relaxation step dispatches to the
-    same ``backend`` implementations as the logical engine.
+    same ``backend`` implementations as the logical engine; laned programs
+    carry their lane axis through the all_to_all unchanged.
     """
     S, Np = n_shards, n_per_shard
+    L = prog.lanes
+    lane = (L,) if L else ()
     relax = make_relax(prog, S, Np, block_e, backend)
-    ident_f = lambda: identity_for(prog.combine, prog.msg_dtype)
+    monoid = prog.monoid
+    ident_f = lambda: monoid.identity(prog.msg_dtype)
 
     def per_device(sgd):
         my_shard = lax.axis_index(axis_name).astype(jnp.int32)
@@ -335,25 +353,11 @@ def diffuse_spmd_step(prog: VertexProgram, axis_name: str, n_shards: int,
             out_degree = sg_s["out_degree"]
 
         vstate, active = prog.init(_View)
-        outbox = jnp.full((S, Np), ident_f(), prog.msg_dtype)
-        outbox_has = jnp.zeros((S, Np), bool)
-        outbox_pay = jnp.full((S, Np), -1, jnp.int32) if prog.with_payload else None
+        outbox = jnp.full((S,) + lane + (Np,), ident_f(), prog.msg_dtype)
+        outbox_has = jnp.zeros((S,) + lane + (Np,), bool)
+        outbox_pay = (jnp.full((S,) + lane + (Np,), -1, jnp.int32)
+                      if prog.with_payload else None)
         stats = DiffuseStats(*[jnp.zeros((), jnp.int32) for _ in range(7)])
-
-        def local_cond(c):
-            st, stats, liters = c
-            return jnp.any(st[1]) & (liters < max_local_iters)
-
-        def local_body(c):
-            st, stats, liters = c
-            st, counts = _local_iter_shard(prog, Np, S, my_shard, sg_s, st,
-                                           relax)
-            stats = stats._replace(
-                local_iters=stats.local_iters + 1,
-                actions=stats.actions + counts["actions"],
-                remote_actions=stats.remote_actions + counts["remote"],
-            )
-            return st, stats, liters + 1
 
         def round_cond(c):
             _, _, global_live, stats = c
@@ -361,6 +365,30 @@ def diffuse_spmd_step(prog: VertexProgram, axis_name: str, n_shards: int,
 
         def round_body(c):
             st, _, _, stats = c
+            if L:
+                # per-lane global quiescence: psum'd lane frontiers mask
+                # converged lanes out of message generation
+                lane_live = lax.psum(
+                    jnp.sum(st[1].astype(jnp.int32), axis=-1), axis_name
+                ) > 0
+            else:
+                lane_live = None
+
+            def local_cond(c2):
+                st2, stats2, liters = c2
+                return jnp.any(st2[1]) & (liters < max_local_iters)
+
+            def local_body(c2):
+                st2, stats2, liters = c2
+                st2, counts = _local_iter_shard(prog, Np, S, my_shard, sg_s,
+                                                st2, relax, None, lane_live)
+                stats2 = stats2._replace(
+                    local_iters=stats2.local_iters + 1,
+                    actions=stats2.actions + counts["actions"],
+                    remote_actions=stats2.remote_actions + counts["remote"],
+                )
+                return st2, stats2, liters + 1
+
             st, stats, _ = lax.while_loop(
                 local_cond, local_body, (st, stats, jnp.zeros((), jnp.int32))
             )
@@ -373,25 +401,20 @@ def diffuse_spmd_step(prog: VertexProgram, axis_name: str, n_shards: int,
                 outbox_has.astype(jnp.int8), axis_name, split_axis=0,
                 concat_axis=0, tiled=True,
             ) > 0
-            if prog.combine == "min":
-                inbox = rec.min(axis=0)
-            elif prog.combine == "max":
-                inbox = rec.max(axis=0)
-            else:
-                inbox = jnp.where(rec_has, rec, 0).sum(axis=0)
+            inbox = monoid.reduce_rows(rec, rec_has, axis=0)
             has = rec_has.any(axis=0)
             pay = None
             if prog.with_payload:
                 rec_pay = lax.all_to_all(outbox_pay, axis_name, split_axis=0,
                                          concat_axis=0, tiled=True)
-                idx = jnp.argmin(rec, axis=0)
+                idx = monoid.argbest(rec, axis=0)
                 pay = jnp.take_along_axis(rec_pay, idx[None], axis=0)[0]
                 outbox_pay = jnp.full_like(outbox_pay, -1)
             vstate, activated = prog.receive(vstate, inbox, has, pay,
                                              sg_s["node_ok"])
             active = active | activated
-            outbox = jnp.full((S, Np), ident_f(), prog.msg_dtype)
-            outbox_has = jnp.zeros((S, Np), bool)
+            outbox = jnp.full((S,) + lane + (Np,), ident_f(), prog.msg_dtype)
+            outbox_has = jnp.zeros((S,) + lane + (Np,), bool)
             live = lax.psum(jnp.sum(active.astype(jnp.int32)), axis_name)
             delivered = lax.psum(n_ops, axis_name)
             stats = stats._replace(

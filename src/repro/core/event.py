@@ -18,7 +18,8 @@ from typing import Callable, NamedTuple
 
 from .termination import DijkstraScholten
 
-__all__ = ["EventStats", "run_event", "event_sssp", "build_adjacency"]
+__all__ = ["EventStats", "run_event", "event_sssp", "event_diffuse",
+           "build_adjacency"]
 
 
 class EventStats(NamedTuple):
@@ -105,6 +106,70 @@ def run_event(
         ds_terminated=ds.terminated(),
         ds_was_premature=premature,
     )
+
+
+def event_diffuse(prog, src, dst, weight, n: int, node_ok=None,
+                  schedule: str = "lifo"):
+    """Run *any* lowered :class:`~.programs.VertexProgram` one message at
+    a time — the generic host oracle behind ``engine="event"``.
+
+    The same emit/receive/on_send functions the batched engines trace are
+    executed here on per-vertex scalars, so every program registered
+    through the ``@diffusive`` extension point gets the event engine (and
+    its real Dijkstra–Scholten termination) for free.  Selection-monoid
+    programs (min/max) reproduce the batched fixed point exactly; sum
+    programs agree to float re-association.
+
+    Returns (state dict of [n] numpy arrays, EventStats).
+    """
+    import types
+
+    import numpy as np
+
+    adj = build_adjacency(src, dst, weight, n)
+    deg = np.zeros(n, np.int32)
+    for s in np.asarray(src):
+        deg[int(s)] += 1
+    ok = (np.ones(n, bool) if node_ok is None
+          else np.asarray(node_ok, bool).copy())
+
+    view = types.SimpleNamespace(
+        gid=np.arange(n, dtype=np.int32), node_ok=ok, out_degree=deg
+    )
+    vstate0, active0 = prog.init(view)
+    state = {k: np.asarray(v).copy() for k, v in vstate0.items()}
+    active0 = np.asarray(active0)
+
+    def vertex(v):
+        return {k: a[v] for k, a in state.items()}
+
+    def fire(v):
+        """The vertex action: emit along v's out-edges, then the sender
+        transition — one diffusion step of the paper's vertex_func."""
+        vs = vertex(v)
+        outs = []
+        for u, w in adj[v]:
+            m = prog.emit(vs, np.float32(w), np.int32(v), np.int32(u))
+            pay = (int(prog.payload(vs, np.int32(v)))
+                   if prog.with_payload else None)
+            outs.append((u, (np.asarray(m, prog.msg_dtype)[()], pay)))
+        new = prog.on_send(vs, True)
+        for k in state:
+            state[k][v] = np.asarray(new[k], state[k].dtype)[()]
+        return outs
+
+    def handler(v, msg):
+        val, pay = msg
+        out, activated = prog.receive(vertex(v), val, True, pay, ok[v])
+        for k in state:
+            state[k][v] = np.asarray(out[k], state[k].dtype)[()]
+        return fire(v) if bool(activated) else []
+
+    init_msgs = []
+    for v in np.flatnonzero(active0):
+        init_msgs.extend(fire(int(v)))
+    stats = run_event(n, handler, init_msgs, schedule=schedule)
+    return state, stats
 
 
 def event_sssp(adj, n: int, source: int, schedule: str = "lifo"):

@@ -1,0 +1,168 @@
+"""First-class combine monoids for diffusive programs.
+
+The paper's soundness argument — any delivery order reaches the same fixed
+point — rests on the message-combine operator being an associative,
+commutative monoid.  PR 1/2 encoded that operator as a bare ``'min' |
+'sum' | 'max'`` string scattered across engine and kernels; here it is a
+first-class, *user-registrable* object carrying
+
+* ``op``          — the elementwise combine,
+* ``identity``    — the identity element per message dtype,
+* ``payload``     — the optional payload rule (``'argbest'``: an int32
+  payload rides along with the winning message; only meaningful for
+  *selection* monoids, where the combined value equals one of its inputs),
+* ``kind``        — the scatter class (``'min' | 'max' | 'sum'``) that
+  implements this monoid in the segment/scatter kernels.
+
+``kind`` is the contract with the relaxation kernels (kernels/edge_relax):
+the blocked and flat combines use the native XLA scatter/segment op of the
+class, so a registered monoid's ``op`` must agree with its class on the
+message dtypes it is used with (e.g. logical-or over {0, 1} integers *is*
+``max``; float min over a set is ``min``).  The monoid-law property test
+(tests/test_programs.py) checks associativity, commutativity, identity,
+and kind-consistency for every registered monoid.
+
+Engines route every elementwise merge, row reduction, and payload
+selection through the methods below, so the builtin fast paths stay
+bitwise-identical to PR 2 while custom ``op``/``identity_of`` monoids fold
+generically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+from .msg import identity_for
+
+__all__ = ["Monoid", "MONOIDS", "register_monoid", "as_monoid",
+           "MIN", "MAX", "SUM"]
+
+_KINDS = ("min", "max", "sum")
+
+
+@dataclasses.dataclass(frozen=True)
+class Monoid:
+    """Associative-commutative message combine (see module docstring).
+
+    ``op``/``identity_of`` default to the ``kind``'s native operator; pass
+    custom callables to register a new monoid of an existing scatter
+    class.  Frozen + hashable, so a :class:`~.programs.VertexProgram`
+    carrying one is a valid jit static argument.
+    """
+
+    name: str
+    kind: str                              # scatter class: 'min'|'max'|'sum'
+    op: Callable | None = None             # custom (a, b) -> combined
+    identity_of: Callable | None = None    # custom dtype -> scalar
+    payload: str | None = None             # 'argbest' | None
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(
+                f"monoid kind must be one of {_KINDS}, got {self.kind!r}")
+        if self.payload not in (None, "argbest"):
+            raise ValueError(f"unknown payload rule {self.payload!r}")
+        if self.payload == "argbest" and self.kind == "sum":
+            raise ValueError(
+                "payload='argbest' needs a selection monoid (kind 'min' or"
+                " 'max'); a sum-combined message is not any single input")
+
+    # -- elementwise ----------------------------------------------------
+
+    def identity(self, dtype):
+        if self.identity_of is not None:
+            return jnp.asarray(self.identity_of(dtype), dtype)
+        return identity_for(self.kind, dtype)
+
+    def elem(self, a, b):
+        """Raw elementwise combine (both sides present)."""
+        if self.op is not None:
+            return self.op(a, b)
+        if self.kind == "min":
+            return jnp.minimum(a, b)
+        if self.kind == "max":
+            return jnp.maximum(a, b)
+        return a + b
+
+    def merge(self, a, b, b_has):
+        """Fold ``b`` into accumulator ``a``; ``b_has`` masks absent
+        messages (absent ``b`` positions hold the identity already for
+        selection monoids, but sum and custom ops must not touch them)."""
+        if self.op is None:
+            if self.kind == "sum":
+                return a + jnp.where(b_has, b, jnp.zeros_like(b))
+            return self.elem(a, b)
+        return jnp.where(b_has, self.op(a, b), a)
+
+    def improves(self, new, old):
+        """Would ``new`` replace ``old`` as the combined value?  Drives
+        which message's payload rides in the outbox (selection monoids);
+        sum monoids carry no payload, any contribution 'improves'."""
+        if self.kind == "min":
+            return new < old
+        if self.kind == "max":
+            return new > old
+        return jnp.ones(jnp.broadcast_shapes(jnp.shape(new), jnp.shape(old)),
+                        bool)
+
+    # -- reductions -----------------------------------------------------
+
+    def reduce_rows(self, arr, has, axis: int = 0):
+        """Combine along ``axis`` (the mailbox-merge of per-source rows);
+        ``has`` masks absent entries.  Builtin kinds use the native XLA
+        reduction (bitwise-stable with PR 2); custom ops fold."""
+        if self.op is None:
+            if self.kind == "min":
+                return arr.min(axis=axis)
+            if self.kind == "max":
+                return arr.max(axis=axis)
+            return jnp.where(has, arr, jnp.zeros_like(arr)).sum(axis=axis)
+        acc = jnp.take(arr, 0, axis=axis)
+        acc_has = jnp.take(has, 0, axis=axis)
+        for i in range(1, arr.shape[axis]):
+            b, bh = jnp.take(arr, i, axis=axis), jnp.take(has, i, axis=axis)
+            nxt = jnp.where(acc_has & bh, self.op(acc, b),
+                            jnp.where(bh, b, acc))
+            acc, acc_has = nxt, acc_has | bh
+        return acc
+
+    def argbest(self, arr, axis: int = 0):
+        """Index of the winning row along ``axis`` (payload selection)."""
+        if self.payload != "argbest":
+            raise ValueError(
+                f"monoid {self.name!r} has no payload rule; only "
+                "payload='argbest' monoids select a winning message")
+        return (jnp.argmin if self.kind == "min" else jnp.argmax)(
+            arr, axis=axis)
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+MONOIDS: dict[str, Monoid] = {}
+
+
+def register_monoid(m: Monoid) -> Monoid:
+    """Register a monoid for name-based lookup in program specs."""
+    MONOIDS[m.name] = m
+    return m
+
+
+def as_monoid(m) -> Monoid:
+    """Coerce a registry name or Monoid instance to a Monoid."""
+    if isinstance(m, Monoid):
+        return m
+    if m in MONOIDS:
+        return MONOIDS[m]
+    raise KeyError(
+        f"unknown monoid {m!r}; registered: {sorted(MONOIDS)} "
+        "(register_monoid to add)")
+
+
+MIN = register_monoid(Monoid("min", "min", payload="argbest"))
+MAX = register_monoid(Monoid("max", "max", payload="argbest"))
+SUM = register_monoid(Monoid("sum", "sum"))

@@ -1,61 +1,106 @@
-"""Vertex programs — the ``hpx_diffuse`` contract, vectorized.
+"""Diffusive programs — the ``hpx_diffuse`` contract as a declarative,
+user-registrable spec.
 
 The paper's Code Listing 3 primitive is::
 
     hpx_diffuse(vertex_id, vertex_func, args..., terminator, predicate)
 
-A :class:`VertexProgram` carries exactly those pieces in TPU-vectorized form:
+PR 1/2 hardcoded five vectorized realizations of that contract as closure
+factories only the engine authors could extend.  This module turns the
+contract into a public extension point (DESIGN.md §2.7):
 
-* ``emit``       — the body of ``vertex_func`` that generates messages along
-                   out-edges (the diffusion),
-* ``receive``    — the *predicate* + state update at the target vertex; it
-                   returns which vertices (re)activate, gating new work,
-* ``on_send``    — sender-side state transition when a vertex fires
-                   (identity for SSSP; residual-consumption for PageRank),
-* the terminator is the engine's quiescence detector (see diffuse.py /
-  termination.py).
+* :class:`DiffusiveProgram` — a *declarative spec*: a typed vertex-state
+  schema (named :class:`Field`\\ s: dtype + init expression + dead-slot
+  value), a first-class :class:`~.monoid.Monoid`, and pure
+  ``emit / receive / on_send / priority`` functions over the named state;
+* :func:`diffusive` — the registration decorator: a decorated factory is
+  invocable by name through every engine (``sharded`` / ``event`` /
+  ``spmd``), both kernel backends (``xla`` / ``pallas``), the session
+  cache, and commit()-time repair, with zero engine changes;
+* :func:`lower` — compiles a spec to the engine IR
+  (:class:`VertexProgram`), whose function fields the relaxation kernels
+  trace straight into their bodies;
+* :func:`make_laned` — stacks B single-query programs into one program
+  with a lane axis, so ``session.query(sssp(sources=[...]))`` amortizes
+  B queries over a single edge sweep (multi-query lanes, DESIGN.md §2.7).
 
-Messages are combined with an associative-commutative monoid (min/sum/max) so
-delivery order cannot matter — this is what makes the paper's "no DAG, any
-path to the fixed point" semantics sound under bulk-asynchronous execution.
+The five builtins (SSSP / BFS / CC / PPR / PageRank) are themselves
+written on the public spec, as are the two proof-of-extensibility
+programs ``widest`` (max-bottleneck path) and ``reach``
+(multi-source reachability).
+
+Messages are combined with an associative-commutative monoid so delivery
+order cannot matter — this is what makes the paper's "no DAG, any path to
+the fixed point" semantics sound under bulk-asynchronous execution.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable, Any
+import inspect
+from typing import Any, Callable, NamedTuple
 
+import jax
 import jax.numpy as jnp
 
-from .graph import ShardedGraph
+import numpy as np
 
-__all__ = ["VertexProgram", "sssp_program", "bfs_program", "cc_program",
-           "ppr_program", "pagerank_program"]
+from .monoid import Monoid, as_monoid
 
+__all__ = [
+    "Field", "DiffusiveProgram", "VertexProgram", "ProgramSpec",
+    "BoundQuery", "ProgramHandle", "diffusive", "lower", "make_laned",
+    "PROGRAMS", "register_program", "freeze_kwargs",
+    "sssp", "bfs", "cc", "ppr", "pagerank", "widest", "reach",
+    "sssp_program", "bfs_program", "cc_program", "ppr_program",
+    "pagerank_program", "widest_program", "reach_program",
+]
+
+
+# --------------------------------------------------------------------------
+# engine IR — what diffuse.py / the relax kernels consume
+# --------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class VertexProgram:
-    """Vectorized vertex program (see module docstring).
+    """Lowered (engine-facing) vertex program.
 
-    Shapes (per shard): vertex-state leaves are [Np]; edge args are [Ep].
+    Shapes (per shard): vertex-state leaves are [Np] — or [L, Np] when
+    ``lanes`` is set (multi-query lanes; see :func:`make_laned`) — and
+    edge args are [Ep].  Hashable with stable identity (specs lower
+    through a cache), so it serves as the jit static argument.
     """
 
-    combine: str                   # 'min' | 'sum' | 'max'
+    monoid: Monoid                 # first-class combine (min/max/sum class)
     msg_dtype: Any
-    # (sg) -> (vstate pytree of [S, Np] leaves, active [S, Np] bool)
+    # (view) -> (vstate pytree of [.., Np] leaves, active [.., Np] bool)
     init: Callable
-    # (src_state pytree [Ep], weight [Ep], src_gid [Ep], dst_gid [Ep]) -> msg [Ep]
+    # (src_state pytree [Ep], weight [Ep], src_gid [Ep], dst_gid [Ep]) -> msg
     emit: Callable
     # (vstate [Np] leaves, sent_mask [Np]) -> vstate
     on_send: Callable
-    # (vstate, inbox [Np], has_msg [Np], payload [Np] int32|None, node_ok [Np])
+    # (vstate, inbox [Np], has_msg [Np], payload [Np] int32|None, node_ok)
     #   -> (vstate, activated [Np] bool)
     receive: Callable
-    # optional argmin payload: (src_state [Ep], src_gid [Ep]) -> int32 [Ep]
+    # optional argbest payload: (src_state [Ep], src_gid [Ep]) -> int32 [Ep]
     payload: Callable | None = None
     # optional bucket priority (delta-stepping gate): (vstate) -> f32 [Np]
     priority: Callable | None = None
+    lanes: int | None = None       # lane count; None = single-query program
+    name: str = ""
+
+    def __post_init__(self):
+        if not isinstance(self.monoid, Monoid):
+            object.__setattr__(self, "monoid", as_monoid(self.monoid))
+        if self.payload is not None and self.monoid.payload != "argbest":
+            raise ValueError(
+                f"program {self.name!r} carries a payload but monoid "
+                f"{self.monoid.name!r} has no 'argbest' payload rule")
+
+    @property
+    def combine(self) -> str:
+        """Scatter class of the monoid — the kernels' dispatch string."""
+        return self.monoid.kind
 
     @property
     def with_payload(self) -> bool:
@@ -63,31 +108,289 @@ class VertexProgram:
 
 
 # --------------------------------------------------------------------------
-# SSSP — the paper's running example (Code Listings 1, 2, 4).
+# declarative spec + lowering
 # --------------------------------------------------------------------------
 
-@functools.lru_cache(maxsize=256)  # stable identity => no jit recompiles
-def sssp_program(source: int, track_parents: bool = True) -> VertexProgram:
-    """Diffusive SSSP: msg = dist(src) + w; predicate ``msg < dist(v)``."""
+@dataclasses.dataclass(frozen=True, eq=False)
+class Field:
+    """One named vertex-state field: dtype + init expression.
 
-    def init(sg: ShardedGraph):
-        dist = jnp.where(
-            sg.gid == source, 0.0, jnp.inf
-        ).astype(jnp.float32)
-        dist = jnp.where(sg.node_ok, dist, jnp.inf)
-        vstate = {"dist": dist}
-        if track_parents:
-            vstate["parent"] = jnp.where(sg.gid == source, source, -1).astype(
-                jnp.int32
-            )
-        active = (sg.gid == source) & sg.node_ok
+    ``init`` is a scalar or a pure function of the graph view (an object
+    with ``gid`` / ``node_ok`` / ``out_degree`` arrays); ``on_dead``, when
+    given, overwrites dead/free vertex slots (deleted vertices and spare
+    capacity) so stale slot contents can never leak into a fixed point.
+    """
+
+    dtype: Any
+    init: Any = 0
+    on_dead: Any = None
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class DiffusiveProgram:
+    """Declarative diffusive-program spec (see module docstring).
+
+    ``emit`` / ``receive`` / ``on_send`` / ``priority`` are pure functions
+    over the *named* state dict declared in ``state`` — the same
+    vectorized signatures as :class:`VertexProgram` (they are traced into
+    the relaxation kernels unchanged by :func:`lower`).
+    """
+
+    monoid: Monoid | str
+    msg_dtype: Any
+    state: Any                          # mapping name -> Field (ordered)
+    emit: Callable
+    receive: Callable
+    init_active: Callable | None = None  # (view) -> bool mask; None = all
+    on_send: Callable | None = None      # None = identity
+    payload: Callable | None = None
+    priority: Callable | None = None
+
+
+def lower(spec: DiffusiveProgram, name: str = "") -> VertexProgram:
+    """Compile a declarative spec to the engine IR.
+
+    Builds the vectorized ``init`` from the state schema: evaluate each
+    field's init expression over the graph view, cast to the declared
+    dtype, splat ``on_dead`` over dead slots, and intersect the initial
+    frontier with ``node_ok``.
+    """
+    monoid = as_monoid(spec.monoid)
+    fields = tuple(spec.state.items())
+
+    def init(view):
+        shape = view.gid.shape
+        vstate = {}
+        for fname, f in fields:
+            v = f.init(view) if callable(f.init) else f.init
+            v = jnp.broadcast_to(jnp.asarray(v), shape).astype(f.dtype)
+            if f.on_dead is not None:
+                v = jnp.where(view.node_ok, v,
+                              jnp.asarray(f.on_dead, f.dtype))
+            vstate[fname] = v
+        mask = (spec.init_active(view) if spec.init_active is not None
+                else jnp.ones(shape, bool))
+        return vstate, mask & view.node_ok
+
+    return VertexProgram(
+        monoid=monoid,
+        msg_dtype=spec.msg_dtype,
+        init=init,
+        emit=spec.emit,
+        on_send=spec.on_send or (lambda vstate, sent: vstate),
+        receive=spec.receive,
+        payload=spec.payload,
+        priority=spec.priority,
+        name=name,
+    )
+
+
+# --------------------------------------------------------------------------
+# registry — one lookup path for names, handles, and bound queries
+# --------------------------------------------------------------------------
+
+class ProgramSpec(NamedTuple):
+    """Registry entry making a program invocable by name (DESIGN.md §2.4).
+
+    ``lane_param`` names the kwarg whose plural form fans out into query
+    lanes (``source`` -> ``sources``); lane-varying params may only
+    influence the init schema / initial frontier, never emit/receive.
+    """
+
+    name: str
+    factory: Callable | None     # (**kwargs) -> VertexProgram
+    value_key: str
+    repair: str = "restart"      # 'parents' | 'component' | 'restart'
+    monotone: bool = False       # insert-only warm start is sound
+    event_fn: Callable | None = None   # (session, **kwargs) -> (values, st)
+    run_fn: Callable | None = None     # custom query (e.g. triangles)
+    lane_param: str | None = None
+
+
+PROGRAMS: dict[str, ProgramSpec] = {}
+
+
+def register_program(spec: ProgramSpec) -> ProgramSpec:
+    PROGRAMS[spec.name] = spec
+    return spec
+
+
+def freeze_kwargs(kwargs: dict) -> tuple:
+    """Deterministic hashable form of query/program kwargs: lists, arrays,
+    sets, and dicts become sorted/ordered tuples (so ``sources=[...]``
+    can key a cache instead of raising TypeError)."""
+    def _freeze(v):
+        if isinstance(v, (list, tuple)):
+            return tuple(_freeze(x) for x in v)
+        if isinstance(v, (set, frozenset)):
+            return tuple(sorted(_freeze(x) for x in v))
+        if isinstance(v, (np.ndarray, jnp.ndarray)):
+            a = np.asarray(v)
+            return a.item() if a.ndim == 0 else tuple(
+                _freeze(x) for x in a.tolist())
+        if isinstance(v, dict):
+            return tuple(sorted((k, _freeze(x)) for k, x in v.items()))
+        if isinstance(v, np.generic):
+            return v.item()
+        return v
+    return tuple(sorted((k, _freeze(v)) for k, v in kwargs.items()))
+
+
+# Stable-identity caches of lowered programs (a rebuilt program would jit
+# afresh).  Bounded like PR 1/2's lru_cache(256): a serving process that
+# sees millions of distinct sources must not retain every closure forever
+# — evicting merely costs the evictee a recompile on its next use.
+_PROGRAM_CACHE_SIZE = 256
+
+
+def _evict_oldest(cache: dict, limit: int):
+    while len(cache) >= limit:
+        cache.pop(next(iter(cache)))
+
+
+class BoundQuery(NamedTuple):
+    """A program invocation bound to its kwargs — what a
+    :class:`ProgramHandle` call returns, and what ``session.query`` /
+    ``session.peek`` accept interchangeably with a registry name."""
+
+    name: str
+    kwargs: dict
+
+
+class ProgramHandle:
+    """The object a :func:`diffusive` decoration returns.
+
+    Calling it binds kwargs into a :class:`BoundQuery` for
+    ``session.query(sssp(source=3))`` / ``query(sssp(sources=[...]))``;
+    :meth:`build` lowers the spec to a cached :class:`VertexProgram`
+    (stable identity per canonicalized kwargs => no jit recompiles).
+    """
+
+    def __init__(self, name: str, fn: Callable, value_key: str,
+                 lane_param: str | None = None):
+        self.name = name
+        self.fn = fn
+        self.value_key = value_key
+        self.lane_param = lane_param
+        self._built: dict[tuple, VertexProgram] = {}
+        self.__doc__ = fn.__doc__
+
+    def __call__(self, **kwargs) -> BoundQuery:
+        return BoundQuery(self.name, dict(kwargs))
+
+    def build(self, *args, **kwargs) -> VertexProgram:
+        bound = inspect.signature(self.fn).bind(*args, **kwargs)
+        bound.apply_defaults()
+        key = freeze_kwargs(bound.arguments)
+        if key not in self._built:
+            spec = self.fn(**bound.arguments)
+            if not isinstance(spec, DiffusiveProgram):
+                raise TypeError(
+                    f"@diffusive factory {self.name!r} must return a "
+                    f"DiffusiveProgram, got {type(spec).__name__}")
+            _evict_oldest(self._built, _PROGRAM_CACHE_SIZE)
+            self._built[key] = lower(spec, name=self.name)
+        return self._built[key]
+
+    def __repr__(self):
+        return f"<diffusive program {self.name!r}>"
+
+
+def diffusive(name: str, *, value_key: str, repair: str = "restart",
+              monotone: bool = False, lane_param: str | None = None):
+    """Register a user-defined diffusive program (DESIGN.md §2.7).
+
+    Decorate a factory ``(**params) -> DiffusiveProgram``; the returned
+    handle is callable (binding kwargs for ``session.query``) and the
+    program becomes name-invocable across all engines, kernel backends,
+    the session cache, and commit()-time repair::
+
+        @diffusive("widest", value_key="width", monotone=True,
+                   lane_param="source")
+        def widest(source: int):
+            return DiffusiveProgram(monoid="max", ...)
+
+    ``repair`` picks the commit()-time strategy ('parents' | 'component'
+    | 'restart'); ``monotone`` allows the warm-frontier path for
+    insert-only batches; ``lane_param`` enables multi-query lanes over
+    the pluralized kwarg.
+    """
+    def deco(fn: Callable) -> ProgramHandle:
+        handle = ProgramHandle(name, fn, value_key, lane_param)
+        register_program(ProgramSpec(
+            name, handle.build, value_key, repair=repair, monotone=monotone,
+            lane_param=lane_param,
+        ))
+        return handle
+    return deco
+
+
+# --------------------------------------------------------------------------
+# multi-query lanes
+# --------------------------------------------------------------------------
+
+_LANED: dict[tuple, VertexProgram] = {}
+
+
+def make_laned(progs) -> VertexProgram:
+    """Stack B single-query programs into one laned program.
+
+    Vertex-state leaves and the active mask gain a lane axis (per shard:
+    [Np] -> [L, Np]); emit/receive/on_send/priority come from the first
+    program and broadcast over lanes, so the lane-varying kwargs (the
+    registry's ``lane_param``) may only influence the init schema and the
+    initial frontier.  The engines then run one edge sweep per
+    sub-iteration for all B queries (DESIGN.md §2.7).
+
+    Cached on the program tuple => stable identity, no jit recompiles
+    for a repeated batch shape (bounded — see ``_PROGRAM_CACHE_SIZE``).
+    """
+    progs = tuple(progs)
+    if not progs:
+        raise ValueError("make_laned needs at least one program")
+    if progs in _LANED:
+        return _LANED[progs]
+    _evict_oldest(_LANED, _PROGRAM_CACHE_SIZE)
+    base = progs[0]
+    for p in progs[1:]:
+        if (p.monoid != base.monoid or p.msg_dtype != base.msg_dtype
+                or (p.payload is None) != (base.payload is None)):
+            raise ValueError(
+                "lane programs must share monoid, msg dtype, and "
+                "payload-ness (only init may vary per lane)")
+
+    def init(view):
+        outs = [p.init(view) for p in progs]
+        vstate = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, axis=-2), *[o[0] for o in outs])
+        active = jnp.stack([o[1] for o in outs], axis=-2)
         return vstate, active
 
-    def emit(src_state, weight, src_gid, dst_gid):
-        return src_state["dist"] + weight
+    laned = dataclasses.replace(
+        base, init=init, lanes=len(progs),
+        name=f"{base.name or 'prog'}[x{len(progs)}]",
+    )
+    _LANED[progs] = laned
+    return laned
 
-    def on_send(vstate, sent):
-        return vstate
+
+# --------------------------------------------------------------------------
+# the builtins, written on the public spec
+# --------------------------------------------------------------------------
+
+@diffusive("sssp", value_key="dist", repair="parents", monotone=True,
+           lane_param="source")
+def sssp(source: int, track_parents: bool = True) -> DiffusiveProgram:
+    """Diffusive SSSP: msg = dist(src) + w; predicate ``msg < dist(v)``
+    (the paper's running example, Code Listings 1, 2, 4)."""
+    state = {"dist": Field(jnp.float32,
+                           init=lambda v: jnp.where(v.gid == source, 0.0,
+                                                    jnp.inf),
+                           on_dead=jnp.inf)}
+    if track_parents:
+        state["parent"] = Field(jnp.int32,
+                                init=lambda v: jnp.where(v.gid == source,
+                                                         source, -1))
 
     def receive(vstate, inbox, has_msg, payload, node_ok):
         better = has_msg & (inbox < vstate["dist"]) & node_ok
@@ -97,92 +400,58 @@ def sssp_program(source: int, track_parents: bool = True) -> VertexProgram:
             out["parent"] = jnp.where(better, payload, vstate["parent"])
         return out, better
 
-    return VertexProgram(
-        combine="min",
+    return DiffusiveProgram(
+        monoid="min",
         msg_dtype=jnp.float32,
-        init=init,
-        emit=emit,
-        on_send=on_send,
+        state=state,
+        init_active=lambda v: v.gid == source,
+        emit=lambda s, weight, src_gid, dst_gid: s["dist"] + weight,
         receive=receive,
-        payload=(lambda src_state, src_gid: src_gid) if track_parents else None,
+        payload=(lambda s, src_gid: src_gid) if track_parents else None,
         priority=lambda vstate: vstate["dist"],
     )
 
 
-@functools.lru_cache(maxsize=256)
-def bfs_program(source: int) -> VertexProgram:
+@diffusive("bfs", value_key="dist", monotone=True, lane_param="source")
+def bfs(source: int) -> DiffusiveProgram:
     """BFS = SSSP with unit edge messages (level = hops)."""
-
-    def init(sg: ShardedGraph):
-        level = jnp.where(sg.gid == source, 0.0, jnp.inf).astype(jnp.float32)
-        level = jnp.where(sg.node_ok, level, jnp.inf)
-        return {"dist": level}, (sg.gid == source) & sg.node_ok
-
-    def emit(src_state, weight, src_gid, dst_gid):
-        return src_state["dist"] + 1.0
-
     def receive(vstate, inbox, has_msg, payload, node_ok):
         better = has_msg & (inbox < vstate["dist"]) & node_ok
         return {"dist": jnp.where(better, inbox, vstate["dist"])}, better
 
-    return VertexProgram(
-        combine="min",
+    return DiffusiveProgram(
+        monoid="min",
         msg_dtype=jnp.float32,
-        init=init,
-        emit=emit,
-        on_send=lambda v, s: v,
+        state={"dist": Field(jnp.float32,
+                             init=lambda v: jnp.where(v.gid == source, 0.0,
+                                                      jnp.inf),
+                             on_dead=jnp.inf)},
+        init_active=lambda v: v.gid == source,
+        emit=lambda s, weight, src_gid, dst_gid: s["dist"] + 1.0,
         receive=receive,
     )
 
 
-@functools.lru_cache(maxsize=8)
-def cc_program() -> VertexProgram:
-    """Connected components by min-label diffusion (all vertices start active)."""
-
-    def init(sg: ShardedGraph):
-        comp = jnp.where(sg.node_ok, sg.gid, jnp.iinfo(jnp.int32).max).astype(
-            jnp.int32
-        )
-        return {"comp": comp}, sg.node_ok
-
-    def emit(src_state, weight, src_gid, dst_gid):
-        return src_state["comp"]
-
+@diffusive("cc", value_key="comp", repair="component", monotone=True)
+def cc() -> DiffusiveProgram:
+    """Connected components by min-label diffusion (all vertices start
+    active)."""
     def receive(vstate, inbox, has_msg, payload, node_ok):
         better = has_msg & (inbox < vstate["comp"]) & node_ok
         return {"comp": jnp.where(better, inbox, vstate["comp"])}, better
 
-    return VertexProgram(
-        combine="min",
+    return DiffusiveProgram(
+        monoid="min",
         msg_dtype=jnp.int32,
-        init=init,
-        emit=emit,
-        on_send=lambda v, s: v,
+        state={"comp": Field(jnp.int32, init=lambda v: v.gid,
+                             on_dead=jnp.iinfo(jnp.int32).max)},
+        emit=lambda s, weight, src_gid, dst_gid: s["comp"],
         receive=receive,
     )
 
 
-@functools.lru_cache(maxsize=32)
-def pagerank_program(alpha: float = 0.15, eps: float = 1e-6) -> VertexProgram:
-    """Global PageRank by forward push from a uniform start distribution.
-
-    Fixed point: rank = alpha * sum_k (1-alpha)^k (W^T)^k u, i.e. PageRank
-    with teleport alpha.  A *sum-combine* diffusion where every vertex is a
-    source — the densest operon traffic the engine generates."""
-
-    def init(sg):
-        n = jnp.maximum(jnp.sum(sg.node_ok.astype(jnp.float32)), 1.0)
-        res = jnp.where(sg.node_ok, 1.0 / n, 0.0).astype(jnp.float32)
-        vstate = {
-            "rank": jnp.zeros_like(res),
-            "residual": res,
-            "deg": jnp.maximum(sg.out_degree, 1).astype(jnp.float32),
-        }
-        return vstate, sg.node_ok
-
-    def emit(src_state, weight, src_gid, dst_gid):
-        return (1.0 - alpha) * src_state["residual"] / src_state["deg"]
-
+def _push_spec(residual_init, active_init, alpha: float, eps: float):
+    """Shared forward-push schema for PPR / PageRank (sum-combine)."""
     def on_send(vstate, sent):
         rank = vstate["rank"] + jnp.where(sent, alpha * vstate["residual"],
                                           0.0)
@@ -196,55 +465,129 @@ def pagerank_program(alpha: float = 0.15, eps: float = 1e-6) -> VertexProgram:
         out["residual"] = residual
         return out, (residual > eps) & node_ok
 
-    return VertexProgram(
-        combine="sum",
+    return DiffusiveProgram(
+        monoid="sum",
         msg_dtype=jnp.float32,
-        init=init,
-        emit=emit,
+        state={
+            "rank": Field(jnp.float32, init=0.0),
+            "residual": Field(jnp.float32, init=residual_init, on_dead=0.0),
+            "deg": Field(jnp.float32,
+                         init=lambda v: jnp.maximum(v.out_degree, 1)),
+        },
+        init_active=active_init,
+        emit=lambda s, weight, src_gid, dst_gid:
+            (1.0 - alpha) * s["residual"] / s["deg"],
         on_send=on_send,
         receive=receive,
     )
 
 
-@functools.lru_cache(maxsize=256)
-def ppr_program(source: int, alpha: float = 0.15, eps: float = 1e-4) -> VertexProgram:
+@diffusive("ppr", value_key="rank", lane_param="source")
+def ppr(source: int, alpha: float = 0.15, eps: float = 1e-4) -> DiffusiveProgram:
     """Personalized PageRank by forward push — a *sum-combine* diffusion.
 
-    Active vertex v: rank += alpha * r(v); pushes (1-alpha) * r(v) / deg(v) to
-    each neighbor; r(v) = 0.  Receiver activates when r(u) > eps.
-    Monotone-terminating because total residual shrinks by alpha per push.
-    """
+    Active vertex v: rank += alpha * r(v); pushes (1-alpha) * r(v) /
+    deg(v) to each neighbor; r(v) = 0.  Receiver activates when
+    r(u) > eps.  Monotone-terminating because total residual shrinks by
+    alpha per push."""
+    return _push_spec(
+        residual_init=lambda v: jnp.where(v.gid == source, 1.0, 0.0),
+        active_init=lambda v: v.gid == source,
+        alpha=alpha, eps=eps,
+    )
 
-    def init(sg: ShardedGraph):
-        res = jnp.where(sg.gid == source, 1.0, 0.0).astype(jnp.float32)
-        res = jnp.where(sg.node_ok, res, 0.0)
-        vstate = {
-            "rank": jnp.zeros_like(res),
-            "residual": res,
-            "deg": jnp.maximum(sg.out_degree, 1).astype(jnp.float32),
-        }
-        return vstate, (sg.gid == source) & sg.node_ok
 
-    def emit(src_state, weight, src_gid, dst_gid):
-        return (1.0 - alpha) * src_state["residual"] / src_state["deg"]
+@diffusive("pagerank", value_key="rank")
+def pagerank(alpha: float = 0.15, eps: float = 1e-6) -> DiffusiveProgram:
+    """Global PageRank by forward push from a uniform start distribution.
 
-    def on_send(vstate, sent):
-        rank = vstate["rank"] + jnp.where(sent, alpha * vstate["residual"], 0.0)
-        residual = jnp.where(sent, 0.0, vstate["residual"])
-        return {"rank": rank, "residual": residual, "deg": vstate["deg"]}
+    Fixed point: rank = alpha * sum_k (1-alpha)^k (W^T)^k u, i.e.
+    PageRank with teleport alpha.  A sum-combine diffusion where every
+    vertex is a source — the densest operon traffic the engine
+    generates."""
+    def uniform(v):
+        n = jnp.maximum(jnp.sum(v.node_ok.astype(jnp.float32)), 1.0)
+        return jnp.where(v.node_ok, 1.0 / n, 0.0)
+
+    return _push_spec(residual_init=uniform, active_init=None,
+                      alpha=alpha, eps=eps)
+
+
+# --------------------------------------------------------------------------
+# proof of extensibility: two programs written purely through the public
+# extension point (no engine, kernel, or session changes)
+# --------------------------------------------------------------------------
+
+@diffusive("widest", value_key="width", monotone=True, lane_param="source")
+def widest(source: int, track_parents: bool = False) -> DiffusiveProgram:
+    """Widest path (max-bottleneck): the best path maximizes the minimum
+    edge weight along it.  A *max-combine* selection diffusion —
+    msg = min(width(src), w); predicate ``msg > width(v)``."""
+    state = {"width": Field(jnp.float32,
+                            init=lambda v: jnp.where(v.gid == source,
+                                                     jnp.inf, -jnp.inf),
+                            on_dead=-jnp.inf)}
+    if track_parents:
+        state["parent"] = Field(jnp.int32,
+                                init=lambda v: jnp.where(v.gid == source,
+                                                         source, -1))
 
     def receive(vstate, inbox, has_msg, payload, node_ok):
-        residual = vstate["residual"] + jnp.where(has_msg, inbox, 0.0)
-        residual = jnp.where(node_ok, residual, 0.0)
+        better = has_msg & (inbox > vstate["width"]) & node_ok
         out = dict(vstate)
-        out["residual"] = residual
-        return out, (residual > eps) & node_ok
+        out["width"] = jnp.where(better, inbox, vstate["width"])
+        if track_parents and payload is not None:
+            out["parent"] = jnp.where(better, payload, vstate["parent"])
+        return out, better
 
-    return VertexProgram(
-        combine="sum",
+    return DiffusiveProgram(
+        monoid="max",
         msg_dtype=jnp.float32,
-        init=init,
-        emit=emit,
-        on_send=on_send,
+        state=state,
+        init_active=lambda v: v.gid == source,
+        emit=lambda s, weight, src_gid, dst_gid:
+            jnp.minimum(s["width"], weight),
+        receive=receive,
+        payload=(lambda s, src_gid: src_gid) if track_parents else None,
+        priority=lambda vstate: -vstate["width"],
+    )
+
+
+@diffusive("reach", value_key="reached", monotone=True)
+def reach(sources) -> DiffusiveProgram:
+    """Reachability from a vertex set: reached(v) = 1 iff some source
+    reaches v.  Logical-or over {0, 1} — a max-class monoid — seeded from
+    every source at once (one diffusion, not |sources| BFS runs)."""
+    srcs = tuple(int(s) for s in sources)
+
+    def in_set(v):
+        return jnp.isin(v.gid, jnp.asarray(srcs, jnp.int32))
+
+    def receive(vstate, inbox, has_msg, payload, node_ok):
+        better = has_msg & (inbox > vstate["reached"]) & node_ok
+        return ({"reached": jnp.where(better, inbox, vstate["reached"])},
+                better)
+
+    return DiffusiveProgram(
+        monoid="max",
+        msg_dtype=jnp.int32,
+        state={"reached": Field(jnp.int32,
+                                init=lambda v: in_set(v).astype(jnp.int32),
+                                on_dead=0)},
+        init_active=in_set,
+        emit=lambda s, weight, src_gid, dst_gid: s["reached"],
         receive=receive,
     )
+
+
+# --------------------------------------------------------------------------
+# factory aliases (PR 1/2 call style: ``sssp_program(0)``)
+# --------------------------------------------------------------------------
+
+sssp_program = sssp.build
+bfs_program = bfs.build
+cc_program = cc.build
+ppr_program = ppr.build
+pagerank_program = pagerank.build
+widest_program = widest.build
+reach_program = reach.build

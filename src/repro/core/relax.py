@@ -24,6 +24,7 @@ from __future__ import annotations
 from typing import Callable
 
 import jax
+import jax.numpy as jnp
 
 __all__ = ["RELAX_BACKENDS", "make_relax"]
 
@@ -40,11 +41,16 @@ def make_relax(prog, n_shards: int, n_per_shard: int, block_e: int,
 
         table [S, Np]  combined messages per destination (identity = none)
         cnt   [S, Np]  int32 sending-edge count per destination
-        pay   [S, Np]  int32 argmin payload, or None
+        pay   [S, Np]  int32 argbest payload, or None
 
     over the flat destination key space — row ``my_shard`` is the local
     inbox, the other rows are outbox contributions.  vmap it over cells in
     the logical engine; call it per device under shard_map in SPMD.
+
+    For a laned program (``prog.lanes = L`` — see
+    :func:`~.programs.make_laned`) the cell's vstate leaves/senders are
+    [L, Np] and the kernel broadcasts the whole sweep over lanes against
+    one shared edge stream; outputs become [S, L, Np].
     """
     if backend not in RELAX_BACKENDS:
         raise ValueError(
@@ -63,9 +69,19 @@ def make_relax(prog, n_shards: int, n_per_shard: int, block_e: int,
             n_keys=n_keys, block_e=block_e, backend=backend,
             interpret=interpret,
         )
-        table = table.reshape(n_shards, n_per_shard)
-        cnt = cnt.reshape(n_shards, n_per_shard)
-        pay = pay.reshape(n_shards, n_per_shard) if pay is not None else None
+        if prog.lanes:
+            # [L, n_keys] -> [S, L, Np]: destination shard leads so row
+            # my_shard is still the local inbox
+            shp = (-1, n_shards, n_per_shard)
+            table = jnp.swapaxes(table.reshape(shp), 0, 1)
+            cnt = jnp.swapaxes(cnt.reshape(shp), 0, 1)
+            pay = (jnp.swapaxes(pay.reshape(shp), 0, 1)
+                   if pay is not None else None)
+        else:
+            table = table.reshape(n_shards, n_per_shard)
+            cnt = cnt.reshape(n_shards, n_per_shard)
+            pay = (pay.reshape(n_shards, n_per_shard)
+                   if pay is not None else None)
         return table, cnt, pay
 
     return relax

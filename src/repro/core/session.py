@@ -33,7 +33,14 @@ Engine matrix (DESIGN.md §2.5): ``sharded`` is the bulk-asynchronous
 logical engine (default, any program); ``spmd`` shard_maps one compute
 cell per mesh device (any program, needs >= n_cells devices); ``event``
 is the message-at-a-time host oracle with real Dijkstra–Scholten
-termination (programs that register an ``event_fn``).
+termination — a generic interpreter runs any registered program, with
+handwritten fast oracles for SSSP/BFS.
+
+Programs are declarative, user-registrable specs (programs.py, DESIGN.md
+§2.7); ``query`` accepts registry names, ``@diffusive`` handles, bound
+queries, or raw lowered programs, and a pluralized lane param
+(``sources=[...]``) fans out into multi-query lanes of one diffusion
+with per-lane cache entries.
 
 Orthogonally, ``backend="xla" | "pallas"`` (DESIGN.md §2.6) picks the
 relaxation-kernel implementation inside the sharded/spmd engines; both
@@ -43,7 +50,7 @@ produce bitwise-identical fixed points, so it is a pure execution choice.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -55,12 +62,14 @@ from .graph import from_edges
 from .partition import Partitioned, partition
 from .relax import RELAX_BACKENDS
 from .programs import (
+    PROGRAMS,
+    BoundQuery,
+    ProgramHandle,
+    ProgramSpec,
     VertexProgram,
-    bfs_program,
-    cc_program,
-    pagerank_program,
-    ppr_program,
-    sssp_program,
+    freeze_kwargs,
+    make_laned,
+    register_program,
 )
 from .updates import AppliedUpdates, UpdateBatch
 
@@ -79,18 +88,6 @@ class Result(NamedTuple):
     values: np.ndarray          # per-vertex result in global vertex order
     stats: Any                  # DiffuseStats | EventStats | None (cached)
     extra: dict
-
-
-class ProgramSpec(NamedTuple):
-    """Registry entry making a program invocable by name (DESIGN.md §2.4)."""
-
-    name: str
-    factory: Callable           # (**kwargs) -> VertexProgram
-    value_key: str
-    repair: str = "restart"     # 'parents' | 'component' | 'restart'
-    monotone: bool = False      # insert-only warm start is sound
-    event_fn: Callable | None = None   # (session, **kwargs) -> (values, st)
-    run_fn: Callable | None = None     # custom query (e.g. triangles)
 
 
 def _event_sssp(session, source: int = 0, unit_weights: bool = False,
@@ -114,32 +111,14 @@ def _run_triangles(session, engine=None, **kwargs):
                   extra={"triangles": count})
 
 
-PROGRAMS: dict[str, ProgramSpec] = {}
-
-
-def register_program(spec: ProgramSpec):
-    PROGRAMS[spec.name] = spec
-    return spec
-
-
-register_program(ProgramSpec(
-    "sssp", sssp_program, "dist", repair="parents", monotone=True,
-    event_fn=_event_sssp,
-))
-register_program(ProgramSpec(
-    "bfs", bfs_program, "dist", repair="restart", monotone=True,
+# The diffusive programs register themselves in programs.py via the
+# @diffusive decorator; here we attach the session-level extras the
+# decorator cannot know about — the host event-engine oracles and the
+# non-diffusive custom queries.
+PROGRAMS["sssp"] = PROGRAMS["sssp"]._replace(event_fn=_event_sssp)
+PROGRAMS["bfs"] = PROGRAMS["bfs"]._replace(
     event_fn=lambda session, **kw: _event_sssp(session, unit_weights=True,
-                                               **kw),
-))
-register_program(ProgramSpec(
-    "cc", cc_program, "comp", repair="component", monotone=True,
-))
-register_program(ProgramSpec(
-    "ppr", ppr_program, "rank", repair="restart",
-))
-register_program(ProgramSpec(
-    "pagerank", pagerank_program, "rank", repair="restart",
-))
+                                               **kw))
 register_program(ProgramSpec(
     "triangles", None, "", run_fn=_run_triangles,
 ))
@@ -270,7 +249,9 @@ class DiffusionSession:
 
     def _key(self, name: str, engine: str, kwargs: dict,
              backend: str = "xla", delta: float | None = None) -> tuple:
-        key = (name, engine, tuple(sorted(kwargs.items())))
+        # freeze_kwargs canonicalizes unhashable values (list-valued
+        # ``sources`` etc.) into deterministic tuples
+        key = (name, engine, freeze_kwargs(kwargs))
         # default (xla, ungated) keys stay in the PR-1 shape so
         # adopt()/peek() callers keep working; variants get suffixed keys.
         if backend != "xla":
@@ -279,19 +260,54 @@ class DiffusionSession:
             key = key + (("delta", delta),)
         return key
 
+    def _resolve(self, prog, kwargs: dict):
+        """One registry path for every way of naming a program — a
+        registry string, a :class:`ProgramHandle` (``sssp``), a
+        :class:`BoundQuery` (``sssp(source=3)``), or a raw lowered
+        :class:`VertexProgram` — used by ``query`` and ``peek`` alike.
+        Returns (spec, name, merged kwargs, adhoc VertexProgram | None).
+        """
+        if isinstance(prog, VertexProgram):
+            return None, None, kwargs, prog
+        if isinstance(prog, BoundQuery):
+            name, kwargs = prog.name, {**prog.kwargs, **kwargs}
+        elif isinstance(prog, ProgramHandle):
+            name = prog.name
+        else:
+            name = prog
+        if name not in PROGRAMS:
+            raise KeyError(
+                f"unknown program {name!r}; registered: "
+                f"{sorted(PROGRAMS)} (@diffusive or register_program to "
+                f"add)")
+        return PROGRAMS[name], name, kwargs, None
+
     def query(self, prog, engine: str | None = None,
               backend: str | None = None, refresh: bool = False,
               value_key: str | None = None, delta: float | None = None,
-              **kwargs) -> Result:
+              **kwargs):
         """Run (or serve from cache) a named or ad-hoc vertex program.
 
         ``prog`` is a registry name ("sssp", "cc", "ppr", "pagerank",
-        "bfs", "triangles", ...) or a raw :class:`VertexProgram` (then
-        ``value_key`` selects the result field).  ``sharded``/``spmd``
-        fixed points are cached and repaired incrementally by later
-        ``commit()`` calls; ``event`` (the host oracle) and custom
-        ``run_fn`` queries recompute on every call — they always see the
-        current graph and hold no device state to repair.
+        "bfs", "widest", "reach", "triangles", ...), a program handle or
+        bound query from the :func:`~.programs.diffusive` decorator
+        (``query(sssp(source=3))``), or a raw :class:`VertexProgram`
+        (then ``value_key`` selects the result field).
+        ``sharded``/``spmd`` fixed points are cached and repaired
+        incrementally by later ``commit()`` calls; ``event`` (the host
+        oracle) and custom ``run_fn`` queries recompute on every call —
+        they always see the current graph and hold no device state to
+        repair.
+
+        **Multi-query lanes:** pluralizing a program's lane param —
+        ``query("sssp", sources=[s0, s1, ...])`` or
+        ``query(sssp(sources=[...]))`` — runs all B queries as lanes of a
+        *single* diffusion (one edge sweep per sub-iteration serves every
+        lane) and returns a list of per-source Results.  Each lane's
+        fixed point is bitwise-identical to the corresponding
+        single-source query, and each is cached under its single-source
+        key, so later ``commit()`` repairs and ``peek``/``query`` hits
+        treat lanes exactly like individually-issued queries.
 
         ``backend`` picks the relaxation kernel ("xla" | "pallas"; both
         bitwise-identical); ``delta`` enables the delta-stepping priority
@@ -316,47 +332,100 @@ class DiffusionSession:
                 "the event oracle runs on the host and has no relax "
                 "backend; backend= would be silently ignored")
 
-        if isinstance(prog, VertexProgram):
+        spec, name, kwargs, adhoc = self._resolve(prog, kwargs)
+        if adhoc is not None:
             if value_key is None:
                 raise ValueError("value_key= is required for a raw "
                                  "VertexProgram")
-            spec = ProgramSpec(f"adhoc:{id(prog)}", lambda: prog, value_key)
+            spec = ProgramSpec(f"adhoc:{id(adhoc)}", lambda: adhoc,
+                               value_key)
             name = spec.name
-        else:
-            if prog not in PROGRAMS:
-                raise KeyError(
-                    f"unknown program {prog!r}; registered: "
-                    f"{sorted(PROGRAMS)} (register_program to add)")
-            spec = PROGRAMS[prog]
-            name = prog
-            if spec.run_fn is not None:
-                return spec.run_fn(self, engine=engine, **kwargs)
+        elif spec.run_fn is not None:
+            return spec.run_fn(self, engine=engine, **kwargs)
+
+        lane_kw = spec.lane_param + "s" if spec.lane_param else None
+        if lane_kw and lane_kw in kwargs:
+            lane_vals = list(kwargs.pop(lane_kw))
+            return self._query_lanes(spec, name, lane_vals, kwargs, engine,
+                                     backend, refresh, delta, value_key)
 
         key = self._key(name, engine, kwargs, backend, delta)
         if not refresh and key in self._cache:
             return self._result(self._cache[key])
 
         if engine == "event":
-            if spec.event_fn is None:
+            if spec.event_fn is not None:
+                values, st = spec.event_fn(self, **kwargs)
+            elif spec.factory is not None:
+                # generic oracle: any @diffusive program runs
+                # message-at-a-time on the host (event.py)
+                from .event import event_diffuse
+
+                program = (adhoc if adhoc is not None
+                           else spec.factory(**kwargs))
+                src, dst, w = self.edge_list()
+                state, st = event_diffuse(program, src, dst, w, self.n_ids,
+                                          node_ok=self.live_ids())
+                vk = value_key or spec.value_key
+                values = state[vk]
+            else:
                 raise ValueError(
-                    f"program {name!r} has no event-engine oracle; "
-                    f"use engine='sharded' or 'spmd'")
-            values, st = spec.event_fn(self, **kwargs)
+                    f"program {name!r} has no event-engine oracle and no "
+                    f"factory; use engine='sharded' or 'spmd'")
             return Result(values=values, stats=st,
                           extra={"live": self.live_ids()})
 
-        program = spec.factory(**kwargs) if not isinstance(prog, VertexProgram) else prog
+        program = adhoc if adhoc is not None else spec.factory(**kwargs)
         vk = value_key or spec.value_key
-        if engine == "sharded":
-            vstate, stats = diffuse(
-                self.sg, program, max_local_iters=self.max_local_iters,
-                max_rounds=self.max_rounds, delta=delta, backend=backend)
-        else:  # spmd
-            vstate, stats = self._run_spmd(program, backend)
+        vstate, stats = self._run_diffusion(program, engine, backend, delta)
         entry = _Entry(spec, program, vk, dict(kwargs), vstate, stats,
                        engine, backend=backend, delta=delta)
         self._cache[key] = entry
         return self._result(entry)
+
+    def _run_diffusion(self, program: VertexProgram, engine: str,
+                       backend: str, delta):
+        if engine == "sharded":
+            return diffuse(
+                self.sg, program, max_local_iters=self.max_local_iters,
+                max_rounds=self.max_rounds, delta=delta, backend=backend)
+        return self._run_spmd(program, backend)
+
+    def _query_lanes(self, spec: ProgramSpec, name: str, lane_vals: list,
+                     kwargs: dict, engine: str, backend: str,
+                     refresh: bool, delta, value_key: str | None = None) -> list:
+        """Fan a pluralized lane param out into B lanes of one diffusion.
+
+        The laned fixed point is split lane-by-lane into ordinary
+        single-query cache entries (``vstate`` leaves [S, L, Np] ->
+        [S, Np]), so commit()-time repair splices and re-diffuses each
+        lane exactly like a query that was issued on its own.
+        """
+        per_lane = [dict(kwargs, **{spec.lane_param: v}) for v in lane_vals]
+        keys = [self._key(name, engine, kw, backend, delta)
+                for kw in per_lane]
+        if not refresh and all(k in self._cache for k in keys):
+            return [self._result(self._cache[k]) for k in keys]
+
+        if engine == "event":
+            # the host oracle is message-at-a-time; lanes degrade to a loop
+            return [self.query(name, engine=engine, refresh=refresh,
+                               value_key=value_key, **kw)
+                    for kw in per_lane]
+
+        progs = tuple(spec.factory(**kw) for kw in per_lane)
+        laned = make_laned(progs)
+        vstate, stats = self._run_diffusion(laned, engine, backend, delta)
+
+        vk = value_key or spec.value_key
+        results = []
+        for i, (kw, key) in enumerate(zip(per_lane, keys)):
+            lane_state = jax.tree_util.tree_map(lambda a: a[:, i], vstate)
+            entry = _Entry(spec, progs[i], vk, kw, lane_state,
+                           stats, engine, backend=backend, delta=delta)
+            self._cache[key] = entry
+            results.append(self._result(entry))
+        return results
 
     def adopt(self, name: str, vstate, stats=None, engine: str = "sharded",
               backend: str | None = None, delta: float | None = None,
@@ -438,9 +507,13 @@ class DiffusionSession:
         self.update().touch_vertex(gid)
         return self
 
-    def peek(self, u: int, prog: str = "sssp", **kwargs):
+    def peek(self, u: int, prog="sssp", **kwargs):
         """The paper's peek primitive: u's per-out-edge neighbour values
-        of a cached program's result (NaN on dead slots)."""
+        of a cached program's result (NaN on dead slots).
+
+        ``prog`` goes through the same registry path as :meth:`query` —
+        a name string, a program handle, or a bound query
+        (``sess.peek(0, sssp(source=3))``) all resolve identically."""
         from .dynamic import peek as _peek
 
         engine = kwargs.pop("engine", None) or self.engine
@@ -450,19 +523,30 @@ class DiffusionSession:
             raise ValueError(
                 "peek reads a cached shard-layout state; the event oracle "
                 "holds none — use engine='sharded' or 'spmd'")
-        key = self._key(prog, engine, kwargs, backend, delta)
+        spec, name, kwargs, adhoc = self._resolve(prog, kwargs)
+        if adhoc is not None:
+            raise ValueError(
+                "peek needs a registered program (name, handle, or bound "
+                "query), not a raw VertexProgram")
+        lane_kw = spec.lane_param + "s" if spec.lane_param else None
+        if lane_kw and lane_kw in kwargs:
+            raise ValueError(
+                f"peek reads one cached fixed point; a lane batch caches "
+                f"per source — peek with {spec.lane_param}=<one of "
+                f"{lane_kw}> instead")
+        key = self._key(name, engine, kwargs, backend, delta)
         if key not in self._cache:
             # fall back to the unique cached variant of this program (and,
             # when kwargs were given, of these kwargs) — a delta/backend/
             # engine-variant entry serves a plain peek instead of paying a
             # fresh diffusion
-            kw = tuple(sorted(kwargs.items()))
+            kw = freeze_kwargs(kwargs)
             same = [k for k in self._cache
-                    if k[0] == prog and (not kwargs or k[2] == kw)]
+                    if k[0] == name and (not kwargs or k[2] == kw)]
             if len(same) == 1:
                 key = same[0]
             else:
-                self.query(prog, engine=engine, backend=backend, delta=delta,
+                self.query(name, engine=engine, backend=backend, delta=delta,
                            **kwargs)
         entry = self._cache[key]
         return _peek(self.sg, entry.vstate[entry.value_key], self.ns, u)

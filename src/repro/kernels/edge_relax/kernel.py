@@ -1,10 +1,18 @@
 """Pallas TPU program-parametric edge relaxation — the paper's memory-driven
 hot loop as one kernel.
 
-This is the diffusive engine's relaxation step (gather ``vstate[src]`` →
-``prog.emit`` → segment-combine by destination) fused into a single
-VMEM-resident pipeline, generalizing ``sssp_relax`` to every combine monoid
-the engine supports (min / max / sum) and to the parent-payload path:
+Two kernels share the engine's relaxation step (gather ``vstate[src]`` →
+``prog.emit`` → segment-combine by destination), fused into a single
+VMEM-resident pipeline, generalized to every registered combine
+:class:`~repro.core.monoid.Monoid` and the payload path:
+
+* :func:`edge_relax_blocks` — the blocked dense-rank kernel (min/max
+  single-query path; per 128-edge block, grid-parallel);
+* :func:`edge_relax_scan` — the segmented-scan kernel (sum programs and
+  multi-query lanes; whole stream resident, ``ref.stream_scan`` body
+  executed verbatim for bitwise parity with the XLA path).
+
+Blocked-kernel anatomy:
 
 * the **vertex block stays pinned in VMEM** across the whole edge stream —
   the paper's memory-driven execution model: compute (the edge sweep) moves
@@ -38,9 +46,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ..compat import CompilerParams as _CompilerParams
-from .ref import block_combine, edge_messages
+from .ref import block_combine, edge_messages, stream_scan
 
-__all__ = ["edge_relax_blocks"]
+__all__ = ["edge_relax_blocks", "edge_relax_scan"]
 
 
 def _kernel(*refs, prog, treedef, n_leaves: int, block_e: int):
@@ -64,6 +72,66 @@ def _kernel(*refs, prog, treedef, n_leaves: int, block_e: int):
     outs[2][0] = uniq
     if pay_part is not None:
         outs[3][0] = pay_part
+
+
+def _scan_kernel(*refs, prog, treedef, n_leaves: int):
+    vrefs = refs[:n_leaves]
+    senders_ref, gid_ref, key_ref, src_ref, w_ref, dstg_ref = (
+        refs[n_leaves:n_leaves + 6]
+    )
+    outs = refs[n_leaves + 6:]
+    vstate = jax.tree_util.tree_unflatten(
+        treedef, [r[0] for r in vrefs]
+    )
+    cand, send, pay = edge_messages(
+        prog, vstate, senders_ref[0], gid_ref[0], key_ref[0], src_ref[0],
+        w_ref[0], dstg_ref[0],
+    )
+    v, c, p = stream_scan(prog.monoid, cand, send, key_ref[0], pay)
+    outs[0][0] = v
+    outs[1][0] = c
+    if p is not None:
+        outs[2][0] = p
+
+
+def edge_relax_scan(prog, vstate, senders, gid, key, src, weight, dst_gid,
+                    interpret: bool = False):
+    """Pallas scan kernel: the whole destination-sorted stream resident in
+    VMEM, combined by the segmented associative scan (``ref.stream_scan``
+    executed verbatim — bitwise parity with the XLA scan path by
+    construction).  The canonical ``backend="pallas"`` path for sum
+    programs, whose per-destination accumulation must not depend on block
+    boundaries or lane count.
+
+    Returns the scanned (value, count[, payload]) streams, each [E]; feed
+    to ``ref.gather_runs`` for the run-end gather (shared XLA phase 2).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(vstate)
+    np_ = gid.shape[0]
+    e = key.shape[0]
+
+    whole = lambda n: pl.BlockSpec((1, n), lambda: (0, 0))
+    n_out = 3 if prog.with_payload else 2
+    out_dtypes = [prog.msg_dtype, jnp.int32, jnp.int32][:n_out]
+    outs = pl.pallas_call(
+        functools.partial(_scan_kernel, prog=prog, treedef=treedef,
+                          n_leaves=len(leaves)),
+        in_specs=(
+            [whole(np_) for _ in leaves]
+            + [whole(np_), whole(np_)]          # senders, gid
+            + [whole(e) for _ in range(4)]      # key, src, weight, dst_gid
+        ),
+        out_specs=[whole(e) for _ in range(n_out)],
+        out_shape=[jax.ShapeDtypeStruct((1, e), dt) for dt in out_dtypes],
+        interpret=interpret,
+    )(
+        *[leaf[None] for leaf in leaves],
+        senders[None], gid[None],
+        key[None], src[None], weight[None], dst_gid[None],
+    )
+    v, c = outs[0][0], outs[1][0]
+    p = outs[2][0] if prog.with_payload else None
+    return v, c, p
 
 
 def edge_relax_blocks(prog, vstate, senders, gid, key, src, weight, dst_gid,

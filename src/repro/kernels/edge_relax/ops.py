@@ -1,5 +1,5 @@
-"""Public wrapper for the edge_relax kernel: backend dispatch + the shared
-cross-block combine (phase 2).
+"""Public wrapper for the edge_relax kernels: backend dispatch + the
+shared phase-2 combines.
 
 The contract both backends satisfy: given one cell's vertex block and its
 destination-sorted edge streams, return the combined per-destination
@@ -7,23 +7,31 @@ message table over the flat key space ``dst_shard * Np + dst_local``:
 
     table [n_keys] msg_dtype   combined messages (identity where none)
     cnt   [n_keys] int32       number of sending edges per destination
-    pay   [n_keys] int32|None  argmin payload (min-combine programs only)
+    pay   [n_keys] int32|None  argbest payload (selection monoids only)
 
-``backend="xla"`` uses the flat segment path for the order-free monoids
-(min/max) and the vmapped blocked reference for sum; ``backend="pallas"``
-runs the fused kernel (interpret mode off-TPU).  Both share phase 2
-verbatim, and the sum paths share the per-block body, so the two backends
-are bitwise-identical — asserted program-by-program in tests/test_session.
+Lane-stacked inputs (``senders`` [L, Np] — multi-query lanes) broadcast
+the sweep over lanes and return [L, n_keys] tables.
+
+Dispatch: sum programs and all laned runs take the segmented-scan path
+(``ref.stream_scan`` — fixed tree order, lane- and block-independent, so
+lanes are bitwise-equal to solo queries); single-query min/max keeps the
+flat segment path on ``xla`` and the fused blocked kernel on ``pallas``
+(order-free monoids agree across all paths).  Phase 2 — the run-end
+gather (scan) / cross-block scatter (blocked) — is XLA code shared
+verbatim by both backends, so the two are bitwise-identical — asserted
+program-by-program in tests/test_session and per-lane in
+tests/test_lanes.
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from ...core.msg import identity_for
 from ...core.relax import RELAX_BACKENDS
-from .kernel import edge_relax_blocks
-from .ref import edge_relax_blocks_ref, edge_relax_flat
+from .kernel import edge_relax_blocks, edge_relax_scan
+from .ref import edge_relax_flat, edge_relax_stream, gather_runs
 
 __all__ = ["edge_relax", "RELAX_BACKENDS"]
 
@@ -56,19 +64,47 @@ def edge_relax(prog, vstate, senders, gid, key, src, weight, dst_gid,
                n_keys: int, block_e: int, backend: str = "xla",
                interpret: bool = False):
     """One relaxation sweep of one cell; see module docstring for the
-    returned (table, cnt, pay) contract."""
+    returned (table, cnt, pay) contract.
+
+    Multi-query lanes: when ``senders`` is [L, Np] (vstate leaves [L, Np])
+    the sweep broadcasts over the lane axis against the *same* edge stream
+    — the kernel's gather/emit/combine runs per lane under one batched
+    dispatch — and the outputs gain a leading lane axis [L, n_keys]."""
     if backend not in RELAX_BACKENDS:
         raise ValueError(
             f"backend must be one of {RELAX_BACKENDS}, got {backend!r}")
-    if backend == "xla":
-        if prog.combine in ("min", "max"):
-            return edge_relax_flat(prog, vstate, senders, gid, key, src,
-                                   weight, dst_gid, n_keys)
-        part, cnt, uniq, pay = edge_relax_blocks_ref(
-            prog, vstate, senders, gid, key, src, weight, dst_gid, block_e)
-    else:
-        part, cnt, uniq, pay = edge_relax_blocks(
-            prog, vstate, senders, gid, key, src, weight, dst_gid, block_e,
+    laned = senders.ndim == 2      # [L, Np] lane-stacked vertex block
+
+    # Sum programs take the segmented-scan path on *both* backends: its
+    # fixed tree order is independent of block boundaries and lane count,
+    # which is what makes a lane's sum bitwise-equal to the same query
+    # run solo (laned min/max take it on xla for speed — order-free
+    # monoids match every other path bitwise anyway).
+    if prog.combine == "sum" or (laned and backend == "xla"):
+        if backend == "xla":
+            return edge_relax_stream(prog, vstate, senders, gid, key, src,
+                                     weight, dst_gid, n_keys)
+        scan1 = lambda vs, sd: edge_relax_scan(
+            prog, vs, sd, gid, key, src, weight, dst_gid,
             interpret=interpret)
+        scanned = (jax.vmap(scan1)(vstate, senders) if laned
+                   else scan1(vstate, senders))
+        return gather_runs(scanned, key, n_keys, prog.monoid,
+                           prog.msg_dtype)
+
+    if laned:                      # pallas min/max: lane-batched kernel
+        return jax.vmap(
+            lambda vs, sd: edge_relax(
+                prog, vs, sd, gid, key, src, weight, dst_gid,
+                n_keys=n_keys, block_e=block_e, backend=backend,
+                interpret=interpret,
+            )
+        )(vstate, senders)
+    if backend == "xla":
+        return edge_relax_flat(prog, vstate, senders, gid, key, src,
+                               weight, dst_gid, n_keys)
+    part, cnt, uniq, pay = edge_relax_blocks(
+        prog, vstate, senders, gid, key, src, weight, dst_gid, block_e,
+        interpret=interpret)
     return _combine_blocks(part, cnt, uniq, pay, n_keys, prog.combine,
                            prog.msg_dtype)

@@ -1,0 +1,133 @@
+"""Multi-query lanes: B queries through one edge sweep, bitwise-equal to
+B single-source queries, cached and repaired per lane (DESIGN.md §2.7)."""
+
+import numpy as np
+import pytest
+
+from repro.core import DiffusionSession
+from repro.core.diffuse import diffuse
+from repro.core.generators import make_graph_family
+from repro.core.programs import make_laned, sssp_program
+
+
+def _mask_inf(a):
+    return np.where(np.isinf(a), 1e30, a)
+
+
+def _eq(a, b):
+    return np.array_equal(_mask_inf(np.asarray(a)), _mask_inf(np.asarray(b)))
+
+
+SOURCES = [0, 7, 23, 41]
+
+LANE_MATRIX = [("sssp", dict(track_parents=True)),
+               ("bfs", {}),
+               ("ppr", dict(eps=1e-5))]
+
+
+@pytest.mark.parametrize("name,kw", LANE_MATRIX)
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_lanes_bitwise_equal_single_source(name, kw, backend):
+    """Acceptance: each lane's fixed point is bitwise-equal to the
+    corresponding single-source query for SSSP/BFS/PPR on both
+    backends."""
+    src, dst, w, n = make_graph_family("small_world", 150, seed=5)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=4)
+    batch = sess.query(name, backend=backend, sources=SOURCES, **kw)
+    assert len(batch) == len(SOURCES)
+    fresh = DiffusionSession.from_edges(src, dst, n, w, n_cells=4)
+    for res, s in zip(batch, SOURCES):
+        single = fresh.query(name, backend=backend, source=s, **kw)
+        assert _eq(res.values, single.values), (name, s)
+        for k, v in single.extra.items():
+            if k == "live":
+                continue
+            assert _eq(res.extra[k], v), (name, s, k)
+
+
+def test_lanes_spmd_engine_bitwise():
+    src, dst, w, n = make_graph_family("erdos_renyi", 100, seed=4)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=1)
+    batch = sess.query("sssp", engine="spmd", sources=[0, 9])
+    for res, s in zip(batch, [0, 9]):
+        single = sess.query("sssp", engine="sharded", source=s,
+                            refresh=True)
+        assert _eq(res.values, single.values), s
+
+
+def test_lanes_delta_gate_per_lane_threshold():
+    """A gated laned run buckets each lane independently, reproducing
+    every gated single-source fixed point bitwise."""
+    src, dst, w, n = make_graph_family("scale_free", 200, seed=15)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=4)
+    batch = sess.query("sssp", sources=[0, 11], delta=2.0)
+    fresh = DiffusionSession.from_edges(src, dst, n, w, n_cells=4)
+    for res, s in zip(batch, [0, 11]):
+        single = fresh.query("sssp", source=s, delta=2.0)
+        assert _eq(res.values, single.values), s
+
+
+def test_lanes_unbalanced_convergence():
+    """Lanes that converge rounds apart (near vs far source on a path
+    graph) stay bitwise-stable while slower lanes finish — converged
+    lanes are masked out of message generation."""
+    n = 64
+    src = np.arange(n - 1, dtype=np.int32)
+    dst = src + 1
+    w = np.ones(n - 1, np.float32)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=2,
+                                       engine="sharded")
+    near, far = sess.query("sssp", sources=[n - 2, 0])
+    assert near.values[n - 1] == 1.0
+    assert far.values[n - 1] == float(n - 1)
+    fresh = DiffusionSession.from_edges(src, dst, n, w, n_cells=2)
+    assert _eq(near.values, fresh.query("sssp", source=n - 2).values)
+    assert _eq(far.values, fresh.query("sssp", source=0).values)
+
+
+def test_lane_results_cached_per_source():
+    """Lane fixed points split into ordinary single-source cache entries:
+    a later single query is a pure cache hit, and commit() repairs each
+    lane like an individually-issued query."""
+    src, dst, w, n = make_graph_family("small_world", 120, seed=9)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=4,
+                                       edge_slack=0.4)
+    sess.query("sssp", sources=[0, 5, 30])
+    n_entries = len(sess._cache)
+    assert n_entries == 3                      # one entry per lane
+    sess.query("sssp", source=5)               # cache hit, no new entry
+    assert len(sess._cache) == n_entries
+
+    rng = np.random.default_rng(3)
+    for _ in range(4):
+        sess.add_edge(int(rng.integers(0, n)), int(rng.integers(0, n)),
+                      float(0.1 + rng.random()))
+    sess.delete_edge(int(src[0]), int(dst[0]))
+    info = sess.commit()
+    assert len(info.repairs) == 3
+    for s in (0, 5, 30):
+        got = sess.query("sssp", source=s).values
+        vstate, _ = diffuse(sess.sg, sssp_program(s))
+        assert _eq(got, sess.to_global(vstate["dist"])), s
+
+
+def test_make_laned_rejects_mixed_programs():
+    from repro.core.programs import ppr_program
+
+    with pytest.raises(ValueError):
+        make_laned((sssp_program(0), ppr_program(1)))
+    with pytest.raises(ValueError):
+        make_laned(())
+
+
+def test_lane_batch_speedup_over_sequential():
+    """Acceptance: batched query over 32 PPR sources is >= 5x faster
+    wall-clock than 32 sequential queries (sharded engine, CPU)."""
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+    from benchmarks.bench_lanes import bench_lane_batch
+
+    row = bench_lane_batch(n_nodes=400, batch=32, repeats=1)
+    assert row["speedup_cold"] >= 5.0, row

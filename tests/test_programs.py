@@ -1,0 +1,337 @@
+"""Diffusive Program API v2: declarative specs, the @diffusive extension
+point, first-class monoids, and the two user-level proof programs
+(widest-path / reachability-from-set) — DESIGN.md §2.7."""
+
+import heapq
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DiffusionSession, build
+from repro.core.diffuse import diffuse
+from repro.core.generators import make_graph_family
+from repro.core.monoid import MONOIDS, Monoid
+from repro.core.programs import (
+    PROGRAMS,
+    DiffusiveProgram,
+    Field,
+    diffusive,
+    reach_program,
+    widest_program,
+)
+
+
+def _mask_inf(a):
+    return np.where(np.isinf(a), np.where(a > 0, 1e30, -1e30), a)
+
+
+# ---------------------------------------------------------------------------
+# host references
+# ---------------------------------------------------------------------------
+
+def _widest_ref(src, dst, w, n, source):
+    """Max-bottleneck widths by best-first search."""
+    adj = [[] for _ in range(n)]
+    for s, d, x in zip(src, dst, w):
+        adj[int(s)].append((int(d), float(x)))
+    width = np.full(n, -np.inf)
+    width[source] = np.inf
+    pq = [(-np.inf, source)]
+    while pq:
+        negw, v = heapq.heappop(pq)
+        if -negw < width[v]:
+            continue
+        for u, x in adj[v]:
+            cand = min(width[v], x)
+            if cand > width[u]:
+                width[u] = cand
+                heapq.heappush(pq, (-cand, u))
+    return width
+
+
+def _reach_ref(src, dst, n, sources):
+    adj = [[] for _ in range(n)]
+    for s, d in zip(src, dst):
+        adj[int(s)].append(int(d))
+    seen = set(sources)
+    stack = list(sources)
+    while stack:
+        v = stack.pop()
+        for u in adj[v]:
+            if u not in seen:
+                seen.add(u)
+                stack.append(u)
+    out = np.zeros(n, np.int32)
+    out[sorted(seen)] = 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the two user-level programs: correctness + engine matrix + backend matrix
+# ---------------------------------------------------------------------------
+
+def test_widest_path_matches_reference():
+    src, dst, w, n = make_graph_family("scale_free", 200, seed=7)
+    part = build(src, dst, n, w, n_cells=4)
+    vstate, _ = diffuse(part, widest_program(0))
+    got = part.to_global_layout(vstate["width"])[:n]
+    ref = _widest_ref(src, dst, w, n, 0)
+    assert np.array_equal(_mask_inf(np.asarray(got)), _mask_inf(ref))
+
+
+def test_reach_matches_reference():
+    src, dst, w, n = make_graph_family("erdos_renyi", 150, seed=3)
+    sources = (0, 17, 42)
+    part = build(src, dst, n, w, n_cells=4)
+    vstate, _ = diffuse(part, reach_program(sources))
+    got = np.asarray(part.to_global_layout(vstate["reached"]))[:n]
+    assert np.array_equal(got, _reach_ref(src, dst, n, sources))
+
+
+@pytest.mark.parametrize("name,kwargs", [
+    ("widest", dict(source=0)),
+    ("reach", dict(sources=(0, 9))),
+])
+def test_new_programs_engine_matrix(name, kwargs):
+    """Acceptance: both new programs run unmodified on all three engines
+    (sharded / spmd / the generic event oracle) with matching fixed
+    points — selection monoids are order-free, so exactly."""
+    src, dst, w, n = make_graph_family("small_world", 100, seed=6)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=1)
+    ref = sess.query(name, engine="sharded", **kwargs).values[:n]
+    spmd = sess.query(name, engine="spmd", **kwargs).values[:n]
+    ev = sess.query(name, engine="event", **kwargs).values[:n]
+    assert np.array_equal(_mask_inf(spmd), _mask_inf(ref))
+    assert np.array_equal(_mask_inf(ev), _mask_inf(ref))
+
+
+@pytest.mark.parametrize("name,kwargs", [
+    ("widest", dict(source=0, track_parents=True)),
+    ("reach", dict(sources=(0, 9))),
+])
+def test_new_programs_backend_matrix_bitwise(name, kwargs):
+    """Acceptance: backend='pallas' reproduces backend='xla' bitwise for
+    the user-level programs — the extension point reaches the kernels."""
+    src, dst, w, n = make_graph_family("scale_free", 150, seed=9)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=4)
+    rx = sess.query(name, backend="xla", **kwargs)
+    rp = sess.query(name, backend="pallas", **kwargs)
+    assert np.array_equal(_mask_inf(rx.values), _mask_inf(rp.values))
+    for k, v in rx.extra.items():
+        if k == "live":
+            continue
+        a, b = np.asarray(v), np.asarray(rp.extra[k])
+        assert np.array_equal(_mask_inf(a), _mask_inf(b)), (name, k)
+
+
+def test_widest_repair_after_commit_matches_from_scratch():
+    """User programs ride the session cache + commit() repair unchanged."""
+    src, dst, w, n = make_graph_family("small_world", 120, seed=4)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=4,
+                                       edge_slack=0.4)
+    sess.query("widest", source=0)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        sess.add_edge(int(rng.integers(0, n)), int(rng.integers(0, n)),
+                      float(5 + rng.random()))
+    sess.delete_edge(int(src[0]), int(dst[0]))
+    sess.commit()
+    got = sess.query("widest", source=0).values
+    vstate, _ = diffuse(sess.sg, widest_program(0))
+    assert np.array_equal(_mask_inf(got),
+                          _mask_inf(sess.to_global(vstate["width"])))
+
+
+# ---------------------------------------------------------------------------
+# @diffusive extension point: a program defined *here*, outside the engine
+# ---------------------------------------------------------------------------
+
+def test_user_registered_program_end_to_end():
+    """A custom spec registered in a test runs by name through query,
+    lanes, peek, and commit-time repair — no engine/kernel edits."""
+
+    @diffusive("hops2set", value_key="hops", monotone=True,
+               lane_param="target")
+    def hops2set(target: int):
+        """Min hops to reach ``target`` — BFS on the reversed message
+        direction is not needed: diffuse *from* the target."""
+        return DiffusiveProgram(
+            monoid="min",
+            msg_dtype=jnp.float32,
+            state={"hops": Field(jnp.float32,
+                                 init=lambda v: jnp.where(v.gid == target,
+                                                          0.0, jnp.inf),
+                                 on_dead=jnp.inf)},
+            init_active=lambda v: v.gid == target,
+            emit=lambda s, w, sg, dg: s["hops"] + 1.0,
+            receive=lambda vs, inbox, has, pay, ok: (
+                {"hops": jnp.where(has & (inbox < vs["hops"]) & ok, inbox,
+                                   vs["hops"])},
+                has & (inbox < vs["hops"]) & ok),
+        )
+
+    try:
+        src, dst, w, n = make_graph_family("small_world", 90, seed=8)
+        sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=3,
+                                           edge_slack=0.4)
+        r = sess.query("hops2set", target=0)
+        ref = sess.query("bfs", source=0)
+        assert np.array_equal(_mask_inf(r.values), _mask_inf(ref.values))
+        # bound-query object path + lanes
+        lanes = sess.query(hops2set(targets=[0, 5, 11]))
+        assert len(lanes) == 3
+        single = sess.query(hops2set(target=11))
+        assert np.array_equal(_mask_inf(lanes[2].values),
+                              _mask_inf(single.values))
+        # peek + repair
+        assert np.isfinite(np.asarray(sess.peek(0, hops2set(target=0)))).any()
+        sess.add_edge(3, 0, 1.0)
+        sess.commit()
+        got = sess.query("hops2set", target=0).values
+        ref2 = sess.query("bfs", source=0, refresh=True).values
+        assert np.array_equal(_mask_inf(got), _mask_inf(ref2))
+    finally:
+        PROGRAMS.pop("hops2set", None)
+
+
+def test_string_and_object_lookup_resolve_identically():
+    """Satellite: peek()/query() accept names, handles, and bound queries
+    through one registry path — same cache entry either way."""
+    from repro.core.programs import sssp
+
+    src, dst, w, n = make_graph_family("erdos_renyi", 80, seed=2)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=2)
+    r1 = sess.query(sssp(source=3))
+    n_entries = len(sess._cache)
+    r2 = sess.query("sssp", source=3)          # must hit the same entry
+    assert len(sess._cache) == n_entries
+    assert np.array_equal(_mask_inf(r1.values), _mask_inf(r2.values))
+    pk1 = np.asarray(sess.peek(3, "sssp", source=3))
+    pk2 = np.asarray(sess.peek(3, sssp(source=3)))
+    both_nan = np.isnan(pk1) & np.isnan(pk2)
+    assert np.array_equal(pk1[~both_nan], pk2[~both_nan])
+    with pytest.raises(KeyError):
+        sess.query("nope")
+
+
+def test_cache_key_accepts_list_kwargs():
+    """Satellite: list-valued kwargs (sources) hash deterministically."""
+    src, dst, w, n = make_graph_family("erdos_renyi", 60, seed=1)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=2)
+    k1 = sess._key("reach", "sharded", {"sources": [4, 2]})
+    k2 = sess._key("reach", "sharded", {"sources": np.array([4, 2])})
+    assert k1 == k2 and isinstance(hash(k1), int)
+    # and a real query with a list kwarg caches + round-trips
+    r1 = sess.query("reach", sources=[4, 2])
+    r2 = sess.query("reach", sources=(4, 2))
+    assert np.array_equal(r1.values, r2.values)
+
+
+# ---------------------------------------------------------------------------
+# monoid laws — every registered Monoid
+# ---------------------------------------------------------------------------
+
+def _kind_op(kind):
+    return {"min": np.minimum, "max": np.maximum, "sum": np.add}[kind]
+
+
+@pytest.mark.parametrize("name", sorted(MONOIDS))
+def test_monoid_laws(name):
+    """Associativity, commutativity, identity, and scatter-class
+    consistency for every registered monoid (hypothesis sweeps wider
+    value ranges when available)."""
+    m = MONOIDS[name]
+    rng = np.random.default_rng(hash(name) % 2**32)
+
+    def check(a, b, c):
+        a, b, c = (jnp.asarray(x, jnp.float32) for x in (a, b, c))
+        ab_c = m.elem(m.elem(a, b), c)
+        a_bc = m.elem(a, m.elem(b, c))
+        assert np.allclose(np.asarray(ab_c), np.asarray(a_bc),
+                           rtol=1e-5, atol=1e-6), "associativity"
+        assert np.array_equal(np.asarray(m.elem(a, b)),
+                              np.asarray(m.elem(b, a))), "commutativity"
+        ident = m.identity(jnp.float32)
+        assert np.array_equal(np.asarray(m.elem(a, jnp.full_like(a, ident))),
+                              np.asarray(a)), "identity"
+        # kind consistency: op must agree with its scatter class
+        assert np.allclose(np.asarray(m.elem(a, b)),
+                           _kind_op(m.kind)(np.asarray(a), np.asarray(b)),
+                           rtol=1e-6), "kind-consistency"
+
+    for _ in range(25):
+        check(*(rng.normal(size=8) * 10 for _ in range(3)))
+
+    try:    # property sweep over adversarial floats when hypothesis exists
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        return
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.floats(-1e6, 1e6, width=32), min_size=3, max_size=3))
+    def prop(vals):
+        check(np.float32(vals[0]), np.float32(vals[1]), np.float32(vals[2]))
+
+    prop()
+
+
+def test_custom_op_monoid_through_engine():
+    """A registered custom-op monoid (logical-or over {0,1} ints, a
+    max-class monoid with its own identity) must survive the scan path's
+    identity padding — laned and solo, both backends (regression: padding
+    once used the scatter-class identity, which a custom op is not
+    guaranteed to absorb)."""
+    import jax.numpy as jnp
+
+    from repro.core.monoid import register_monoid
+
+    or01 = register_monoid(Monoid("or01", "max", op=jnp.logical_or,
+                                  identity_of=lambda dt: 0))
+
+    @diffusive("reach_or", value_key="reached", monotone=True,
+               lane_param="source")
+    def reach_or(source: int):
+        def receive(vs, inbox, has, pay, ok):
+            inbox = inbox.astype(jnp.int32)
+            better = has & (inbox > vs["reached"]) & ok
+            return ({"reached": jnp.where(better, inbox, vs["reached"])},
+                    better)
+
+        return DiffusiveProgram(
+            monoid=or01, msg_dtype=jnp.int32,
+            state={"reached": Field(jnp.int32,
+                                    init=lambda v: (v.gid == source)
+                                    .astype(jnp.int32), on_dead=0)},
+            init_active=lambda v: v.gid == source,
+            emit=lambda s, w, sg, dg: s["reached"],
+            receive=receive)
+
+    try:
+        src, dst, w, n = make_graph_family("erdos_renyi", 100, seed=5)
+        sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=2)
+        ref = _reach_ref(src, dst, n, (0,))
+        for backend in ("xla", "pallas"):
+            got = sess.query("reach_or", source=0, backend=backend,
+                             refresh=True).values[:n]
+            assert np.array_equal(got, ref), backend
+        lanes = sess.query(reach_or(sources=[0, 7]))
+        assert np.array_equal(lanes[0].values[:n], ref)
+        assert np.array_equal(lanes[1].values[:n], _reach_ref(src, dst, n,
+                                                              (7,)))
+    finally:
+        PROGRAMS.pop("reach_or", None)
+        MONOIDS.pop("or01", None)
+
+
+def test_monoid_registry_and_validation():
+    with pytest.raises(ValueError):
+        Monoid("bad", "prod")
+    with pytest.raises(ValueError):
+        Monoid("bad", "sum", payload="argbest")
+    or_m = Monoid("or01", "max", op=jnp.logical_or,
+                  identity_of=lambda dt: 0)
+    a = jnp.asarray([0, 1, 0, 1], jnp.int32)
+    b = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    assert np.array_equal(np.asarray(or_m.merge(a, b, b > -1)),
+                          [0, 1, 1, 1])

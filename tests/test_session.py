@@ -368,14 +368,24 @@ def test_query_registry_and_errors():
     with pytest.raises(KeyError):
         sess.query("no-such-program")
     with pytest.raises(ValueError):
-        sess.query("cc", engine="event")       # no event oracle for CC
-    with pytest.raises(ValueError):
         sess.query("sssp", engine="warp", source=0)
     tri = sess.query("triangles")
     assert tri.extra["triangles"] >= 0
     # raw VertexProgram goes through the same door
     res = sess.query(sssp_program(0), value_key="dist")
     assert np.isfinite(res.values).any()
+    with pytest.raises(ValueError):
+        sess.peek(0, sssp_program(0))   # peek needs a registered program
+
+
+def test_cc_runs_on_generic_event_oracle():
+    """Programs without a handwritten event_fn fall back to the generic
+    message-at-a-time oracle — every @diffusive program runs on all three
+    engines."""
+    sess, (src, dst, w, n) = _session(seed=12, n=80)
+    ref = sess.query("cc").values[:n]
+    ev = sess.query("cc", engine="event").values[:n]
+    assert np.array_equal(ref, ev)
 
 
 def test_batched_update_speedup_over_sequential_loop():
