@@ -1,0 +1,201 @@
+"""Direction-optimizing sweep benchmarks (DESIGN.md §2.8, BENCH_pr4.json).
+
+Three measurements, each push vs pull on the *same* graph:
+
+* ``bench_repair``    — the headline: commit()-style warm repair after a
+  small UpdateBatch (insert endpoints = the frontier), timed as the
+  repair diffusion itself.  This is the sparse-frontier scenario the
+  push sweep exists for: O(frontier-adjacent edges) per round instead of
+  O(E).
+* ``bench_density``   — one relaxation sweep at controlled frontier
+  densities: where the push/pull crossover sits, which is what the
+  ``push_threshold`` selector knob is tuned from (together with the
+  per-round ``frontier_log``/``dir_log`` stats).
+* ``bench_sssp_tail`` — end-to-end delta-stepped SSSP, whose bucketed
+  tail rounds are exactly the sparse wavefronts the auto selector should
+  win on.
+
+Timings are best-of-N on whatever backend JAX picks (CPU in CI); the
+derived speedups — not absolute times — are the tracked quantities.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import build
+from repro.core.diffuse import _sg_as_dict, diffuse, diffuse_from
+from repro.core.dynamic import NameServer
+from repro.core.generators import make_graph_family
+from repro.core.programs import sssp_program
+from repro.core.relax import active_push_blocks, make_relax, select_bucket
+from repro.core.updates import UpdateBatch
+
+
+def _best_of(fn, repeats: int) -> float:
+    import jax
+
+    jax.block_until_ready(fn())          # warm the jit cache
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _graph(n_nodes: int, n_cells: int, seed: int = 0):
+    src, dst, w, n = make_graph_family("scale_free", n_nodes, seed=seed)
+    return build(src, dst, n, w, n_cells=n_cells, edge_slack=0.2,
+                 node_slack=0.1), n
+
+
+def bench_repair(n_nodes: int = 3000, n_cells: int = 2, n_updates: int = 8,
+                 seed: int = 0, repeats: int = 5):
+    """commit()-repair cost after a small insert-only UpdateBatch: the
+    warm frontier re-diffusion (the session's 'frontier' strategy core)
+    per sweep direction.  Returns one row per sweep with the speedup of
+    that sweep over the dense pull baseline."""
+    import jax.numpy as jnp
+
+    part, n = _graph(n_nodes, n_cells, seed)
+    prog = sssp_program(0)
+    vstate, _ = diffuse(part, prog)                 # the cached fixed point
+
+    rng = np.random.default_rng(seed + 1)
+    ns = NameServer(part)
+    ub = UpdateBatch(ns)
+    ins = [(int(rng.integers(0, n)), int(rng.integers(0, n)),
+            float(0.2 + rng.random())) for _ in range(n_updates)]
+    for u, v, w in ins:
+        ub.add_edge(u, v, w)
+    sg2, _ = ub.apply(part.sg)
+
+    owner = np.asarray(part.owner)
+    local = np.asarray(part.local)
+    active = np.zeros((sg2.n_shards, sg2.n_per_shard), bool)
+    for u, _, _ in ins:                             # the repair frontier
+        active[owner[u], local[u]] = True
+    active = jnp.asarray(active)
+
+    times = {}
+    for sweep in ("pull", "push", "auto"):
+        times[sweep] = _best_of(
+            lambda sw=sweep: diffuse_from(sg2, prog, vstate, active,
+                                          sweep=sw),
+            repeats)
+    _, st = diffuse_from(sg2, prog, vstate, active, sweep="push")
+    rows = []
+    for sweep in ("pull", "push", "auto"):
+        rows.append(dict(
+            bench="repair", sweep=sweep, n_nodes=n_nodes,
+            n_updates=n_updates, seconds=times[sweep],
+            speedup_vs_pull=times["pull"] / times[sweep],
+            repair_rounds=int(st.rounds),
+        ))
+    return rows
+
+
+def bench_density(n_nodes: int = 3000, n_cells: int = 2, seed: int = 0,
+                  repeats: int = 5,
+                  densities=(1 / 256, 1 / 64, 1 / 16, 1 / 4, 1.0)):
+    """One relaxation sweep (the engine's inner hot op) at controlled
+    frontier densities: frontier vertices drawn contiguously in the
+    source order (the locality a real wavefront has), push vs pull."""
+    import jax
+    import jax.numpy as jnp
+
+    part, n = _graph(n_nodes, n_cells, seed)
+    sg = part.sg
+    sgd = _sg_as_dict(sg, with_push=True)
+    prog = sssp_program(0)
+    vstate, _ = prog.init(sg)
+    block = sg.csr_block
+    nb = sgd["push_src"].shape[-1] // block
+
+    relax_pull = make_relax(prog, sg.n_shards, sg.n_per_shard, block,
+                            sweep="pull")
+    relax_push = make_relax(prog, sg.n_shards, sg.n_per_shard, block,
+                            sweep="push")
+
+    @jax.jit
+    def step_pull(vs, senders):
+        return jax.vmap(lambda v, s, g: relax_pull(v, s, g))(
+            vs, senders, sgd)
+
+    @jax.jit
+    def step_push(vs, senders):
+        counts = active_push_blocks(senders, sgd["push_src"], block)
+        bucket = select_bucket(counts, nb, "push")   # selector cost incl.
+        return jax.vmap(lambda v, s, g: relax_push(v, s, g, bucket))(
+            vs, senders, sgd)
+
+    rows = []
+    rng = np.random.default_rng(seed + 2)
+    for d in densities:
+        k = max(1, int(d * sg.n_per_shard))
+        senders = np.zeros((sg.n_shards, sg.n_per_shard), bool)
+        for s in range(sg.n_shards):
+            start = int(rng.integers(0, max(1, sg.n_per_shard - k)))
+            senders[s, start:start + k] = True
+        senders = jnp.asarray(senders & np.asarray(sg.node_ok))
+        t_pull = _best_of(lambda: step_pull(vstate, senders), repeats)
+        t_push = _best_of(lambda: step_push(vstate, senders), repeats)
+        rows.append(dict(
+            bench="density", density=float(d),
+            frontier=int(np.asarray(senders).sum()),
+            pull_us=t_pull * 1e6, push_us=t_push * 1e6,
+            speedup_vs_pull=t_pull / t_push,
+        ))
+    return rows
+
+
+def bench_sssp_tail(n_nodes: int = 3000, n_cells: int = 2, seed: int = 0,
+                    repeats: int = 3, delta: float = 0.5):
+    """End-to-end delta-stepped SSSP: the bucketed tail rounds run tiny
+    frontiers, so the auto selector should beat pure pull there while a
+    dense early wave keeps pure push honest."""
+    part, _ = _graph(n_nodes, n_cells, seed)
+    prog = sssp_program(0)
+    times = {}
+    for sweep in ("pull", "push", "auto"):
+        times[sweep] = _best_of(
+            lambda sw=sweep: diffuse(part, prog, delta=delta, sweep=sw),
+            repeats)
+    _, st = diffuse(part, prog, delta=delta, sweep="auto")
+    push_share = int(st.push_iters) / max(int(st.local_iters), 1)
+    rows = []
+    for sweep in ("pull", "push", "auto"):
+        rows.append(dict(
+            bench="sssp_tail", sweep=sweep, n_nodes=n_nodes, delta=delta,
+            seconds=times[sweep],
+            speedup_vs_pull=times["pull"] / times[sweep],
+            auto_push_share=push_share,
+        ))
+    return rows
+
+
+def run(quick: bool = False):
+    size = 800 if quick else 3000
+    reps = 3 if quick else 5
+    rows = []
+    rows += bench_repair(n_nodes=size, repeats=reps)
+    rows += bench_density(n_nodes=size, repeats=reps)
+    rows += bench_sssp_tail(n_nodes=size, repeats=reps)
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    main()

@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call for the timed
 benches; derived = the paper-comparable metric) and writes the same
-records, plus the kernel-backend tag, to ``BENCH_pr3.json`` at the repo
+records, plus the kernel-backend tag, to ``BENCH_pr4.json`` at the repo
 root so the perf trajectory accumulates machine-readably across PRs.
 """
 
@@ -105,6 +105,27 @@ def main() -> None:
             backend="xla",
         )
 
+    # DESIGN.md §2.8: direction-optimizing sweeps — commit()-repair cost,
+    # per-round sweep cost vs frontier density, and delta-SSSP tails,
+    # push vs pull vs the auto selector on the same graph
+    from benchmarks import bench_frontier
+    for r in bench_frontier.run(quick=quick):
+        if r["bench"] == "density":
+            _csv(
+                f"frontier/density{r['density']:g}",
+                r["push_us"],
+                f"speedup_vs_pull={r['speedup_vs_pull']:.2f};"
+                f"frontier={r['frontier']}",
+                backend="xla",
+            )
+        else:
+            _csv(
+                f"frontier/{r['bench']}/{r['sweep']}",
+                r["seconds"] * 1e6,
+                f"speedup_vs_pull={r['speedup_vs_pull']:.2f}",
+                backend="xla",
+            )
+
     # Roofline table from any dry-run artifacts present
     from benchmarks import roofline
     rows = roofline.table()
@@ -119,7 +140,7 @@ def main() -> None:
 
     # quick (CI smoke) runs write a sibling file so they never clobber the
     # committed full-size trajectory records
-    fname = "BENCH_pr3.quick.json" if quick else "BENCH_pr3.json"
+    fname = "BENCH_pr4.quick.json" if quick else "BENCH_pr4.json"
     out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                        "..", fname)
     with open(os.path.abspath(out), "w") as f:

@@ -76,3 +76,16 @@ print(f"\nreliability: {np.sum(rel.values > 0.01)} vertices reachable "
 batch = sess2.query(reliability(sources=[0, 17, 42, 99]))
 print(f"lanes: {len(batch)} reliability queries in one diffusion "
       f"(rounds={int(batch[0].stats.rounds)})")
+
+# ---------------------------------------------------------------------------
+# 6. direction-optimizing sweeps (DESIGN.md §2.8): sweep="auto" pushes
+#    only the active frontier's out-edge blocks while the frontier is
+#    sparse and falls back to the dense pull sweep when it is not —
+#    bitwise-identical results, work proportional to the frontier.
+#    commit()-time repairs default to push automatically.
+# ---------------------------------------------------------------------------
+auto = sess2.query("reliability", source=7, sweep="auto")
+st = auto.stats
+print(f"sweep='auto': {int(st.push_iters)}/{int(st.local_iters)} "
+      f"sub-iterations ran frontier-compacted "
+      f"(per-round frontier sizes {np.asarray(st.frontier_log[:int(st.rounds)]).tolist()})")

@@ -68,16 +68,18 @@ def run(
     max_local_iters: int = 64,
     max_rounds: int = 10_000,
     backend: str = "xla",
+    sweep: str = "pull",
 ) -> Result:
     sess = DiffusionSession(part, max_local_iters=max_local_iters,
-                            max_rounds=max_rounds, backend=backend)
+                            max_rounds=max_rounds, backend=backend,
+                            sweep=sweep)
     return _trim(part, sess.query(prog, value_key=value_key))
 
 
 def _named(part: Partitioned, name: str, max_local_iters: int,
-           backend: str = "xla", **kwargs):
+           backend: str = "xla", sweep: str = "pull", **kwargs):
     sess = DiffusionSession(part, max_local_iters=max_local_iters,
-                            backend=backend)
+                            backend=backend, sweep=sweep)
     res = sess.query(name, **kwargs)
     if isinstance(res, list):                 # multi-query lanes
         return [_trim(part, r) for r in res]
@@ -85,55 +87,60 @@ def _named(part: Partitioned, name: str, max_local_iters: int,
 
 
 def sssp(part: Partitioned, source, track_parents: bool = True,
-         max_local_iters: int = 64, backend: str = "xla") -> Result:
+         max_local_iters: int = 64, backend: str = "xla",
+         sweep: str = "pull") -> Result:
     """Single-source shortest paths; a list-valued ``source`` fans out
     into query lanes sharing one diffusion (one Result per source)."""
     kw = ({"sources": list(source)} if isinstance(source, (list, tuple))
           else {"source": source})
-    return _named(part, "sssp", max_local_iters, backend,
+    return _named(part, "sssp", max_local_iters, backend, sweep,
                   track_parents=track_parents, **kw)
 
 
 def bfs(part: Partitioned, source, max_local_iters: int = 64,
-        backend: str = "xla") -> Result:
+        backend: str = "xla", sweep: str = "pull") -> Result:
     kw = ({"sources": list(source)} if isinstance(source, (list, tuple))
           else {"source": source})
-    return _named(part, "bfs", max_local_iters, backend, **kw)
+    return _named(part, "bfs", max_local_iters, backend, sweep, **kw)
 
 
 def connected_components(part: Partitioned, max_local_iters: int = 64,
-                         backend: str = "xla") -> Result:
-    return _named(part, "cc", max_local_iters, backend)
+                         backend: str = "xla",
+                         sweep: str = "pull") -> Result:
+    return _named(part, "cc", max_local_iters, backend, sweep)
 
 
 def personalized_pagerank(part: Partitioned, source, alpha: float = 0.15,
                           eps: float = 1e-5, max_local_iters: int = 64,
-                          backend: str = "xla") -> Result:
+                          backend: str = "xla",
+                          sweep: str = "pull") -> Result:
     """Forward-push PPR; a list-valued ``source`` runs one lane per
     source through a single sum-combine diffusion."""
     kw = ({"sources": list(source)} if isinstance(source, (list, tuple))
           else {"source": source})
-    return _named(part, "ppr", max_local_iters, backend,
+    return _named(part, "ppr", max_local_iters, backend, sweep,
                   alpha=alpha, eps=eps, **kw)
 
 
 def pagerank(part: Partitioned, alpha: float = 0.15, eps: float = 1e-7,
-             max_local_iters: int = 64, backend: str = "xla") -> Result:
-    return _named(part, "pagerank", max_local_iters, backend, alpha=alpha,
-                  eps=eps)
+             max_local_iters: int = 64, backend: str = "xla",
+             sweep: str = "pull") -> Result:
+    return _named(part, "pagerank", max_local_iters, backend, sweep,
+                  alpha=alpha, eps=eps)
 
 
 def widest_path(part: Partitioned, source: int, track_parents: bool = False,
-                max_local_iters: int = 64, backend: str = "xla") -> Result:
+                max_local_iters: int = 64, backend: str = "xla",
+                sweep: str = "pull") -> Result:
     """Max-bottleneck (widest) path widths from ``source`` — a max-combine
     diffusion registered through the public @diffusive extension point."""
-    return _named(part, "widest", max_local_iters, backend, source=source,
-                  track_parents=track_parents)
+    return _named(part, "widest", max_local_iters, backend, sweep,
+                  source=source, track_parents=track_parents)
 
 
 def reachable(part: Partitioned, sources, max_local_iters: int = 64,
-              backend: str = "xla") -> Result:
+              backend: str = "xla", sweep: str = "pull") -> Result:
     """Reachability from a vertex set (one diffusion, all sources at
     once); ``values[v] == 1`` iff some source reaches v."""
-    return _named(part, "reach", max_local_iters, backend,
+    return _named(part, "reach", max_local_iters, backend, sweep,
                   sources=tuple(int(s) for s in sources))

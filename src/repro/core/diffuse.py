@@ -51,16 +51,27 @@ from jax import lax
 from .graph import DEFAULT_EDGE_BLOCK, ShardedGraph
 from .partition import Partitioned
 from .programs import VertexProgram
-from .relax import make_relax
+from .relax import (
+    DEFAULT_PUSH_THRESHOLD,
+    active_push_blocks,
+    make_relax,
+    push_caps,
+    select_bucket,
+)
 from .termination import quiescent
 
 __all__ = [
     "diffuse",
     "diffuse_from",
     "DiffuseStats",
+    "FRONTIER_LOG_CAP",
     "diffuse_spmd_step",
     "make_spmd_diffuse",
 ]
+
+# Per-round introspection buffers (frontier size, chosen direction) record
+# the first FRONTIER_LOG_CAP rounds; later rounds overwrite the last slot.
+FRONTIER_LOG_CAP = 512
 
 
 class DiffuseStats(NamedTuple):
@@ -71,6 +82,17 @@ class DiffuseStats(NamedTuple):
     operons_sent: jnp.ndarray      # coalesced cross-cell mailbox entries sent
     operons_delivered: jnp.ndarray # ... and delivered (DS invariant: equal)
     max_frontier: jnp.ndarray      # introspection: peak active count
+    push_iters: jnp.ndarray        # local sub-iterations swept via push
+    frontier_log: jnp.ndarray      # [FRONTIER_LOG_CAP] active count per
+                                   #   round (-1 = round never ran)
+    dir_log: jnp.ndarray           # [FRONTIER_LOG_CAP] direction chosen at
+                                   #   round start: 1 push, 0 pull, -1 n/a
+
+
+def _stats0() -> DiffuseStats:
+    z = jnp.zeros((), jnp.int32)
+    log = jnp.full((FRONTIER_LOG_CAP,), -1, jnp.int32)
+    return DiffuseStats(z, z, z, z, z, z, z, z, log, log)
 
 
 def _gate(prog, vstate, active, threshold):
@@ -84,7 +106,7 @@ def _gate(prog, vstate, active, threshold):
 
 
 def _local_iter_shard(prog: VertexProgram, np_, s_, my_shard, sg_s, st, relax,
-                      threshold=None, lane_live=None):
+                      threshold=None, lane_live=None, bucket=None):
     """One local relaxation sub-iteration, per-shard view (vmapped over S).
 
     The gather→emit→segment-combine step is delegated to ``relax`` (built by
@@ -102,7 +124,7 @@ def _local_iter_shard(prog: VertexProgram, np_, s_, my_shard, sg_s, st, relax,
     senders = _gate(prog, vstate, active, threshold)
     if lane_live is not None:
         senders = senders & lane_live[:, None]
-    table, cnt, pay = relax(vstate, senders, sg_s)
+    table, cnt, pay = relax(vstate, senders, sg_s, bucket)
     mine = (jnp.arange(s_, dtype=jnp.int32) == my_shard).reshape(
         (s_,) + (1,) * (table.ndim - 1))
 
@@ -133,14 +155,17 @@ def _local_iter_shard(prog: VertexProgram, np_, s_, my_shard, sg_s, st, relax,
     return (vstate, activated, outbox, outbox_has, outbox_pay), counts
 
 
-def _sg_as_dict(sg: ShardedGraph):
+def _sg_as_dict(sg: ShardedGraph, with_push: bool = False):
     """ShardedGraph -> the engine-facing array dict: the per-cell vertex
     block (``node_ok``/``gid``/``out_degree``) plus the destination-sorted
-    blocked-CSR streams the relax backends consume (built on demand for
-    graphs with an invalidated CSR view).  The unsorted edge arrays stay
-    out — the engines never read them, and under shard_map they would be
-    real per-device inputs doubling edge-stream transfer/residency."""
-    if sg.csr_perm is None:
+    pull streams the relax backends consume — and, when ``with_push``
+    (any sweep that can compact), the source-sorted push streams too
+    (built on demand for graphs with invalidated views).  The unsorted
+    edge arrays always stay out, and the push streams stay out of pull
+    sweeps for the same reason — the engine never reads them, and under
+    shard_map they would be real per-device inputs inflating edge-stream
+    transfer/residency."""
+    if sg.csr_perm is None or (with_push and sg.push_perm is None):
         sg = sg.with_csr()
     d = {
         "node_ok": sg.node_ok,
@@ -148,28 +173,38 @@ def _sg_as_dict(sg: ShardedGraph):
         "out_degree": sg.out_degree,
     }
     d.update(sg.csr_view())
+    if with_push:
+        d.update(sg.push_view())
     return d
 
 
 @partial(jax.jit, static_argnames=("prog", "max_local_iters", "max_rounds",
-                                   "delta", "backend"))
+                                   "delta", "backend", "sweep",
+                                   "push_threshold"))
 def _diffuse_jit(sg: ShardedGraph, prog: VertexProgram, max_local_iters: int,
-                 max_rounds: int, delta=None, backend: str = "xla"):
+                 max_rounds: int, delta=None, backend: str = "xla",
+                 sweep: str = "pull",
+                 push_threshold: float = DEFAULT_PUSH_THRESHOLD):
     vstate0, active0 = prog.init(sg)
     return _run_rounds(sg, prog, vstate0, active0, max_local_iters,
-                       max_rounds, delta, backend)
+                       max_rounds, delta, backend, sweep, push_threshold)
 
 
 @partial(jax.jit, static_argnames=("prog", "max_local_iters", "max_rounds",
-                                   "delta", "backend"))
+                                   "delta", "backend", "sweep",
+                                   "push_threshold"))
 def _run_rounds(sg: ShardedGraph, prog: VertexProgram, vstate0, active0,
                 max_local_iters: int, max_rounds: int, delta=None,
-                backend: str = "xla"):
+                backend: str = "xla", sweep: str = "pull",
+                push_threshold: float = DEFAULT_PUSH_THRESHOLD):
     S, Np = sg.n_shards, sg.n_per_shard
     L = prog.lanes
     lane = (L,) if L else ()
-    sgd = _sg_as_dict(sg)
-    relax = make_relax(prog, S, Np, sg.csr_block, backend)
+    sgd = _sg_as_dict(sg, with_push=sweep != "pull")
+    relax = make_relax(prog, S, Np, sg.csr_block, backend, sweep,
+                       push_threshold)
+    nb = sgd["csr_key"].shape[-1] // sg.csr_block
+    n_caps = len(push_caps(nb))
     monoid = prog.monoid
     ident = monoid.identity(prog.msg_dtype)
 
@@ -178,10 +213,20 @@ def _run_rounds(sg: ShardedGraph, prog: VertexProgram, vstate0, active0,
     pay0 = (jnp.full((S, S) + lane + (Np,), -1, jnp.int32)
             if prog.with_payload else None)
 
-    stats0 = DiffuseStats(*[jnp.zeros((), jnp.int32) for _ in range(7)])
+    stats0 = _stats0()
 
     shard_ids = jnp.arange(S, dtype=jnp.int32)
     use_gate = delta is not None and prog.priority is not None
+
+    def _bucket_of(vstate, active, thr, lane_live):
+        """The direction selector: gated sending frontier -> per-cell
+        active push-block counts -> shared bucket index (see relax.py)."""
+        gated = jax.vmap(lambda vs, a: _gate(prog, vs, a, thr))(vstate,
+                                                                active)
+        if lane_live is not None:
+            gated = gated & lane_live[None, :, None]
+        counts = active_push_blocks(gated, sgd["push_src"], sg.csr_block)
+        return select_bucket(counts, nb, sweep, push_threshold)
 
     def round_cond(c):
         st, stats = c
@@ -208,6 +253,16 @@ def _run_rounds(sg: ShardedGraph, prog: VertexProgram, vstate0, active0,
         # per-lane quiescence: converged lanes stop generating messages
         lane_live = jnp.any(st[1], axis=(0, st[1].ndim - 1)) if L else None
 
+        # round-start introspection: frontier size here; the direction is
+        # logged by the first local sub-iteration from the bucket it
+        # actually dispatches (the frontier may grow mid-round; only the
+        # opening choice is logged — push_iters counts the rest)
+        li = jnp.minimum(stats.rounds, FRONTIER_LOG_CAP - 1)
+        stats = stats._replace(
+            frontier_log=stats.frontier_log.at[li].set(
+                jnp.sum(st[1].astype(jnp.int32))),
+        )
+
         def local_cond(c2):
             st2, stats2, liters = c2
             gated = jax.vmap(lambda vs, a: _gate(prog, vs, a,
@@ -217,10 +272,16 @@ def _run_rounds(sg: ShardedGraph, prog: VertexProgram, vstate0, active0,
 
         def local_body(c2):
             st2, stats2, liters = c2
+            if sweep != "pull":
+                bucket = _bucket_of(st2[0], st2[1],
+                                    thr if use_gate else None, lane_live)
+                is_push = jnp.where(bucket < n_caps, 1, 0).astype(jnp.int32)
+            else:
+                bucket, is_push = None, jnp.zeros((), jnp.int32)
             local_iter = jax.vmap(
                 lambda i, g, s: _local_iter_shard(
                     prog, Np, S, i, g, s, relax,
-                    thr if use_gate else None, lane_live,
+                    thr if use_gate else None, lane_live, bucket,
                 ),
                 in_axes=(0, 0, 0),
             )
@@ -233,6 +294,9 @@ def _run_rounds(sg: ShardedGraph, prog: VertexProgram, vstate0, active0,
                 max_frontier=jnp.maximum(
                     stats2.max_frontier, jnp.sum(st2[1].astype(jnp.int32))
                 ),
+                push_iters=stats2.push_iters + is_push,
+                dir_log=stats2.dir_log.at[li].set(
+                    jnp.where(liters == 0, is_push, stats2.dir_log[li])),
             )
             return st2, stats2, liters + 1
 
@@ -280,6 +344,8 @@ def diffuse(
     max_rounds: int = 10_000,
     delta=None,
     backend: str = "xla",
+    sweep: str = "pull",
+    push_threshold: float = DEFAULT_PUSH_THRESHOLD,
 ):
     """Run a diffusive computation to quiescence.
 
@@ -288,10 +354,13 @@ def diffuse(
     ``hpx_diffuse`` (Code Listing 3): the program carries
     vertex_func/predicate; the terminator is the engine's built-in
     counting quiescence detector.  ``backend`` selects the relaxation
-    kernel (see relax.py); both choices reach the same fixed point bitwise.
+    kernel and ``sweep`` the direction — dense pull, frontier-compacted
+    push, or the per-sub-iteration ``"auto"`` selector (see relax.py);
+    every choice reaches the same fixed point bitwise.
     """
     sg = part.sg if isinstance(part, Partitioned) else part
-    return _diffuse_jit(sg, prog, max_local_iters, max_rounds, delta, backend)
+    return _diffuse_jit(sg, prog, max_local_iters, max_rounds, delta,
+                        backend, sweep, push_threshold)
 
 
 def diffuse_from(
@@ -303,6 +372,8 @@ def diffuse_from(
     max_rounds: int = 10_000,
     delta=None,
     backend: str = "xla",
+    sweep: str = "pull",
+    push_threshold: float = DEFAULT_PUSH_THRESHOLD,
 ):
     """Resume / continue a diffusion from an explicit (state, frontier).
 
@@ -310,10 +381,13 @@ def diffuse_from(
     point that diffusive computations restart from *within* the data rather
     than from a central coordinator.  ``delta`` applies the same
     delta-stepping priority gate as :func:`diffuse`, so a gated query's
-    incremental repair runs gated too."""
+    incremental repair runs gated too.  Repairs resume from a *tiny*
+    frontier, which is exactly where ``sweep="push"`` turns the O(E)
+    per-round sweep into O(frontier-adjacent edges) — the session's
+    repair path defaults to it."""
     sg = part.sg if isinstance(part, Partitioned) else part
     return _run_rounds(sg, prog, vstate, active, max_local_iters, max_rounds,
-                       delta, backend)
+                       delta, backend, sweep, push_threshold)
 
 
 # --------------------------------------------------------------------------
@@ -323,22 +397,26 @@ def diffuse_from(
 def diffuse_spmd_step(prog: VertexProgram, axis_name: str, n_shards: int,
                       n_per_shard: int, max_local_iters: int, max_rounds: int,
                       block_e: int = DEFAULT_EDGE_BLOCK,
-                      backend: str = "xla"):
+                      backend: str = "xla", sweep: str = "pull",
+                      push_threshold: float = DEFAULT_PUSH_THRESHOLD):
     """Build the per-device diffusion function for use inside shard_map.
 
     The returned fn takes per-device blocks of the ShardedGraph arrays
-    (leading dim 1 = this device's shard, including the ``csr_*`` sorted
-    edge streams) and runs rounds of (local relax -> all_to_all operon
-    exchange -> receive) until a psum'd quiescence check fires.  The local
-    while_loop has device-dependent trip count — cells genuinely run ahead
-    of each other between exchanges.  The relaxation step dispatches to the
-    same ``backend`` implementations as the logical engine; laned programs
-    carry their lane axis through the all_to_all unchanged.
+    (leading dim 1 = this device's shard, including the ``csr_*``/
+    ``push_*`` sorted edge streams) and runs rounds of (local relax ->
+    all_to_all operon exchange -> receive) until a psum'd quiescence check
+    fires.  The local while_loop has device-dependent trip count — cells
+    genuinely run ahead of each other between exchanges.  The relaxation
+    step dispatches to the same ``backend``/``sweep`` implementations as
+    the logical engine; the direction selector runs *per device* on the
+    local frontier (no collective — the sweep branches contain none), so
+    a cell with a dense frontier pulls while its sparse neighbours push.
+    Laned programs carry their lane axis through the all_to_all unchanged.
     """
     S, Np = n_shards, n_per_shard
     L = prog.lanes
     lane = (L,) if L else ()
-    relax = make_relax(prog, S, Np, block_e, backend)
+    relax = make_relax(prog, S, Np, block_e, backend, sweep, push_threshold)
     monoid = prog.monoid
     ident_f = lambda: monoid.identity(prog.msg_dtype)
 
@@ -357,14 +435,20 @@ def diffuse_spmd_step(prog: VertexProgram, axis_name: str, n_shards: int,
         outbox_has = jnp.zeros((S,) + lane + (Np,), bool)
         outbox_pay = (jnp.full((S,) + lane + (Np,), -1, jnp.int32)
                       if prog.with_payload else None)
-        stats = DiffuseStats(*[jnp.zeros((), jnp.int32) for _ in range(7)])
+        stats = _stats0()
+        nb = sg_s["csr_key"].shape[-1] // block_e
+        n_caps = len(push_caps(nb))
+
+        def _bucket_of(act):
+            counts = active_push_blocks(act, sg_s["push_src"], block_e)
+            return select_bucket(counts, nb, sweep, push_threshold)
 
         def round_cond(c):
             _, _, global_live, stats = c
             return (global_live > 0) & (stats.rounds < max_rounds)
 
         def round_body(c):
-            st, _, _, stats = c
+            st, _, global_live, stats = c
             if L:
                 # per-lane global quiescence: psum'd lane frontiers mask
                 # converged lanes out of message generation
@@ -374,18 +458,41 @@ def diffuse_spmd_step(prog: VertexProgram, axis_name: str, n_shards: int,
             else:
                 lane_live = None
 
+            # round-start introspection: the psum'd frontier is already in
+            # hand (replicated); the direction is this device's opening
+            # pick, logged by the first local sub-iteration and pmax'd
+            # into the log at the end
+            li = jnp.minimum(stats.rounds, FRONTIER_LOG_CAP - 1)
+            stats = stats._replace(
+                frontier_log=stats.frontier_log.at[li].set(
+                    global_live.astype(jnp.int32)),
+            )
+
             def local_cond(c2):
                 st2, stats2, liters = c2
                 return jnp.any(st2[1]) & (liters < max_local_iters)
 
             def local_body(c2):
                 st2, stats2, liters = c2
+                if sweep != "pull":
+                    act = (st2[1] if lane_live is None
+                           else st2[1] & lane_live[:, None])
+                    bucket = _bucket_of(act)
+                    is_push = jnp.where(bucket < n_caps, 1, 0).astype(
+                        jnp.int32)
+                else:
+                    bucket, is_push = None, jnp.zeros((), jnp.int32)
                 st2, counts = _local_iter_shard(prog, Np, S, my_shard, sg_s,
-                                                st2, relax, None, lane_live)
+                                                st2, relax, None, lane_live,
+                                                bucket)
                 stats2 = stats2._replace(
                     local_iters=stats2.local_iters + 1,
                     actions=stats2.actions + counts["actions"],
                     remote_actions=stats2.remote_actions + counts["remote"],
+                    push_iters=stats2.push_iters + is_push,
+                    dir_log=stats2.dir_log.at[li].set(
+                        jnp.where(liters == 0, is_push,
+                                  stats2.dir_log[li])),
                 )
                 return st2, stats2, liters + 1
 
@@ -436,6 +543,8 @@ def diffuse_spmd_step(prog: VertexProgram, axis_name: str, n_shards: int,
             operons_sent=lax.psum(stats.operons_sent, axis_name),
             local_iters=lax.pmax(stats.local_iters, axis_name),
             max_frontier=lax.pmax(stats.max_frontier, axis_name),
+            push_iters=lax.pmax(stats.push_iters, axis_name),
+            dir_log=lax.pmax(stats.dir_log, axis_name),
         )
         return vfinal, stats
 
@@ -445,14 +554,15 @@ def diffuse_spmd_step(prog: VertexProgram, axis_name: str, n_shards: int,
 def make_spmd_diffuse(mesh, prog: VertexProgram, sg_template,
                       axis_name: str = "cells", max_local_iters: int = 64,
                       max_rounds: int = 10_000, backend: str = "xla",
-                      block_e: int | None = None):
+                      block_e: int | None = None, sweep: str = "pull",
+                      push_threshold: float = DEFAULT_PUSH_THRESHOLD):
     """Wrap the per-device engine in shard_map over ``axis_name``.
 
     ``sg_template`` may be a ShardedGraph or a dict of (ShapeDtypeStruct)
     arrays matching :func:`_sg_as_dict` — the latter is what the dry-run
-    uses; dict templates must carry the ``csr_*`` stream fields, padded to
-    a multiple of ``block_e`` (pass it when the streams were built with a
-    non-default :meth:`ShardedGraph.with_csr` block).
+    uses; dict templates must carry the ``csr_*`` and ``push_*`` stream
+    fields, padded to a multiple of ``block_e`` (pass it when the streams
+    were built with a non-default :meth:`ShardedGraph.with_csr` block).
     Returns a function (sgd dict) -> (vertex_state [S, Np] layout, stats).
     """
     import types as _types
@@ -461,7 +571,7 @@ def make_spmd_diffuse(mesh, prog: VertexProgram, sg_template,
     from jax.experimental.shard_map import shard_map
 
     if isinstance(sg_template, ShardedGraph):
-        sgd_t = _sg_as_dict(sg_template)
+        sgd_t = _sg_as_dict(sg_template, with_push=sweep != "pull")
         block_e = block_e or sg_template.csr_block
     else:
         sgd_t = dict(sg_template)
@@ -476,7 +586,8 @@ def make_spmd_diffuse(mesh, prog: VertexProgram, sg_template,
 
     per_device = diffuse_spmd_step(
         prog, axis_name, S, Np, max_local_iters, max_rounds,
-        block_e=block_e, backend=backend,
+        block_e=block_e, backend=backend, sweep=sweep,
+        push_threshold=push_threshold,
     )
 
     # Derive the vertex-state pytree structure from prog.init (shape-only).
@@ -492,7 +603,7 @@ def make_spmd_diffuse(mesh, prog: VertexProgram, sg_template,
     in_specs = ({k: P(axis_name) for k in sgd_t},)
     out_specs = (
         jax.tree_util.tree_map(lambda _: P(axis_name), vstate_struct),
-        DiffuseStats(*[P()] * 7),
+        DiffuseStats(*[P()] * len(DiffuseStats._fields)),
     )
     return shard_map(
         per_device,

@@ -60,6 +60,50 @@ def build_csr(dst_shard, dst_local, edge_ok, n_shards: int, n_per_shard: int,
     return perm, skey
 
 
+def build_push_csr(src_local, edge_ok, csr_perm, n_per_shard: int,
+                   block: int):
+    """Source-sorted blocked-CSR permutation — the "push" twin of
+    :func:`build_csr`.
+
+    Sort key per live edge is the *source* local index, so every vertex's
+    out-edges form one contiguous run and a frontier's out-edge blocks
+    can be gathered without touching the rest of the stream; dead/padding
+    slots sort last.  Returns
+
+    * ``perm``  [S, Eb] int32 — push position -> original edge slot,
+    * ``src``   [S, Eb] int32 — sorted source local index, ``-1`` on dead
+      and padding positions (always trailing),
+    * ``pos``   [S, Eb] int32 — the same edge's position in the
+      *destination-sorted* stream of ``csr_perm`` (``-1`` on dead/pad) —
+      what lets a push sweep scatter its messages back into the dense
+      stream layout so the sum monoid's fixed scan order is preserved
+      bit for bit.
+
+    ``csr_perm`` is the matching destination-sorted permutation from
+    :func:`build_csr` (only its first ``Ep`` columns — the real argsort —
+    are read).  Pure jnp, same cost class as the pull sort.
+    """
+    s_, ep = src_local.shape
+    eb = -(-ep // block) * block
+    key = jnp.where(edge_ok, src_local, n_per_shard)
+    perm = jnp.argsort(key, axis=-1, stable=True).astype(jnp.int32)
+    ssrc = jnp.take_along_axis(key, perm, axis=-1)
+    ssrc = jnp.where(ssrc >= n_per_shard, -1, ssrc).astype(jnp.int32)
+    # invert the destination sort: edge slot -> dense stream position
+    rows = jnp.arange(s_, dtype=jnp.int32)[:, None]
+    inv = jnp.zeros((s_, ep), jnp.int32).at[rows, csr_perm[:, :ep]].set(
+        jnp.broadcast_to(jnp.arange(ep, dtype=jnp.int32), (s_, ep))
+    )
+    pos = jnp.take_along_axis(inv, perm, axis=-1)
+    pos = jnp.where(ssrc >= 0, pos, -1)
+    pad = eb - ep
+    if pad:
+        perm = jnp.pad(perm, ((0, 0), (0, pad)))
+        ssrc = jnp.pad(ssrc, ((0, 0), (0, pad)), constant_values=-1)
+        pos = jnp.pad(pos, ((0, 0), (0, pad)), constant_values=-1)
+    return perm, ssrc, pos
+
+
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["src", "dst", "weight", "edge_ok", "node_ok"],
@@ -143,6 +187,9 @@ def from_edges(
         "out_degree",
         "csr_perm",
         "csr_key",
+        "push_perm",
+        "push_src",
+        "push_pos",
     ],
     meta_fields=["n_shards", "n_per_shard", "n_nodes", "csr_block"],
 )
@@ -156,14 +203,20 @@ class ShardedGraph:
     the global id of each edge's destination (used for payload messages such
     as parent pointers).
 
-    ``csr_perm``/``csr_key`` are the blocked-CSR view (:func:`build_csr`):
-    the per-shard edge stream sorted by destination ``(dst_shard,
-    dst_local)`` and padded to a ``csr_block`` multiple — the layout the
-    relaxation kernels assume.  Built at partition time and kept current
-    by ``UpdateBatch.apply`` (eager :meth:`with_csr`); the sequential
-    per-edge primitives instead :meth:`invalidate_csr` and the engines
-    rebuild lazily at the next diffusion, so ``csr_view()`` raises on a
-    graph mutated that way until ``with_csr()`` is called.
+    ``csr_perm``/``csr_key`` are the destination-sorted "pull" blocked-CSR
+    view (:func:`build_csr`): the per-shard edge stream sorted by
+    ``(dst_shard, dst_local)`` and padded to a ``csr_block`` multiple —
+    the layout the dense relaxation kernels assume.
+    ``push_perm``/``push_src``/``push_pos`` are its source-sorted "push"
+    twin (:func:`build_push_csr`): the same edges sorted by source local
+    index, so an active frontier's out-edges live in a few contiguous
+    blocks that a sparse sweep can gather without streaming the rest
+    (DESIGN.md §2.8).  Both views are built at partition time and kept
+    current together by ``UpdateBatch.apply`` (eager :meth:`with_csr`);
+    the sequential per-edge primitives instead :meth:`invalidate_csr`
+    *both* views and the engines rebuild lazily at the next diffusion, so
+    ``csr_view()``/``push_view()`` raise on a graph mutated that way
+    until ``with_csr()`` is called.
     """
 
     src_local: jnp.ndarray   # [S, Ep] int32 — local index of the edge source
@@ -180,6 +233,9 @@ class ShardedGraph:
     n_nodes: int             # number of real (unpadded) vertices
     csr_perm: jnp.ndarray | None = None  # [S, Eb] int32 sorted pos -> slot
     csr_key: jnp.ndarray | None = None   # [S, Eb] int32 sorted dst key | -1
+    push_perm: jnp.ndarray | None = None  # [S, Eb] int32 push pos -> slot
+    push_src: jnp.ndarray | None = None   # [S, Eb] int32 sorted src | -1
+    push_pos: jnp.ndarray | None = None   # [S, Eb] int32 dense pos | -1
     csr_block: int = DEFAULT_EDGE_BLOCK
 
     @property
@@ -187,24 +243,31 @@ class ShardedGraph:
         return int(self.src_local.shape[1])
 
     def with_csr(self, block: int | None = None) -> "ShardedGraph":
-        """Rebuild the blocked-CSR view from the current topology."""
+        """Rebuild both blocked-CSR views (pull + push) from the current
+        topology."""
         block = block or self.csr_block
         perm, key = build_csr(self.dst_shard, self.dst_local, self.edge_ok,
                               self.n_shards, self.n_per_shard, block)
+        pperm, psrc, ppos = build_push_csr(
+            self.src_local, self.edge_ok, perm, self.n_per_shard, block)
         return dataclasses.replace(
-            self, csr_perm=perm, csr_key=key, csr_block=block
+            self, csr_perm=perm, csr_key=key, push_perm=pperm,
+            push_src=psrc, push_pos=ppos, csr_block=block,
         )
 
     def invalidate_csr(self) -> "ShardedGraph":
-        """Drop the CSR view without paying the re-sort.  Used by the
+        """Drop both CSR views without paying the re-sorts.  Used by the
         sequential per-edge primitives so a k-update loop defers the sort
         to the next diffusion (via ``_sg_as_dict``) instead of sorting k
         times.  The rebuild happens in-trace on a local copy — an
         invalidated graph re-sorts on *every* diffusion until the caller
         persists it with :meth:`with_csr`; the batched
         ``UpdateBatch.apply`` rebuilds eagerly so committed graphs never
-        carry that recurring cost."""
-        return dataclasses.replace(self, csr_perm=None, csr_key=None)
+        carry that recurring cost.  Pull and push views are always
+        dropped together — a graph can never carry one stale view."""
+        return dataclasses.replace(self, csr_perm=None, csr_key=None,
+                                   push_perm=None, push_src=None,
+                                   push_pos=None)
 
     def csr_view(self) -> dict:
         """The destination-sorted edge streams the relax backends consume.
@@ -221,6 +284,26 @@ class ShardedGraph:
             "csr_src": take(self.src_local),
             "csr_weight": take(self.weight),
             "csr_dst_gid": take(self.dst_gid),
+        }
+
+    def push_view(self) -> dict:
+        """The source-sorted edge streams the push sweep consumes.
+
+        [S, Eb] gathers of the edge fields through ``push_perm``;
+        positions with ``push_src == -1`` (dead/padding) carry garbage
+        and must be masked.  ``push_pos`` maps each push position back to
+        its slot in the destination-sorted stream of :meth:`csr_view`.
+        """
+        if self.push_perm is None:
+            raise ValueError("ShardedGraph has no push view; call with_csr()")
+        take = lambda a: jnp.take_along_axis(a, self.push_perm, axis=-1)
+        key = take(self.dst_shard) * self.n_per_shard + take(self.dst_local)
+        return {
+            "push_src": self.push_src,
+            "push_key": jnp.where(self.push_src >= 0, key, -1),
+            "push_weight": take(self.weight),
+            "push_dst_gid": take(self.dst_gid),
+            "push_pos": self.push_pos,
         }
 
     def n_edges(self) -> jnp.ndarray:

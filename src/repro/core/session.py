@@ -43,8 +43,13 @@ queries, or raw lowered programs, and a pluralized lane param
 with per-lane cache entries.
 
 Orthogonally, ``backend="xla" | "pallas"`` (DESIGN.md §2.6) picks the
-relaxation-kernel implementation inside the sharded/spmd engines; both
-produce bitwise-identical fixed points, so it is a pure execution choice.
+relaxation-kernel implementation inside the sharded/spmd engines, and
+``sweep="pull" | "push" | "auto"`` (DESIGN.md §2.8) the sweep direction —
+dense destination-sorted pull, frontier-compacted source-sorted push, or
+the per-round direction selector.  Every combination produces
+bitwise-identical fixed points, so both are pure execution choices;
+commit()-time repairs resume from tiny frontiers and therefore default
+to the push sweep.
 """
 
 from __future__ import annotations
@@ -60,7 +65,7 @@ from .diffuse import _sg_as_dict, diffuse, diffuse_from, make_spmd_diffuse
 from .dynamic import NameServer, _invalidate_subtrees
 from .graph import from_edges
 from .partition import Partitioned, partition
-from .relax import RELAX_BACKENDS
+from .relax import RELAX_BACKENDS, RELAX_SWEEPS
 from .programs import (
     PROGRAMS,
     BoundQuery,
@@ -129,7 +134,7 @@ class _Entry:
     """One cached (program, kwargs) fixed point."""
 
     spec: ProgramSpec
-    prog: VertexProgram
+    prog: VertexProgram | None
     value_key: str
     kwargs: dict
     vstate: Any
@@ -137,6 +142,11 @@ class _Entry:
     engine: str
     backend: str = "xla"
     delta: float | None = None   # delta-stepping gate, kept across repairs
+    sweep: str | None = None     # explicit sweep knob; None = defaulted
+                                 #   (queries use the session's, repairs
+                                 #   default to the push sweep)
+    raw: Any = None              # run_fn programs (triangles): the cached
+                                 #   Result itself; repaired by recount
 
 
 class CommitInfo(NamedTuple):
@@ -149,17 +159,22 @@ class DiffusionSession:
 
     def __init__(self, part: Partitioned, ns: NameServer | None = None,
                  engine: str = "sharded", backend: str = "xla",
-                 max_local_iters: int = 64, max_rounds: int = 10_000):
+                 sweep: str = "pull", max_local_iters: int = 64,
+                 max_rounds: int = 10_000):
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, "
                              f"got {engine!r}")
         if backend not in RELAX_BACKENDS:
             raise ValueError(f"backend must be one of {RELAX_BACKENDS}, "
                              f"got {backend!r}")
+        if sweep not in RELAX_SWEEPS:
+            raise ValueError(f"sweep must be one of {RELAX_SWEEPS}, "
+                             f"got {sweep!r}")
         self.part = part
         self._ns = ns                # lazily built: queries don't need one
         self.engine = engine
         self.backend = backend
+        self.sweep = sweep
         self.max_local_iters = max_local_iters
         self.max_rounds = max_rounds
         self._cache: dict[tuple, _Entry] = {}
@@ -248,16 +263,21 @@ class DiffusionSession:
     # ------------------------------------------------------------------
 
     def _key(self, name: str, engine: str, kwargs: dict,
-             backend: str = "xla", delta: float | None = None) -> tuple:
+             backend: str = "xla", delta: float | None = None,
+             sweep: str = "pull") -> tuple:
         # freeze_kwargs canonicalizes unhashable values (list-valued
         # ``sources`` etc.) into deterministic tuples
         key = (name, engine, freeze_kwargs(kwargs))
-        # default (xla, ungated) keys stay in the PR-1 shape so
+        # default (xla, ungated, pull) keys stay in the PR-1 shape so
         # adopt()/peek() callers keep working; variants get suffixed keys.
+        # sweep variants are bitwise-identical fixed points, but they key
+        # separately like backend so a caller can hold both warm.
         if backend != "xla":
             key = key + (backend,)
         if delta is not None:
             key = key + (("delta", delta),)
+        if sweep != "pull":
+            key = key + (("sweep", sweep),)
         return key
 
     def _resolve(self, prog, kwargs: dict):
@@ -283,9 +303,9 @@ class DiffusionSession:
         return PROGRAMS[name], name, kwargs, None
 
     def query(self, prog, engine: str | None = None,
-              backend: str | None = None, refresh: bool = False,
-              value_key: str | None = None, delta: float | None = None,
-              **kwargs):
+              backend: str | None = None, sweep: str | None = None,
+              refresh: bool = False, value_key: str | None = None,
+              delta: float | None = None, **kwargs):
         """Run (or serve from cache) a named or ad-hoc vertex program.
 
         ``prog`` is a registry name ("sssp", "cc", "ppr", "pagerank",
@@ -309,20 +329,27 @@ class DiffusionSession:
         key, so later ``commit()`` repairs and ``peek``/``query`` hits
         treat lanes exactly like individually-issued queries.
 
-        ``backend`` picks the relaxation kernel ("xla" | "pallas"; both
-        bitwise-identical); ``delta`` enables the delta-stepping priority
-        gate for programs with a priority, and is remembered so commit()'s
-        incremental repair re-diffuses under the same gate.
+        ``backend`` picks the relaxation kernel ("xla" | "pallas") and
+        ``sweep`` the direction ("pull" | "push" | "auto" — dense,
+        frontier-compacted, or per-round selected; all bitwise-identical);
+        ``delta`` enables the delta-stepping priority gate for programs
+        with a priority, and is remembered so commit()'s incremental
+        repair re-diffuses under the same gate.
         """
         engine = engine or self.engine
         explicit_backend = backend
         backend = backend or self.backend
+        explicit_sweep = sweep
+        sweep = sweep or self.sweep
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, "
                              f"got {engine!r}")
         if backend not in RELAX_BACKENDS:
             raise ValueError(f"backend must be one of {RELAX_BACKENDS}, "
                              f"got {backend!r}")
+        if sweep not in RELAX_SWEEPS:
+            raise ValueError(f"sweep must be one of {RELAX_SWEEPS}, "
+                             f"got {sweep!r}")
         if delta is not None and engine != "sharded":
             raise ValueError(
                 "delta-stepping is only gated on engine='sharded'; the "
@@ -331,6 +358,10 @@ class DiffusionSession:
             raise ValueError(
                 "the event oracle runs on the host and has no relax "
                 "backend; backend= would be silently ignored")
+        if explicit_sweep is not None and engine == "event":
+            raise ValueError(
+                "the event oracle runs on the host and has no sweep "
+                "direction; sweep= would be silently ignored")
 
         spec, name, kwargs, adhoc = self._resolve(prog, kwargs)
         if adhoc is not None:
@@ -341,15 +372,32 @@ class DiffusionSession:
                                value_key)
             name = spec.name
         elif spec.run_fn is not None:
-            return spec.run_fn(self, engine=engine, **kwargs)
+            # custom (non-diffusive) queries go through the same cache /
+            # commit()-repair door: the Result is cached whole and
+            # repaired by a restart-style rerun ("recount") on commit
+            if (explicit_backend is not None or explicit_sweep is not None
+                    or delta is not None):
+                raise ValueError(
+                    f"{name!r} is a custom run_fn query with no "
+                    f"relaxation sweep; backend=/sweep=/delta= would be "
+                    f"silently ignored")
+            key = self._key(name, engine, kwargs)
+            if not refresh and key in self._cache:
+                return self._cache[key].raw
+            res = spec.run_fn(self, engine=engine, **kwargs)
+            self._cache[key] = _Entry(spec, None, spec.value_key,
+                                      dict(kwargs), None, res.stats,
+                                      engine, raw=res)
+            return res
 
         lane_kw = spec.lane_param + "s" if spec.lane_param else None
         if lane_kw and lane_kw in kwargs:
             lane_vals = list(kwargs.pop(lane_kw))
             return self._query_lanes(spec, name, lane_vals, kwargs, engine,
-                                     backend, refresh, delta, value_key)
+                                     backend, refresh, delta, value_key,
+                                     sweep, explicit_sweep)
 
-        key = self._key(name, engine, kwargs, backend, delta)
+        key = self._key(name, engine, kwargs, backend, delta, sweep)
         if not refresh and key in self._cache:
             return self._result(self._cache[key])
 
@@ -377,32 +425,39 @@ class DiffusionSession:
 
         program = adhoc if adhoc is not None else spec.factory(**kwargs)
         vk = value_key or spec.value_key
-        vstate, stats = self._run_diffusion(program, engine, backend, delta)
+        vstate, stats = self._run_diffusion(program, engine, backend, delta,
+                                            sweep)
         entry = _Entry(spec, program, vk, dict(kwargs), vstate, stats,
-                       engine, backend=backend, delta=delta)
+                       engine, backend=backend, delta=delta,
+                       sweep=explicit_sweep)
         self._cache[key] = entry
         return self._result(entry)
 
     def _run_diffusion(self, program: VertexProgram, engine: str,
-                       backend: str, delta):
+                       backend: str, delta, sweep: str = "pull"):
         if engine == "sharded":
             return diffuse(
                 self.sg, program, max_local_iters=self.max_local_iters,
-                max_rounds=self.max_rounds, delta=delta, backend=backend)
-        return self._run_spmd(program, backend)
+                max_rounds=self.max_rounds, delta=delta, backend=backend,
+                sweep=sweep)
+        return self._run_spmd(program, backend, sweep)
 
     def _query_lanes(self, spec: ProgramSpec, name: str, lane_vals: list,
                      kwargs: dict, engine: str, backend: str,
-                     refresh: bool, delta, value_key: str | None = None) -> list:
+                     refresh: bool, delta, value_key: str | None = None,
+                     sweep: str = "pull",
+                     explicit_sweep: str | None = None) -> list:
         """Fan a pluralized lane param out into B lanes of one diffusion.
 
         The laned fixed point is split lane-by-lane into ordinary
         single-query cache entries (``vstate`` leaves [S, L, Np] ->
         [S, Np]), so commit()-time repair splices and re-diffuses each
-        lane exactly like a query that was issued on its own.
+        lane exactly like a query that was issued on its own.  A push /
+        auto sweep ORs every lane's senders into one shared active set —
+        one compaction serves all lanes.
         """
         per_lane = [dict(kwargs, **{spec.lane_param: v}) for v in lane_vals]
-        keys = [self._key(name, engine, kw, backend, delta)
+        keys = [self._key(name, engine, kw, backend, delta, sweep)
                 for kw in per_lane]
         if not refresh and all(k in self._cache for k in keys):
             return [self._result(self._cache[k]) for k in keys]
@@ -415,42 +470,52 @@ class DiffusionSession:
 
         progs = tuple(spec.factory(**kw) for kw in per_lane)
         laned = make_laned(progs)
-        vstate, stats = self._run_diffusion(laned, engine, backend, delta)
+        vstate, stats = self._run_diffusion(laned, engine, backend, delta,
+                                            sweep)
 
         vk = value_key or spec.value_key
         results = []
         for i, (kw, key) in enumerate(zip(per_lane, keys)):
             lane_state = jax.tree_util.tree_map(lambda a: a[:, i], vstate)
             entry = _Entry(spec, progs[i], vk, kw, lane_state,
-                           stats, engine, backend=backend, delta=delta)
+                           stats, engine, backend=backend, delta=delta,
+                           sweep=explicit_sweep)
             self._cache[key] = entry
             results.append(self._result(entry))
         return results
 
     def adopt(self, name: str, vstate, stats=None, engine: str = "sharded",
               backend: str | None = None, delta: float | None = None,
-              **kwargs) -> tuple:
+              sweep: str | None = None, **kwargs) -> tuple:
         """Register an existing fixed point with the session so commit()
         repairs it (on the session's backend unless overridden); returns
         the cache key."""
         spec = PROGRAMS[name]
         prog = spec.factory(**kwargs)
         backend = backend or self.backend
-        key = self._key(name, engine, kwargs, backend, delta)
+        key = self._key(name, engine, kwargs, backend, delta,
+                        sweep or self.sweep)
         self._cache[key] = _Entry(spec, prog, spec.value_key, dict(kwargs),
                                   vstate, stats, engine, backend=backend,
-                                  delta=delta)
+                                  delta=delta, sweep=sweep)
         return key
 
     def vertex_state(self, name: str, engine: str | None = None,
                      backend: str | None = None, delta: float | None = None,
-                     **kwargs):
+                     sweep: str | None = None, **kwargs):
         """The cached [S, Np]-layout vertex-state pytree of a query."""
         key = self._key(name, engine or self.engine, kwargs,
-                        backend or self.backend, delta)
-        return self._cache[key].vstate
+                        backend or self.backend, delta,
+                        sweep or self.sweep)
+        entry = self._cache[key]
+        if entry.vstate is None:
+            raise ValueError(
+                f"{name!r} is a custom run_fn query; it caches a whole "
+                f"Result (query() serves it), not a vertex-state pytree")
+        return entry.vstate
 
-    def _run_spmd(self, program: VertexProgram, backend: str = "xla"):
+    def _run_spmd(self, program: VertexProgram, backend: str = "xla",
+                  sweep: str = "pull"):
         S = self.n_cells
         if len(jax.devices()) < S:
             raise RuntimeError(
@@ -460,16 +525,16 @@ class DiffusionSession:
                 f"before importing jax, or use engine='sharded'.")
         from ..launch.mesh import mesh_context
 
-        fkey = (program, S, backend)
+        fkey = (program, S, backend, sweep)
         if fkey not in self._spmd_fns:
             mesh = jax.make_mesh((S,), ("cells",))
             self._spmd_fns[fkey] = (mesh, make_spmd_diffuse(
                 mesh, program, self.sg, axis_name="cells",
                 max_local_iters=self.max_local_iters,
-                max_rounds=self.max_rounds, backend=backend))
+                max_rounds=self.max_rounds, backend=backend, sweep=sweep))
         mesh, fn = self._spmd_fns[fkey]
         with mesh_context(mesh):
-            return fn(_sg_as_dict(self.sg))
+            return fn(_sg_as_dict(self.sg, with_push=sweep != "pull"))
 
     def _result(self, entry: _Entry) -> Result:
         values = self.to_global(entry.vstate[entry.value_key])
@@ -518,6 +583,8 @@ class DiffusionSession:
 
         engine = kwargs.pop("engine", None) or self.engine
         backend = kwargs.pop("backend", None) or self.backend
+        sweep_kw = kwargs.pop("sweep", None)
+        sweep = sweep_kw or self.sweep
         delta = kwargs.pop("delta", None)
         if engine == "event":
             raise ValueError(
@@ -528,13 +595,18 @@ class DiffusionSession:
             raise ValueError(
                 "peek needs a registered program (name, handle, or bound "
                 "query), not a raw VertexProgram")
+        if spec.run_fn is not None:
+            raise ValueError(
+                f"peek reads a cached shard-layout vertex state; the "
+                f"custom query {name!r} caches a whole Result and holds "
+                f"none")
         lane_kw = spec.lane_param + "s" if spec.lane_param else None
         if lane_kw and lane_kw in kwargs:
             raise ValueError(
                 f"peek reads one cached fixed point; a lane batch caches "
                 f"per source — peek with {spec.lane_param}=<one of "
                 f"{lane_kw}> instead")
-        key = self._key(name, engine, kwargs, backend, delta)
+        key = self._key(name, engine, kwargs, backend, delta, sweep)
         if key not in self._cache:
             # fall back to the unique cached variant of this program (and,
             # when kwargs were given, of these kwargs) — a delta/backend/
@@ -546,8 +618,8 @@ class DiffusionSession:
             if len(same) == 1:
                 key = same[0]
             else:
-                self.query(name, engine=engine, backend=backend, delta=delta,
-                           **kwargs)
+                self.query(name, engine=engine, backend=backend,
+                           sweep=sweep_kw, delta=delta, **kwargs)
         entry = self._cache[key]
         return _peek(self.sg, entry.vstate[entry.value_key], self.ns, u)
 
@@ -576,6 +648,13 @@ class DiffusionSession:
     def _repair_entry(self, entry: _Entry, applied: AppliedUpdates,
                       mli: int):
         sg = self.sg
+        if entry.spec.run_fn is not None:
+            # custom queries (triangles): restart-style recount against
+            # the committed graph — cached and repaired like any program
+            res = entry.spec.run_fn(self, engine=entry.engine,
+                                    **entry.kwargs)
+            entry.raw, entry.stats = res, res.stats
+            return ("recount", res.stats)
         strategy = entry.spec.repair
         if not applied.has_deletes and entry.spec.monotone:
             strategy = "frontier"
@@ -584,24 +663,30 @@ class DiffusionSession:
 
         if strategy == "restart":
             if entry.engine == "spmd":
-                vstate, stats = self._run_spmd(entry.prog, entry.backend)
+                vstate, stats = self._run_spmd(entry.prog, entry.backend,
+                                               entry.sweep or self.sweep)
             else:
                 vstate, stats = diffuse(sg, entry.prog,
                                         max_local_iters=mli,
                                         max_rounds=self.max_rounds,
                                         delta=entry.delta,
-                                        backend=entry.backend)
+                                        backend=entry.backend,
+                                        sweep=entry.sweep or self.sweep)
             entry.vstate, entry.stats = vstate, stats
             return ("restart", stats)
 
         vstate, active = self._warm_state(entry, applied, strategy)
         # resume under the entry's own delta gate + kernel backend, so the
-        # repair diffusion is work-gated exactly like the original query
+        # repair diffusion is work-gated exactly like the original query.
+        # Warm repairs resume from a tiny frontier, so they default to the
+        # frontier-compacted push sweep (an explicit query sweep wins) —
+        # bitwise-identical, O(frontier-adjacent edges) per round.
         vstate, stats = diffuse_from(sg, entry.prog, vstate, active,
                                      max_local_iters=mli,
                                      max_rounds=self.max_rounds,
                                      delta=entry.delta,
-                                     backend=entry.backend)
+                                     backend=entry.backend,
+                                     sweep=entry.sweep or "push")
         entry.vstate, entry.stats = vstate, stats
         return (strategy, stats)
 

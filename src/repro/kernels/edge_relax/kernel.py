@@ -48,7 +48,7 @@ from jax.experimental import pallas as pl
 from ..compat import CompilerParams as _CompilerParams
 from .ref import block_combine, edge_messages, stream_scan
 
-__all__ = ["edge_relax_blocks", "edge_relax_scan"]
+__all__ = ["edge_relax_blocks", "edge_relax_scan", "edge_relax_push_blocks"]
 
 
 def _kernel(*refs, prog, treedef, n_leaves: int, block_e: int):
@@ -132,6 +132,81 @@ def edge_relax_scan(prog, vstate, senders, gid, key, src, weight, dst_gid,
     v, c = outs[0][0], outs[1][0]
     p = outs[2][0] if prog.with_payload else None
     return v, c, p
+
+
+def _push_kernel(idx_ref, *refs, prog, treedef, n_leaves: int, block_e: int):
+    # same body as the dense blocked kernel — the grid walks the *active
+    # block list* instead of every block (idx_ref is the scalar-prefetched
+    # compaction; the BlockSpec index maps consumed it before this body
+    # runs, so the refs already hold the gathered block)
+    del idx_ref
+    _kernel(*refs, prog=prog, treedef=treedef, n_leaves=n_leaves,
+            block_e=block_e)
+
+
+def edge_relax_push_blocks(prog, vstate, senders, gid, key, src, weight,
+                           dst_gid, idx, block_e: int,
+                           interpret: bool = False):
+    """Frontier-compacted Pallas sweep: per-block partial tables for the
+    ``cap = len(idx)`` active blocks of the *source-sorted* push stream.
+
+    ``idx`` is the compacted active-block list
+    (:func:`~.ref.compact_push_blocks`; fill slots carry ``nb``).  It is
+    scalar-prefetched, and the edge-stream BlockSpecs index through it —
+    grid step ``i`` DMAs block ``idx[i]`` — so only the frontier's blocks
+    ever leave HBM; the vertex block stays pinned in VMEM as in the dense
+    kernel.  Fill slots clamp to the last block and must be neutralized
+    by the caller (``ops._mask_fill_blocks``) before the cross-block
+    combine — a duplicated block is harmless for the idempotent min/max
+    values but would double the sending-edge counts.
+
+    Push blocks are not destination-sorted, so a destination may occupy
+    several dense ranks within one block; the shared phase-2 scatter
+    merges them (order-free min/max), keeping push bitwise-equal to the
+    dense paths.  Returns (part, cnt, uniq[, pay]) each [cap, block_e].
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    leaves, treedef = jax.tree_util.tree_flatten(vstate)
+    np_ = gid.shape[0]
+    e = key.shape[0]
+    assert e % block_e == 0, "pad the stream via ShardedGraph.with_csr"
+    nb = e // block_e
+    cap = idx.shape[0]
+
+    pinned = lambda: pl.BlockSpec((1, np_), lambda i, idx: (0, 0))
+    stream = lambda: pl.BlockSpec(
+        (1, block_e), lambda i, idx: (0, jnp.minimum(idx[i], nb - 1)))
+    out_blk = lambda: pl.BlockSpec((1, block_e), lambda i, idx: (i, 0))
+
+    n_out = 4 if prog.with_payload else 3
+    out_dtypes = [prog.msg_dtype, jnp.int32, jnp.int32, jnp.int32][:n_out]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(cap,),
+        in_specs=(
+            [pinned() for _ in leaves]          # vstate: whole cell, pinned
+            + [pinned(), pinned()]              # senders, gid
+            + [stream() for _ in range(4)]      # key, src, weight, dst_gid
+        ),
+        out_specs=[out_blk() for _ in range(n_out)],
+    )
+    outs = pl.pallas_call(
+        functools.partial(_push_kernel, prog=prog, treedef=treedef,
+                          n_leaves=len(leaves), block_e=block_e),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((cap, block_e), dt)
+                   for dt in out_dtypes],
+        interpret=interpret,
+    )(
+        idx,
+        *[leaf[None] for leaf in leaves],
+        senders[None], gid[None],
+        key[None], src[None], weight[None], dst_gid[None],
+    )
+    part, cnt, uniq = outs[0], outs[1], outs[2]
+    pay = outs[3] if prog.with_payload else None
+    return part, cnt, uniq, pay
 
 
 def edge_relax_blocks(prog, vstate, senders, gid, key, src, weight, dst_gid,

@@ -30,10 +30,17 @@ import jax.numpy as jnp
 
 from ...core.msg import identity_for
 from ...core.relax import RELAX_BACKENDS
-from .kernel import edge_relax_blocks, edge_relax_scan
-from .ref import edge_relax_flat, edge_relax_stream, gather_runs
+from .kernel import edge_relax_blocks, edge_relax_push_blocks, edge_relax_scan
+from .ref import (
+    compact_push_blocks,
+    edge_relax_flat,
+    edge_relax_push_flat,
+    edge_relax_push_stream,
+    edge_relax_stream,
+    gather_runs,
+)
 
-__all__ = ["edge_relax", "RELAX_BACKENDS"]
+__all__ = ["edge_relax", "edge_relax_push", "RELAX_BACKENDS"]
 
 
 def _combine_blocks(part, cnt, uniq, pay, n_keys: int, combine: str,
@@ -58,6 +65,59 @@ def _combine_blocks(part, cnt, uniq, pay, n_keys: int, combine: str,
         pay_t = jnp.full((n_keys + 1,), -1, jnp.int32).at[ids].max(win)
         pay_t = pay_t[:n_keys]
     return table[:n_keys], cnt_t[:n_keys], pay_t
+
+
+def _mask_fill_blocks(part, cnt, uniq, pay, valid):
+    """Neutralize the fill slots of a power-of-two compaction bucket
+    (``cap > n_active`` — their grid steps clamped to a real block whose
+    contribution must not repeat): route their keys off-range and zero
+    their counts so the phase-2 scatter drops them."""
+    v = valid[:, None]
+    uniq = jnp.where(v, uniq, -1)
+    cnt = jnp.where(v, cnt, 0)
+    if pay is not None:
+        pay = jnp.where(v, pay, -1)
+    return part, cnt, uniq, pay
+
+
+def edge_relax_push(prog, vstate, senders, gid, sg_push, csr_key,
+                    n_keys: int, block_e: int, cap: int,
+                    backend: str = "xla", interpret: bool = False):
+    """Frontier-compacted push sweep of one cell — the sparse twin of
+    :func:`edge_relax`, same (table, cnt, pay) contract.
+
+    ``sg_push`` holds the source-sorted streams (``ShardedGraph.
+    push_view``); ``cap`` is the static compaction bucket (power-of-two
+    ladder, see relax.py) and must bound the cell's true active-block
+    count.  Dispatch mirrors the dense sweep: sum programs and all laned
+    runs scatter their compacted messages back into the dense stream
+    layout and run the shared scan (``ref.edge_relax_push_stream`` —
+    bitwise-equal to the dense scan for the order-sensitive monoid, on
+    either backend); single-query min/max takes the unsorted segment path
+    on ``xla`` and the scalar-prefetch blocked kernel on ``pallas``
+    (order-free monoids agree across all paths).  Phase 2 is the same
+    shared XLA code as the dense sweep.
+    """
+    if backend not in RELAX_BACKENDS:
+        raise ValueError(
+            f"backend must be one of {RELAX_BACKENDS}, got {backend!r}")
+    laned = senders.ndim == 2
+
+    if prog.combine == "sum" or laned:
+        return edge_relax_push_stream(prog, vstate, senders, gid, sg_push,
+                                      csr_key, n_keys, block_e, cap)
+    if backend == "xla":
+        return edge_relax_push_flat(prog, vstate, senders, gid, sg_push,
+                                    n_keys, block_e, cap)
+    idx, valid = compact_push_blocks(senders, sg_push["push_src"], block_e,
+                                     cap)
+    part, cnt, uniq, pay = edge_relax_push_blocks(
+        prog, vstate, senders, gid, sg_push["push_key"],
+        sg_push["push_src"], sg_push["push_weight"],
+        sg_push["push_dst_gid"], idx, block_e, interpret=interpret)
+    part, cnt, uniq, pay = _mask_fill_blocks(part, cnt, uniq, pay, valid)
+    return _combine_blocks(part, cnt, uniq, pay, n_keys, prog.combine,
+                           prog.msg_dtype)
 
 
 def edge_relax(prog, vstate, senders, gid, key, src, weight, dst_gid,

@@ -31,12 +31,18 @@ from ...core.msg import identity_for, segment_combine
 
 __all__ = [
     "edge_messages",
+    "stream_messages",
     "block_combine",
+    "flat_combine",
     "edge_relax_blocks_ref",
     "edge_relax_flat",
     "stream_scan",
     "gather_runs",
     "edge_relax_stream",
+    "compact_push_blocks",
+    "push_gather",
+    "edge_relax_push_flat",
+    "edge_relax_push_stream",
 ]
 
 
@@ -64,6 +70,43 @@ def edge_messages(prog, vstate, senders, gid, key, src, weight, dst_gid):
         pay = prog.payload(src_state, gid[src]).astype(jnp.int32)
         pay = jnp.where(send, pay, -1)
     return cand, send, pay
+
+
+def stream_messages(prog, vstate, senders, gid, key, src, weight, dst_gid):
+    """Lane-broadcasting twin of :func:`edge_messages` (``senders`` and
+    vstate leaves may carry leading lane axes).  Shared verbatim by the
+    dense scan path and the push stream path, so a future emit/mask
+    change cannot split them."""
+    src_state = jax.tree_util.tree_map(lambda a: a[..., src], vstate)
+    valid = key >= 0
+    send = senders[..., src] & valid
+    msg = prog.emit(src_state, weight, gid[src], dst_gid)
+    ident = prog.monoid.identity(prog.msg_dtype)
+    cand = jnp.where(send, msg, ident).astype(prog.msg_dtype)
+    pay = None
+    if prog.with_payload:
+        pay = prog.payload(src_state, gid[src]).astype(jnp.int32)
+        pay = jnp.where(send, pay, -1)
+    return cand, send, pay
+
+
+def flat_combine(cand, send, pay, ids, n_keys: int, combine: str):
+    """Phase 2 of the unsorted segment paths: scatter-combine the
+    candidate messages by destination id (``n_keys`` = drop row), count
+    senders, and ride the argbest payload with the segment-max-over-
+    winners tie-break.  Shared verbatim by the dense flat path and the
+    compacted push path — the push == pull bitwise contract for payload
+    programs lives here, structurally."""
+    table = segment_combine(cand, ids, n_keys + 1, combine,
+                            indices_are_sorted=False)
+    cnt = segment_combine(send.astype(jnp.int32), ids, n_keys + 1, "sum")
+    pay_t = None
+    if pay is not None:
+        win = send & (cand == table[ids])
+        pay_t = segment_combine(jnp.where(win, pay, -1), ids, n_keys + 1,
+                                "max")
+        pay_t = jnp.where(cnt[:n_keys] > 0, pay_t[:n_keys], -1)
+    return table[:n_keys], cnt[:n_keys], pay_t
 
 
 def block_combine(cand, send, key, pay, combine: str, block_e: int):
@@ -214,18 +257,121 @@ def edge_relax_stream(prog, vstate, senders, gid, key, src, weight, dst_gid,
 
     Returns (table [..., n_keys], cnt, pay | None).
     """
-    src_state = jax.tree_util.tree_map(lambda a: a[..., src], vstate)
-    valid = key >= 0
-    send = senders[..., src] & valid
-    msg = prog.emit(src_state, weight, gid[src], dst_gid)
-    ident = prog.monoid.identity(prog.msg_dtype)
-    cand = jnp.where(send, msg, ident).astype(prog.msg_dtype)
-    pay = None
-    if prog.with_payload:
-        pay = prog.payload(src_state, gid[src]).astype(jnp.int32)
-        pay = jnp.where(send, pay, -1)
+    cand, send, pay = stream_messages(prog, vstate, senders, gid, key, src,
+                                      weight, dst_gid)
     scanned = stream_scan(prog.monoid, cand, send, key, pay)
     return gather_runs(scanned, key, n_keys, prog.monoid, prog.msg_dtype)
+
+
+# --------------------------------------------------------------------------
+# push (frontier-compacted) sweep — work proportional to the active
+# frontier's out-edge blocks instead of the whole stream (DESIGN.md §2.8)
+# --------------------------------------------------------------------------
+
+def compact_push_blocks(senders_any, push_src, block_e: int, cap: int):
+    """Compact the frontier's out-edge blocks of one cell to ``cap`` slots.
+
+    The push stream is source-sorted (``ShardedGraph.build_push_csr``), so
+    a sender's out-edges are contiguous and a block is *active* iff any of
+    its edges' sources is a sender.  Active block indices compact to the
+    front in ascending order (stable argsort — deterministic); fill slots
+    carry ``nb`` (one past the last block).  ``cap`` must bound the true
+    active count — the direction selector (relax.py) guarantees it by
+    picking the bucket from the measured count.
+
+    Returns (idx [cap] int32, valid [cap] bool).
+    """
+    nb = push_src.shape[0] // block_e
+    ok = push_src >= 0
+    act = senders_any[jnp.clip(push_src, 0)] & ok            # [Eb]
+    blk = act.reshape(nb, block_e).any(axis=-1)              # [nb]
+    order = jnp.argsort(~blk, stable=True).astype(jnp.int32)
+    idx = order[:cap]
+    valid = jnp.take(blk, idx)
+    return jnp.where(valid, idx, nb), valid
+
+
+def push_gather(sg_push, idx, block_e: int):
+    """Gather the compacted blocks' edge streams ([cap] block indices ->
+    [cap * block_e] element streams).  Fill blocks (``idx == nb``) clamp
+    to the last block and are neutralized by the returned ``valid`` mask.
+    """
+    nb = sg_push["push_src"].shape[0] // block_e
+    cap = idx.shape[0]
+    base = jnp.clip(idx, 0, nb - 1)[:, None] * block_e
+    pos = (base + jnp.arange(block_e, dtype=jnp.int32)).reshape(-1)
+    g = lambda a: jnp.take(a, pos, axis=-1)
+    src = g(sg_push["push_src"])
+    blk_ok = jnp.repeat(idx < nb, block_e, total_repeat_length=cap * block_e)
+    valid = blk_ok & (src >= 0)
+    return {
+        "src": src,
+        # key carries the validity (-1 on dead positions AND fill-block
+        # positions), so the shared message bodies' ``key >= 0`` mask
+        # covers compaction fills with no extra plumbing
+        "key": jnp.where(valid, g(sg_push["push_key"]), -1),
+        "weight": g(sg_push["push_weight"]),
+        "dst_gid": g(sg_push["push_dst_gid"]),
+        "pos": g(sg_push["push_pos"]),
+    }, valid
+
+
+def edge_relax_push_flat(prog, vstate, senders, gid, sg_push, n_keys: int,
+                         block_e: int, cap: int):
+    """Frontier-compacted push sweep, single-query min/max (order-free):
+    compact -> gather -> emit -> unsorted segment-combine by destination.
+
+    The sending-edge multiset is exactly the dense sweep's (inactive
+    blocks hold no senders by construction) and min/max segment scatters
+    are association-free, so the table/cnt/payload triple is bitwise-equal
+    to :func:`edge_relax_flat` — structurally, via the shared
+    :func:`edge_messages` / :func:`flat_combine` bodies — while touching
+    O(cap * block_e) edges.
+    """
+    idx, _ = compact_push_blocks(senders, sg_push["push_src"], block_e, cap)
+    g, _ = push_gather(sg_push, idx, block_e)
+    cand, send, pay = edge_messages(prog, vstate, senders, gid, g["key"],
+                                    g["src"], g["weight"], g["dst_gid"])
+    ids = jnp.where(send, g["key"], n_keys)
+    return flat_combine(cand, send, pay, ids, n_keys, prog.combine)
+
+
+def edge_relax_push_stream(prog, vstate, senders, gid, sg_push, csr_key,
+                           n_keys: int, block_e: int, cap: int):
+    """Frontier-compacted push sweep for sum programs and all laned runs:
+    compact -> gather -> emit -> scatter the messages back into the dense
+    destination-sorted stream layout (via ``push_pos``) -> the shared
+    :func:`stream_scan` + :func:`gather_runs`.
+
+    Reconstructing the dense stream (identity everywhere no gathered edge
+    sends — exactly what the dense sweep holds there) keeps the scan's
+    fixed tree order, so the order-sensitive sum monoid and every laned
+    run stay bitwise-equal to the dense path; only the gather/emit work
+    shrinks to the frontier's blocks.  Laned ``senders`` [L, Np] share one
+    OR-ed active set (one gather serves every lane).
+    """
+    senders_any = senders if senders.ndim == 1 else senders.any(axis=0)
+    idx, _ = compact_push_blocks(senders_any, sg_push["push_src"], block_e,
+                                 cap)
+    g, valid = push_gather(sg_push, idx, block_e)
+    cand, send, pay = stream_messages(prog, vstate, senders, gid, g["key"],
+                                      g["src"], g["weight"], g["dst_gid"])
+    e = csr_key.shape[0]
+    dpos = jnp.where(valid, g["pos"], e)               # fills dropped
+    ident = prog.monoid.identity(prog.msg_dtype)
+    lane = cand.shape[:-1]
+    scat = lambda full, v: full.at[..., dpos].set(v, mode="drop")
+    cand_full = scat(jnp.full(lane + (e,), ident, prog.msg_dtype), cand)
+    send_full = scat(jnp.zeros(lane + (e,), bool),
+                     jnp.broadcast_to(send, cand.shape))
+    pay_full = None
+    if pay is not None:
+        pay_full = scat(jnp.full(lane + (e,), -1, jnp.int32),
+                        jnp.broadcast_to(pay, cand.shape))
+    scanned = stream_scan(prog.monoid, cand_full, send_full, csr_key,
+                          pay_full)
+    return gather_runs(scanned, csr_key, n_keys, prog.monoid,
+                       prog.msg_dtype)
 
 
 def edge_relax_flat(prog, vstate, senders, gid, key, src, weight, dst_gid,
@@ -240,13 +386,4 @@ def edge_relax_flat(prog, vstate, senders, gid, key, src, weight, dst_gid,
     cand, send, pay = edge_messages(prog, vstate, senders, gid, key, src,
                                     weight, dst_gid)
     ids = jnp.where(send, key, n_keys)       # non-senders dropped off-range
-    table = segment_combine(cand, ids, n_keys + 1, prog.combine,
-                            indices_are_sorted=False)
-    cnt = segment_combine(send.astype(jnp.int32), ids, n_keys + 1, "sum")
-    pay_t = None
-    if pay is not None:
-        win = send & (cand == table[ids])
-        pay_t = segment_combine(jnp.where(win, pay, -1), ids, n_keys + 1,
-                                "max")
-        pay_t = jnp.where(cnt[:n_keys] > 0, pay_t[:n_keys], -1)
-    return table[:n_keys], cnt[:n_keys], pay_t
+    return flat_combine(cand, send, pay, ids, n_keys, prog.combine)

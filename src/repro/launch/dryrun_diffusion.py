@@ -28,7 +28,8 @@ from repro.core.programs import sssp_program      # noqa: E402
 from repro.launch.mesh import mesh_context        # noqa: E402
 
 
-def build_specs(scale: int, n_cells: int, edge_factor: int = 16):
+def build_specs(scale: int, n_cells: int, edge_factor: int = 16,
+                with_push: bool = False):
     from repro.core.graph import DEFAULT_EDGE_BLOCK
 
     n = 1 << scale
@@ -39,8 +40,10 @@ def build_specs(scale: int, n_cells: int, edge_factor: int = 16):
     S = n_cells
     i32 = jnp.int32
     # the engine-facing view (diffuse._sg_as_dict): vertex block + the
-    # destination-sorted blocked-CSR streams (ShardedGraph.csr_view)
-    return {
+    # destination-sorted pull streams (ShardedGraph.csr_view) and — for
+    # push/auto sweeps only, mirroring _sg_as_dict — the source-sorted
+    # push streams (ShardedGraph.push_view)
+    specs = {
         "node_ok": jax.ShapeDtypeStruct((S, np_), jnp.bool_),
         "gid": jax.ShapeDtypeStruct((S, np_), i32),
         "out_degree": jax.ShapeDtypeStruct((S, np_), i32),
@@ -48,7 +51,16 @@ def build_specs(scale: int, n_cells: int, edge_factor: int = 16):
         "csr_src": jax.ShapeDtypeStruct((S, eb), i32),
         "csr_weight": jax.ShapeDtypeStruct((S, eb), jnp.float32),
         "csr_dst_gid": jax.ShapeDtypeStruct((S, eb), i32),
-    }, np_, ep
+    }
+    if with_push:
+        specs.update({
+            "push_src": jax.ShapeDtypeStruct((S, eb), i32),
+            "push_key": jax.ShapeDtypeStruct((S, eb), i32),
+            "push_weight": jax.ShapeDtypeStruct((S, eb), jnp.float32),
+            "push_dst_gid": jax.ShapeDtypeStruct((S, eb), i32),
+            "push_pos": jax.ShapeDtypeStruct((S, eb), i32),
+        })
+    return specs, np_, ep
 
 
 def main():
@@ -56,18 +68,24 @@ def main():
     ap.add_argument("--scale", type=int, default=26)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--max-local-iters", type=int, default=64)
+    ap.add_argument("--sweep", default="pull",
+                    choices=("pull", "push", "auto"),
+                    help="sweep direction of the relaxation step "
+                         "(DESIGN.md §2.8)")
     args = ap.parse_args()
 
     n_cells = 512 if args.multi_pod else 256
     mesh = jax.make_mesh((n_cells,), ("cells",))
-    sgd, np_, ep = build_specs(args.scale, n_cells)
+    sgd, np_, ep = build_specs(args.scale, n_cells,
+                               with_push=args.sweep != "pull")
     print(f"[diffusion dry-run] RMAT scale={args.scale}: "
           f"{1 << args.scale:,} vertices, {n_cells} cells, "
           f"{np_:,} vertices + {ep:,} edges per cell")
 
     prog = sssp_program(0, track_parents=False)
     fn = make_spmd_diffuse(mesh, prog, sgd, axis_name="cells",
-                           max_local_iters=args.max_local_iters)
+                           max_local_iters=args.max_local_iters,
+                           sweep=args.sweep)
     with mesh_context(mesh):
         lowered = jax.jit(fn).lower(sgd)
         compiled = lowered.compile()

@@ -70,7 +70,8 @@ def test_csr_view_is_destination_sorted_permutation():
 
 
 def test_csr_view_tracks_updates():
-    """Every topology-changing primitive refreshes the CSR view (batched
+    """Every topology-changing primitive refreshes both CSR views —
+    destination-sorted pull and source-sorted push — together (batched
     and sequential paths)."""
     from repro.core import DiffusionSession
     from repro.core.dynamic import NameServer, edge_add, edge_delete
@@ -81,20 +82,87 @@ def test_csr_view_tracks_updates():
     sess.add_edge(0, 7, 2.0)
     sess.delete_edge(int(src[0]), int(dst[0]))
     sess.commit()
+    rebuilt = sess.sg.with_csr()
     assert np.array_equal(np.asarray(sess.sg.csr_perm),
-                          np.asarray(sess.sg.with_csr().csr_perm))
+                          np.asarray(rebuilt.csr_perm))
+    assert np.array_equal(np.asarray(sess.sg.push_perm),
+                          np.asarray(rebuilt.push_perm))
+    assert np.array_equal(np.asarray(sess.sg.push_pos),
+                          np.asarray(rebuilt.push_pos))
 
     part = build(src, dst, n, w, n_cells=2, edge_slack=0.5)
     ns = NameServer(part)
     sg = edge_add(part.sg, ns, 0, 7, 2.0)
     sg = edge_delete(sg, ns, int(src[0]), int(dst[0]))
     # sequential primitives invalidate (lazy rebuild at the next diffusion)
-    # instead of paying one sort per single-edge update
-    assert sg.csr_perm is None
-    # ...and the rebuilt stream matches the batched path's (same edge
+    # instead of paying one sort per single-edge update — both views drop
+    # together, a graph can never carry one stale view
+    assert sg.csr_perm is None and sg.push_perm is None
+    assert sg.push_src is None and sg.push_pos is None
+    # ...and the rebuilt streams match the batched path's (same edge
     # multiset per cell => same sorted key stream, slot layout aside)
     assert np.array_equal(np.asarray(sg.with_csr().csr_key),
                           np.asarray(sess.sg.csr_key))
+    assert np.array_equal(np.asarray(sg.with_csr().push_src),
+                          np.asarray(sess.sg.push_src))
+
+
+def test_sequential_primitives_invalidate_both_views():
+    """Regression: edge_add / edge_delete / vertex_delete each lazily
+    invalidate the pull AND push views consistently, and the lazy rebuild
+    agrees with an eager with_csr() after every step."""
+    from repro.core.dynamic import (NameServer, edge_add, edge_delete,
+                                    vertex_delete)
+
+    src, dst, w, n = make_graph_family("small_world", 90, seed=13)
+    part = build(src, dst, n, w, n_cells=3, edge_slack=0.5,
+                 node_slack=0.2)
+    ns = NameServer(part)
+    sg = part.sg
+    steps = [
+        lambda g: edge_add(g, ns, 1, 40, 0.7),
+        lambda g: edge_delete(g, ns, int(src[2]), int(dst[2])),
+        lambda g: vertex_delete(g, ns, 17),
+    ]
+    for step in steps:
+        sg = step(sg)
+        for f in ("csr_perm", "csr_key", "push_perm", "push_src",
+                  "push_pos"):
+            assert getattr(sg, f) is None, f
+        with pytest.raises(ValueError):
+            sg.csr_view()
+        with pytest.raises(ValueError):
+            sg.push_view()
+        sg = sg.with_csr()     # persist before the next step
+
+
+def test_push_view_is_source_sorted_permutation():
+    """The push view is a per-cell permutation of the live edge slots
+    sorted by source local index, with push_pos the exact inverse map
+    into the destination-sorted stream."""
+    src, dst, w, n = make_graph_family("erdos_renyi", 120, seed=5)
+    part = build(src, dst, n, w, n_cells=4, edge_slack=0.3)
+    sg = part.sg
+    perm = np.asarray(sg.push_perm)
+    psrc = np.asarray(sg.push_src)
+    ppos = np.asarray(sg.push_pos)
+    cperm = np.asarray(sg.csr_perm)
+    ok = np.asarray(sg.edge_ok)
+    assert psrc.shape[1] % DEFAULT_EDGE_BLOCK == 0
+    assert psrc.shape == np.asarray(sg.csr_key).shape
+    for s in range(sg.n_shards):
+        live = psrc[s] >= 0
+        # exactly the live edges, ascending by source, dead tail trailing
+        assert live.sum() == ok[s].sum()
+        assert not live[live.argmin():].any() or live.all()
+        lk = psrc[s][live]
+        assert np.array_equal(lk, np.sort(lk))
+        p = perm[s][live]
+        assert np.array_equal(np.sort(p), np.flatnonzero(ok[s]))
+        assert np.array_equal(lk, np.asarray(sg.src_local)[s][p])
+        # push_pos round-trips through the destination-sorted stream:
+        # csr_perm[push_pos[i]] is the same edge slot as push_perm[i]
+        assert np.array_equal(cperm[s][ppos[s][live]], p)
 
 
 def test_lazy_csr_invalidation_rebuilds_before_query():

@@ -411,3 +411,70 @@ def test_query_cache_serves_repaired_state_without_recompute():
     sess.commit()
     r3 = sess.query("sssp", source=0)      # served from repaired cache
     assert r3.values[50] <= 0.01 + 1e-6
+
+
+def test_triangles_cached_and_recounted_on_commit():
+    """Satellite (PR 4): query('triangles') goes through the standard
+    _Entry cache — repeat queries are cache hits, and commit() repairs
+    the entry with a restart-style recount against the new topology."""
+    from repro.core.session import PROGRAMS
+
+    sess, (src, dst, w, n) = _session(seed=17, n=60)
+    calls = []
+    spec = PROGRAMS["triangles"]
+    orig = spec.run_fn
+
+    def counting(s, **kw):
+        calls.append(1)
+        return orig(s, **kw)
+
+    PROGRAMS["triangles"] = spec._replace(run_fn=counting)
+    try:
+        t1 = sess.query("triangles")
+        t2 = sess.query("triangles")           # cache hit
+        assert len(calls) == 1
+        assert t1.extra["triangles"] == t2.extra["triangles"]
+
+        # a fresh triangle between previously unconnected vertices (both
+        # directions: the bitset counter expects symmetrized edges)
+        existing = {(int(a), int(b)) for a, b in zip(src, dst)}
+        tri = None
+        for a in range(n):
+            for b in range(a + 1, n):
+                for c in range(b + 1, n):
+                    pairs = [(a, b), (b, c), (a, c)]
+                    if all(p not in existing and p[::-1] not in existing
+                           for p in pairs):
+                        tri = pairs
+                        break
+                if tri:
+                    break
+            if tri:
+                break
+        assert tri is not None
+        for u, v in tri:
+            sess.add_edge(u, v, 1.0)
+            sess.add_edge(v, u, 1.0)
+        info = sess.commit()
+        tags = [v[0] for k, v in info.repairs.items()
+                if k[0] == "triangles"]
+        assert tags == ["recount"]
+        assert len(calls) == 2                  # recount ran at commit
+        t3 = sess.query("triangles")
+        assert len(calls) == 2                  # ...and query() is a hit
+        # a Result-cached entry has no vertex state: peek/vertex_state
+        # must refuse instead of crashing on vstate=None
+        with pytest.raises(ValueError):
+            sess.peek(0, "triangles")
+        with pytest.raises(ValueError):
+            sess.vertex_state("triangles")
+        # the recount matches the exact host oracle on the *new* topology
+        # (>= one new triangle; the fresh edges may close more wedges)
+        from repro.core.triangles import triangle_count_exact
+
+        es, ed, _ = sess.edge_list()
+        assert t3.extra["triangles"] == triangle_count_exact(
+            es, ed, sess.n_ids)
+        assert t3.extra["triangles"] > t1.extra["triangles"]
+    finally:
+        PROGRAMS["triangles"] = spec

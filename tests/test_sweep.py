@@ -1,0 +1,209 @@
+"""Direction-optimizing sweeps (DESIGN.md §2.8): the frontier-compacted
+push sweep and the auto selector reproduce the dense pull sweep bitwise
+for every registered program, on both kernel backends, both engines, and
+laned runs — and the per-round direction/frontier introspection that
+tunes the selector threshold is exposed through ``Result.stats``."""
+
+import numpy as np
+import pytest
+
+from repro.core import DiffusionSession, build
+from repro.core.diffuse import diffuse, diffuse_from
+from repro.core.generators import make_graph_family
+from repro.core.programs import PROGRAMS, sssp_program
+
+
+def _mask_inf(a):
+    return np.where(np.isinf(a), 1e30, a)
+
+
+def _eq(a, b):
+    return np.array_equal(_mask_inf(np.asarray(a)), _mask_inf(np.asarray(b)))
+
+
+# every registered diffusive program (run_fn customs like triangles have
+# no sweep), with query kwargs
+PROGRAM_MATRIX = [
+    ("sssp", dict(source=0)),
+    ("bfs", dict(source=0)),
+    ("cc", {}),
+    ("ppr", dict(source=0, eps=1e-5)),
+    ("pagerank", {}),
+    ("widest", dict(source=0, track_parents=True)),
+    ("reach", dict(sources=(0, 7))),
+]
+
+
+def test_matrix_covers_every_registered_diffusion_program():
+    diffusive = {n for n, s in PROGRAMS.items()
+                 if s.factory is not None and s.run_fn is None}
+    assert diffusive <= {name for name, _ in PROGRAM_MATRIX}
+
+
+@pytest.mark.parametrize("family,seed", [("small_world", 5),
+                                         ("scale_free", 11)])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("name,kw", PROGRAM_MATRIX)
+def test_push_equals_pull_bitwise_sharded(name, kw, backend, family, seed):
+    """Acceptance: push == auto == dense pull, bitwise, for every
+    registered program on both backends (values and every extra state
+    field, incl. argbest payloads)."""
+    src, dst, w, n = make_graph_family(family, 120, seed=seed)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=4)
+    ref = sess.query(name, backend=backend, sweep="pull", **kw)
+    for sweep in ("push", "auto"):
+        got = sess.query(name, backend=backend, sweep=sweep, **kw)
+        assert _eq(ref.values, got.values), (name, sweep)
+        for k, v in ref.extra.items():
+            if k != "live":
+                assert _eq(v, got.extra[k]), (name, sweep, k)
+
+
+@pytest.mark.parametrize("name,kw", [("sssp", dict(source=0)),
+                                     ("ppr", dict(source=0, eps=1e-5))])
+def test_push_equals_pull_bitwise_spmd(name, kw):
+    """The SPMD engine's per-device direction selector reaches the same
+    fixed point bitwise (min payload program + sum program)."""
+    src, dst, w, n = make_graph_family("erdos_renyi", 100, seed=4)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=1)
+    ref = sess.query(name, engine="spmd", sweep="pull", **kw)
+    for sweep in ("push", "auto"):
+        got = sess.query(name, engine="spmd", sweep=sweep, **kw)
+        assert _eq(ref.values, got.values), (name, sweep)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("name,kw", [("sssp", {}), ("ppr", dict(eps=1e-5))])
+def test_push_equals_pull_bitwise_laned(name, kw, backend):
+    """Laned queries OR every lane's senders into one shared push
+    compaction; each lane still reproduces its pull fixed point bitwise."""
+    src, dst, w, n = make_graph_family("small_world", 130, seed=7)
+    sources = [0, 9, 31]
+    pull = DiffusionSession.from_edges(src, dst, n, w, n_cells=4)
+    push = DiffusionSession.from_edges(src, dst, n, w, n_cells=4)
+    rp = pull.query(name, backend=backend, sweep="pull", sources=sources,
+                    **kw)
+    rq = push.query(name, backend=backend, sweep="push", sources=sources,
+                    **kw)
+    for a, b, s in zip(rp, rq, sources):
+        assert _eq(a.values, b.values), (name, s)
+        for k, v in a.extra.items():
+            if k != "live":
+                assert _eq(v, b.extra[k]), (name, s, k)
+
+
+def test_push_repair_default_matches_from_scratch():
+    """commit() warm repairs default to the push sweep and still
+    reproduce the from-scratch fixed point bitwise (insert-only monotone
+    frontier repair — the sparse-frontier case push exists for)."""
+    src, dst, w, n = make_graph_family("small_world", 150, seed=9)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=4,
+                                       edge_slack=0.4)
+    sess.query("sssp", source=0)
+    rng = np.random.default_rng(2)
+    for _ in range(6):
+        sess.add_edge(int(rng.integers(0, n)), int(rng.integers(0, n)),
+                      float(0.2 + rng.random()))
+    info = sess.commit()
+    (strategy, stats) = next(v for k, v in info.repairs.items()
+                             if k[0] == "sssp")
+    assert strategy == "frontier"
+    # the warm repair actually ran compacted sweeps
+    assert int(stats.push_iters) == int(stats.local_iters) > 0
+    got = sess.query("sssp", source=0).values
+    ref_vs, _ = diffuse(sess.sg, sssp_program(0))
+    assert _eq(got, sess.to_global(ref_vs["dist"]))
+
+
+def test_sweep_stats_expose_frontier_and_direction():
+    """Satellite: Result.stats carries per-round frontier sizes and the
+    chosen direction so the selector threshold is tunable from
+    measurements."""
+    src, dst, w, n = make_graph_family("small_world", 150, seed=5)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=4)
+    res = sess.query("sssp", source=0, sweep="auto")
+    st = res.stats
+    rounds = int(st.rounds)
+    flog = np.asarray(st.frontier_log)
+    dlog = np.asarray(st.dir_log)
+    assert rounds > 0
+    # every executed round logged a frontier size and a direction ...
+    assert (flog[:rounds] >= 0).all()
+    assert set(np.unique(dlog[:rounds])) <= {0, 1}
+    # ... and the unexecuted tail stays -1
+    assert (flog[rounds:] == -1).all() and (dlog[rounds:] == -1).all()
+    # the logged peak agrees with the existing max_frontier introspection
+    assert flog.max() <= int(st.max_frontier)
+    # pure push / pure pull bracket the auto run's push share
+    pull = sess.query("sssp", source=0, sweep="pull", refresh=True).stats
+    push = sess.query("sssp", source=0, sweep="push", refresh=True).stats
+    assert int(pull.push_iters) == 0
+    assert int(push.push_iters) == int(push.local_iters)
+    assert 0 <= int(st.push_iters) <= int(st.local_iters)
+
+
+def test_push_repair_resumes_under_delta_gate():
+    """A delta-gated query's push repair keeps the gate (same contract as
+    the dense resume path) and matches the from-scratch fixed point."""
+    src, dst, w, n = make_graph_family("scale_free", 200, seed=15)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=4,
+                                       edge_slack=0.4)
+    sess.query("sssp", source=0, delta=2.0)
+    rng = np.random.default_rng(7)
+    for _ in range(4):
+        sess.add_edge(int(rng.integers(0, n)), int(rng.integers(0, n)),
+                      float(0.5 + rng.random()))
+    sess.commit()
+    got = sess.query("sssp", source=0, delta=2.0).values
+    ref_vs, _ = diffuse(sess.sg, sssp_program(0))
+    assert _eq(got, sess.to_global(ref_vs["dist"]))
+
+
+def test_explicit_pull_query_keeps_pull_repair():
+    """sweep='pull' queried explicitly opts its repairs out of the push
+    default; the repair still matches from-scratch."""
+    src, dst, w, n = make_graph_family("small_world", 120, seed=3)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=2,
+                                       edge_slack=0.4)
+    sess.query("sssp", source=0, sweep="pull")
+    sess.add_edge(0, 50, 0.3)
+    info = sess.commit()
+    (_, stats) = next(v for k, v in info.repairs.items() if k[0] == "sssp")
+    assert int(stats.push_iters) == 0
+    got = sess.query("sssp", source=0).values
+    ref_vs, _ = diffuse(sess.sg, sssp_program(0))
+    assert _eq(got, sess.to_global(ref_vs["dist"]))
+
+
+def test_sweep_validation_errors():
+    src, dst, w, n = make_graph_family("small_world", 80, seed=1)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=2)
+    with pytest.raises(ValueError):
+        sess.query("sssp", source=0, sweep="sideways")
+    with pytest.raises(ValueError):
+        sess.query("sssp", source=0, engine="event", sweep="push")
+    with pytest.raises(ValueError):
+        sess.query("triangles", sweep="push")   # run_fn: no sweep to pick
+    with pytest.raises(ValueError):
+        DiffusionSession(build(src, dst, n, w, n_cells=2), sweep="dense")
+
+
+def test_push_sweep_from_tiny_frontier_does_less_edge_work():
+    """The point of the whole PR, asserted at the stats level: resuming
+    from a one-vertex frontier, the push sweep's sending-edge actions
+    match the dense sweep's exactly (same messages — that is the bitwise
+    contract) while sweeping only the frontier's blocks per round."""
+    src, dst, w, n = make_graph_family("scale_free", 300, seed=8)
+    part = build(src, dst, n, w, n_cells=2)
+    prog = sssp_program(0)
+    vs, _ = diffuse(part, prog)            # converged state
+    active = np.zeros((part.sg.n_shards, part.sg.n_per_shard), bool)
+    s0, l0 = int(np.asarray(part.owner)[5]), int(np.asarray(part.local)[5])
+    active[s0, l0] = True
+    import jax.numpy as jnp
+    re_pull = diffuse_from(part, prog, vs, jnp.asarray(active))
+    re_push = diffuse_from(part, prog, vs, jnp.asarray(active),
+                           sweep="push")
+    assert _eq(re_pull[0]["dist"], re_push[0]["dist"])
+    assert int(re_pull[1].actions) == int(re_push[1].actions)
+    assert int(re_push[1].push_iters) == int(re_push[1].local_iters) > 0
