@@ -1,0 +1,179 @@
+"""Commit-path benchmarks (DESIGN.md §2.9, BENCH_pr5.json).
+
+Three measurements around the O(batch) incremental commit:
+
+* ``bench_apply``  — the headline: ``UpdateBatch.apply`` latency vs
+  batch size and graph size, incremental (tombstones + staged delta
+  blocks, one compiled scatter program) vs the eager ``with_csr``
+  rebuild (two stable argsorts of the whole edge stream + a host-synced
+  free-slot loop).  The acceptance bar: a <= 64-edge batch on
+  scale-free n=3000 commits >= 5x faster incrementally.
+* ``bench_e2e``    — end-to-end update -> repair -> query: a session
+  holding a warm SSSP fixed point absorbs a small insert batch and
+  serves a fresh answer; incremental apply vs forced-eager apply, same
+  push-sweep repair either way.
+* ``bench_dirty_sweep`` — what the delta segment costs readers: one
+  dense relaxation sweep on a clean graph vs the same graph carrying a
+  staged delta segment + tombstones (the ~25%-bounded overhead the
+  compaction policy enforces).
+
+Timings are best-of-N on whatever backend JAX picks (CPU in CI); the
+derived speedups — not absolute times — are the tracked quantities.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import build
+from repro.core.diffuse import diffuse, diffuse_from
+from repro.core.dynamic import NameServer
+from repro.core.generators import make_graph_family
+from repro.core.programs import sssp_program
+from repro.core.updates import UpdateBatch
+
+
+def _best_of(fn, repeats: int) -> float:
+    import jax
+
+    jax.block_until_ready(fn())          # warm the jit cache
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _graph(n_nodes: int, n_cells: int, seed: int = 0):
+    src, dst, w, n = make_graph_family("scale_free", n_nodes, seed=seed)
+    return build(src, dst, n, w, n_cells=n_cells, edge_slack=0.2,
+                 node_slack=0.1), n
+
+
+def bench_apply(n_nodes: int = 3000, n_cells: int = 2, seed: int = 0,
+                repeats: int = 5, batch_sizes=(8, 64, 256)):
+    """UpdateBatch.apply latency, incremental vs eager rebuild, per
+    batch size (mixed insert-heavy traffic with a few deletes — the
+    paper's streaming shape).  Applies are functional and discard the
+    result, so every repeat sees the identical graph."""
+    part, n = _graph(n_nodes, n_cells, seed)
+    ns = NameServer(part)
+    rng = np.random.default_rng(seed + 1)
+    src_e, dst_e, _, _ = make_graph_family("scale_free", n_nodes,
+                                           seed=seed)
+    rows = []
+    for bsz in batch_sizes:
+        n_del = max(1, bsz // 8)
+        ins = [(int(rng.integers(0, n)), int(rng.integers(0, n)),
+                float(0.2 + rng.random())) for _ in range(bsz - n_del)]
+        dels = [(int(src_e[i]), int(dst_e[i]))
+                for i in rng.choice(len(src_e), n_del, replace=False)]
+
+        def mk():
+            ub = UpdateBatch(ns)
+            for u, v, x in ins:
+                ub.add_edge(u, v, x)
+            for u, v in dels:
+                ub.delete_edge(u, v)
+            return ub
+
+        t_inc = _best_of(lambda: mk().apply(part.sg)[0].csr_perm, repeats)
+        t_eager = _best_of(
+            lambda: mk().apply(part.sg, incremental=False)[0].csr_perm,
+            repeats)
+        rows.append(dict(
+            bench="apply", n_nodes=n_nodes, batch=bsz,
+            inc_us=t_inc * 1e6, eager_us=t_eager * 1e6,
+            speedup_vs_eager=t_eager / t_inc,
+        ))
+    return rows
+
+
+def bench_e2e(n_nodes: int = 3000, n_cells: int = 2, n_updates: int = 8,
+              seed: int = 0, repeats: int = 5):
+    """update -> repair -> query: apply a small insert batch and repair
+    the cached SSSP fixed point from the insert frontier (push sweep —
+    the PR 4 path), comparing the incremental apply against the forced
+    eager rebuild on the same repair."""
+    import jax
+    import jax.numpy as jnp
+
+    part, n = _graph(n_nodes, n_cells, seed)
+    ns = NameServer(part)
+    prog = sssp_program(0)
+    vstate, _ = diffuse(part, prog)
+    rng = np.random.default_rng(seed + 2)
+    ins = [(int(rng.integers(0, n)), int(rng.integers(0, n)),
+            float(0.2 + rng.random())) for _ in range(n_updates)]
+    owner = np.asarray(part.owner)
+    local = np.asarray(part.local)
+    active = np.zeros((part.sg.n_shards, part.sg.n_per_shard), bool)
+    for u, _, _ in ins:
+        active[owner[u], local[u]] = True
+    active = jnp.asarray(active)
+
+    def run(incremental: bool):
+        ub = UpdateBatch(ns)
+        for u, v, x in ins:
+            ub.add_edge(u, v, x)
+        sg2, _ = ub.apply(part.sg, incremental=incremental)
+        vs, _ = diffuse_from(sg2, prog, vstate, active, sweep="push")
+        return vs["dist"]
+
+    t_inc = _best_of(lambda: run(True), repeats)
+    t_eager = _best_of(lambda: run(False), repeats)
+    return [dict(
+        bench="e2e", n_nodes=n_nodes, n_updates=n_updates,
+        inc_s=t_inc, eager_s=t_eager, speedup_vs_eager=t_eager / t_inc,
+    )]
+
+
+def bench_dirty_sweep(n_nodes: int = 3000, n_cells: int = 2, seed: int = 0,
+                      repeats: int = 5, n_staged: int = 32):
+    """Reader-side cost of the delta segment: a full SSSP diffusion on
+    the clean graph vs the same graph carrying staged adds + tombstones
+    (bounded by the compaction policy at ~25% extra stream)."""
+    part, n = _graph(n_nodes, n_cells, seed)
+    ns = NameServer(part)
+    prog = sssp_program(0)
+    rng = np.random.default_rng(seed + 3)
+    ub = UpdateBatch(ns)
+    for _ in range(n_staged):
+        ub.add_edge(int(rng.integers(0, n)), int(rng.integers(0, n)),
+                    float(0.2 + rng.random()))
+    sg_dirty, _ = ub.apply(part.sg)
+    t_clean = _best_of(lambda: diffuse(part.sg, prog)[0]["dist"], repeats)
+    t_dirty = _best_of(lambda: diffuse(sg_dirty, prog)[0]["dist"], repeats)
+    return [dict(
+        bench="dirty_sweep", n_nodes=n_nodes, n_staged=n_staged,
+        clean_s=t_clean, dirty_s=t_dirty,
+        overhead=t_dirty / t_clean - 1.0,
+    )]
+
+
+def run(quick: bool = False):
+    size = 800 if quick else 3000
+    reps = 3 if quick else 5
+    batches = (8, 64) if quick else (8, 64, 256)
+    rows = []
+    rows += bench_apply(n_nodes=size, repeats=reps, batch_sizes=batches)
+    rows += bench_e2e(n_nodes=size, repeats=reps)
+    rows += bench_dirty_sweep(n_nodes=size, repeats=reps)
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    main()

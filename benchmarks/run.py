@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call for the timed
 benches; derived = the paper-comparable metric) and writes the same
-records, plus the kernel-backend tag, to ``BENCH_pr4.json`` at the repo
+records, plus the kernel-backend tag, to ``BENCH_pr5.json`` at the repo
 root so the perf trajectory accumulates machine-readably across PRs.
 """
 
@@ -126,6 +126,34 @@ def main() -> None:
                 backend="xla",
             )
 
+    # DESIGN.md §2.9: O(batch) commits — incremental tombstone/delta apply
+    # vs the eager with_csr rebuild, end-to-end update->repair->query, and
+    # the reader-side cost of a staged delta segment
+    from benchmarks import bench_commit
+    for r in bench_commit.run(quick=quick):
+        if r["bench"] == "apply":
+            _csv(
+                f"commit/apply/b{r['batch']}",
+                r["inc_us"],
+                f"speedup_vs_eager={r['speedup_vs_eager']:.2f};"
+                f"eager_us={r['eager_us']:.0f}",
+                backend="xla",
+            )
+        elif r["bench"] == "e2e":
+            _csv(
+                f"commit/e2e/u{r['n_updates']}",
+                r["inc_s"] * 1e6,
+                f"speedup_vs_eager={r['speedup_vs_eager']:.2f}",
+                backend="xla",
+            )
+        else:
+            _csv(
+                f"commit/dirty_sweep/s{r['n_staged']}",
+                r["dirty_s"] * 1e6,
+                f"overhead={r['overhead']*100:.2f}%",
+                backend="xla",
+            )
+
     # Roofline table from any dry-run artifacts present
     from benchmarks import roofline
     rows = roofline.table()
@@ -140,7 +168,7 @@ def main() -> None:
 
     # quick (CI smoke) runs write a sibling file so they never clobber the
     # committed full-size trajectory records
-    fname = "BENCH_pr4.quick.json" if quick else "BENCH_pr4.json"
+    fname = "BENCH_pr5.quick.json" if quick else "BENCH_pr5.json"
     out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                        "..", fname)
     with open(os.path.abspath(out), "w") as f:

@@ -63,6 +63,7 @@ from .termination import quiescent
 __all__ = [
     "diffuse",
     "diffuse_from",
+    "exact_streams_for",
     "DiffuseStats",
     "FRONTIER_LOG_CAP",
     "diffuse_spmd_step",
@@ -158,13 +159,14 @@ def _local_iter_shard(prog: VertexProgram, np_, s_, my_shard, sg_s, st, relax,
 def _sg_as_dict(sg: ShardedGraph, with_push: bool = False):
     """ShardedGraph -> the engine-facing array dict: the per-cell vertex
     block (``node_ok``/``gid``/``out_degree``) plus the destination-sorted
-    pull streams the relax backends consume — and, when ``with_push``
-    (any sweep that can compact), the source-sorted push streams too
-    (built on demand for graphs with invalidated views).  The unsorted
-    edge arrays always stay out, and the push streams stay out of pull
-    sweeps for the same reason — the engine never reads them, and under
-    shard_map they would be real per-device inputs inflating edge-stream
-    transfer/residency."""
+    pull streams the relax backends consume (``csr_key`` live-masked,
+    ``csr_skey`` structural — see DESIGN.md §2.9) — and, when
+    ``with_push`` (any sweep that can compact), the source-sorted push
+    streams too (built on demand for graphs with invalidated views).
+    The unsorted edge arrays always stay out, and the push streams stay
+    out of pull sweeps for the same reason — the engine never reads
+    them, and under shard_map they would be real per-device inputs
+    inflating edge-stream transfer/residency."""
     if sg.csr_perm is None or (with_push and sg.push_perm is None):
         sg = sg.with_csr()
     d = {
@@ -200,9 +202,11 @@ def _run_rounds(sg: ShardedGraph, prog: VertexProgram, vstate0, active0,
     S, Np = sg.n_shards, sg.n_per_shard
     L = prog.lanes
     lane = (L,) if L else ()
+    if sg.csr_perm is None or (sweep != "pull" and sg.push_perm is None):
+        sg = sg.with_csr()          # invalidated views: rebuild in-trace
     sgd = _sg_as_dict(sg, with_push=sweep != "pull")
     relax = make_relax(prog, S, Np, sg.csr_block, backend, sweep,
-                       push_threshold)
+                       push_threshold, delta_e=sg.delta_width)
     nb = sgd["csr_key"].shape[-1] // sg.csr_block
     n_caps = len(push_caps(nb))
     monoid = prog.monoid
@@ -337,6 +341,29 @@ def _run_rounds(sg: ShardedGraph, prog: VertexProgram, vstate0, active0,
     return st[0], stats
 
 
+def exact_streams_for(sg: ShardedGraph, prog: VertexProgram) -> ShardedGraph:
+    """Compact a dirty graph before a **sum-combine** diffusion.
+
+    Min/max fixed points consume tombstones and staged delta blocks
+    bitwise-identically to a full rebuild (order-free monoids), but a
+    floating sum reassociates when the staged edges' contributions fold
+    in through the delta scatter instead of their sorted run positions —
+    so sum programs compact first, keeping the "incremental == rebuild,
+    bitwise" contract across the whole program matrix.  Cheap host check
+    of the per-cell counters; a traced graph skips it (the delta path is
+    still exact-to-tolerance) and an already-clean graph pays nothing.
+    Callers that own the graph (the session) persist the compacted copy
+    so the sort is paid once per dirty epoch, not per query.
+    """
+    if (prog.combine != "sum" or sg.csr_perm is None
+            or sg.delta_count is None):
+        return sg
+    if isinstance(sg.delta_count, jax.core.Tracer):
+        return sg
+    dirty = int(jnp.max(sg.delta_count) + jnp.max(sg.tomb_count)) > 0
+    return sg.with_csr() if dirty else sg
+
+
 def diffuse(
     part: Partitioned | ShardedGraph,
     prog: VertexProgram,
@@ -359,6 +386,7 @@ def diffuse(
     every choice reaches the same fixed point bitwise.
     """
     sg = part.sg if isinstance(part, Partitioned) else part
+    sg = exact_streams_for(sg, prog)
     return _diffuse_jit(sg, prog, max_local_iters, max_rounds, delta,
                         backend, sweep, push_threshold)
 
@@ -386,6 +414,7 @@ def diffuse_from(
     per-round sweep into O(frontier-adjacent edges) — the session's
     repair path defaults to it."""
     sg = part.sg if isinstance(part, Partitioned) else part
+    sg = exact_streams_for(sg, prog)
     return _run_rounds(sg, prog, vstate, active, max_local_iters, max_rounds,
                        delta, backend, sweep, push_threshold)
 
@@ -398,7 +427,8 @@ def diffuse_spmd_step(prog: VertexProgram, axis_name: str, n_shards: int,
                       n_per_shard: int, max_local_iters: int, max_rounds: int,
                       block_e: int = DEFAULT_EDGE_BLOCK,
                       backend: str = "xla", sweep: str = "pull",
-                      push_threshold: float = DEFAULT_PUSH_THRESHOLD):
+                      push_threshold: float = DEFAULT_PUSH_THRESHOLD,
+                      delta_e: int = 0):
     """Build the per-device diffusion function for use inside shard_map.
 
     The returned fn takes per-device blocks of the ShardedGraph arrays
@@ -416,7 +446,8 @@ def diffuse_spmd_step(prog: VertexProgram, axis_name: str, n_shards: int,
     S, Np = n_shards, n_per_shard
     L = prog.lanes
     lane = (L,) if L else ()
-    relax = make_relax(prog, S, Np, block_e, backend, sweep, push_threshold)
+    relax = make_relax(prog, S, Np, block_e, backend, sweep, push_threshold,
+                       delta_e=delta_e)
     monoid = prog.monoid
     ident_f = lambda: monoid.identity(prog.msg_dtype)
 
@@ -555,7 +586,8 @@ def make_spmd_diffuse(mesh, prog: VertexProgram, sg_template,
                       axis_name: str = "cells", max_local_iters: int = 64,
                       max_rounds: int = 10_000, backend: str = "xla",
                       block_e: int | None = None, sweep: str = "pull",
-                      push_threshold: float = DEFAULT_PUSH_THRESHOLD):
+                      push_threshold: float = DEFAULT_PUSH_THRESHOLD,
+                      delta_blocks: int | None = None):
     """Wrap the per-device engine in shard_map over ``axis_name``.
 
     ``sg_template`` may be a ShardedGraph or a dict of (ShapeDtypeStruct)
@@ -563,6 +595,9 @@ def make_spmd_diffuse(mesh, prog: VertexProgram, sg_template,
     uses; dict templates must carry the ``csr_*`` and ``push_*`` stream
     fields, padded to a multiple of ``block_e`` (pass it when the streams
     were built with a non-default :meth:`ShardedGraph.with_csr` block).
+    ``delta_blocks`` is the staged-delta capacity baked into the streams
+    (taken from a ShardedGraph template automatically; dict templates
+    default to 0 = delta-free).
     Returns a function (sgd dict) -> (vertex_state [S, Np] layout, stats).
     """
     import types as _types
@@ -571,11 +606,17 @@ def make_spmd_diffuse(mesh, prog: VertexProgram, sg_template,
     from jax.experimental.shard_map import shard_map
 
     if isinstance(sg_template, ShardedGraph):
+        if sg_template.csr_perm is None or (
+                sweep != "pull" and sg_template.push_perm is None):
+            sg_template = sg_template.with_csr()
         sgd_t = _sg_as_dict(sg_template, with_push=sweep != "pull")
         block_e = block_e or sg_template.csr_block
+        if delta_blocks is None:
+            delta_blocks = max(sg_template.delta_blocks, 0)
     else:
         sgd_t = dict(sg_template)
         block_e = block_e or DEFAULT_EDGE_BLOCK
+    delta_blocks = delta_blocks or 0
     if sgd_t["csr_key"].shape[-1] % block_e:
         raise ValueError(
             f"csr streams of width {sgd_t['csr_key'].shape[-1]} are not a "
@@ -587,7 +628,7 @@ def make_spmd_diffuse(mesh, prog: VertexProgram, sg_template,
     per_device = diffuse_spmd_step(
         prog, axis_name, S, Np, max_local_iters, max_rounds,
         block_e=block_e, backend=backend, sweep=sweep,
-        push_threshold=push_threshold,
+        push_threshold=push_threshold, delta_e=delta_blocks * block_e,
     )
 
     # Derive the vertex-state pytree structure from prog.init (shape-only).

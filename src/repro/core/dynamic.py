@@ -96,14 +96,28 @@ def vertex_add(sg: ShardedGraph, ns: NameServer, shard: int):
     return sg, gid
 
 
+def _can_patch(sg: ShardedGraph) -> bool:
+    """Whether the graph carries delta-capable CSR views to patch in
+    place (DESIGN.md §2.9); otherwise the primitives fall back to
+    :meth:`~repro.core.graph.ShardedGraph.invalidate_csr` (the escape
+    hatch — the next diffusion rebuilds in-trace)."""
+    return (sg.csr_perm is not None and sg.delta_count is not None
+            and sg.delta_width > 0)
+
+
 def vertex_delete(sg: ShardedGraph, ns: NameServer, gid: int):
-    """Remove a vertex and all its out-edges (in-edges masked by node_ok)."""
+    """Remove a vertex and all its out-edges (in-edges masked by node_ok).
+
+    CSR maintenance: tombstones the doomed slots in both views in place
+    (one elementwise pass — no re-sort); graphs without patchable views
+    invalidate instead."""
     s, l = ns.resolve(gid)
-    dead_out = (sg.src_local[s] == l) & sg.edge_ok[s]
+    dead_out = jnp.zeros_like(sg.edge_ok).at[s].set(
+        (sg.src_local[s] == l) & sg.edge_ok[s])
     sg = dataclasses.replace(
         sg,
         node_ok=sg.node_ok.at[s, l].set(False),
-        edge_ok=sg.edge_ok.at[s].set(sg.edge_ok[s] & ~dead_out),
+        edge_ok=sg.edge_ok & ~dead_out,
         out_degree=sg.out_degree.at[s, l].set(0),
     )
     # in-edges pointing at a dead vertex are dropped at receive time via
@@ -116,6 +130,14 @@ def vertex_delete(sg: ShardedGraph, ns: NameServer, gid: int):
         sg, edge_ok=sg.edge_ok & ~dead_in, out_degree=deg_fix
     )
     ns.release(gid)
+    if _can_patch(sg):
+        from .graph import TOMBSTONE_COMPACT_FRACTION
+
+        sg = sg.with_slot_tombstones(dead_out | dead_in)
+        if int(jnp.max(sg.tomb_count)) > (TOMBSTONE_COMPACT_FRACTION
+                                          * sg.edges_per_shard):
+            return sg.with_csr()    # crowded with tombstones: compact
+        return sg
     return sg.invalidate_csr()
 
 
@@ -129,7 +151,13 @@ def vertex_touch(sg: ShardedGraph, ns: NameServer, gids):
 
 
 def edge_add(sg: ShardedGraph, ns: NameServer, u: int, v: int, w: float):
-    """Insert directed edge u -> v with weight w into u's cell."""
+    """Insert directed edge u -> v with weight w into u's cell.
+
+    CSR maintenance: stages the new edge into both views' delta segments
+    (an O(1) scatter — no re-sort), so a k-update loop no longer pays a
+    sort inside every subsequent diffusion; a full delta segment
+    triggers a compacting ``with_csr`` rebuild, and graphs without
+    patchable views invalidate instead (the escape hatch)."""
     su, lu = ns.resolve(u)
     sv, lv = ns.resolve(v)
     free = ~sg.edge_ok[su]
@@ -147,11 +175,25 @@ def edge_add(sg: ShardedGraph, ns: NameServer, u: int, v: int, w: float):
     )
     if not bool(ok):
         raise RuntimeError(f"compute cell {su} has no free edge slots")
+    if _can_patch(sg):
+        if int(sg.delta_count[su]) < sg.delta_width:
+            one = jnp.ones((1,), bool)
+            return sg.with_staged_edges(
+                jnp.array([su], jnp.int32), slot[None].astype(jnp.int32),
+                jnp.array([lu], jnp.int32),
+                jnp.array([sv * sg.n_per_shard + lv], jnp.int32),
+                jnp.zeros((1,), jnp.int32), one)
+        return sg.with_csr()        # delta segment full: compact now
     return sg.invalidate_csr()
 
 
 def edge_delete(sg: ShardedGraph, ns: NameServer, u: int, v: int):
-    """Delete directed edge u -> v (first matching live slot)."""
+    """Delete directed edge u -> v (first matching live slot).
+
+    CSR maintenance: tombstones the edge's stream positions in both
+    views (an O(1) scatter through the slot inverses — no re-sort);
+    heavily-tombstoned cells compact, and graphs without patchable
+    views invalidate instead."""
     su, lu = ns.resolve(u)
     match = (sg.src_local[su] == lu) & (sg.dst_gid[su] == v) & sg.edge_ok[su]
     slot = jnp.argmax(match)
@@ -163,6 +205,16 @@ def edge_delete(sg: ShardedGraph, ns: NameServer, u: int, v: int):
         ),
         out_degree=sg.out_degree.at[su, lu].add(-ok.astype(jnp.int32)),
     )
+    if _can_patch(sg):
+        from .graph import TOMBSTONE_COMPACT_FRACTION
+
+        sg = sg.with_edge_tombstones(
+            jnp.array([su], jnp.int32), slot[None].astype(jnp.int32),
+            ok[None])
+        if int(sg.tomb_count[su]) > (TOMBSTONE_COMPACT_FRACTION
+                                     * sg.edges_per_shard):
+            return sg.with_csr()    # crowded with tombstones: compact
+        return sg
     return sg.invalidate_csr()
 
 

@@ -22,12 +22,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["Graph", "ShardedGraph", "from_edges", "DEFAULT_EDGE_BLOCK"]
+__all__ = ["Graph", "ShardedGraph", "from_edges", "DEFAULT_EDGE_BLOCK",
+           "DELTA_BLOCK_FRACTION", "TOMBSTONE_COMPACT_FRACTION"]
 
 # Edge-block width of the blocked-CSR view.  128 matches the TPU lane width
 # (and segment_reduce's dense-rank tile); the Pallas edge_relax kernel and
 # its XLA reference both combine within blocks of exactly this many edges.
 DEFAULT_EDGE_BLOCK = 128
+
+# Delta-segment policy (DESIGN.md §2.9).  A rebuild reserves staged delta
+# blocks for this fraction of the sorted stream (>= 1 block), and the
+# session/update layer triggers a compacting rebuild once tombstones
+# exceed the same fraction of a cell's edge slots — so the incremental
+# views' extra sweep cost is bounded at ~25% while commits stay O(batch).
+DELTA_BLOCK_FRACTION = 0.25
+TOMBSTONE_COMPACT_FRACTION = 0.25
+
+
+def default_delta_blocks(edges_per_shard: int, block: int) -> int:
+    """Staged-delta capacity (in blocks) reserved by a rebuild."""
+    nb = -(-edges_per_shard // block)
+    return max(1, int(nb * DELTA_BLOCK_FRACTION))
 
 
 def build_csr(dst_shard, dst_local, edge_ok, n_shards: int, n_per_shard: int,
@@ -187,11 +202,17 @@ def from_edges(
         "out_degree",
         "csr_perm",
         "csr_key",
+        "csr_live",
+        "csr_inv",
         "push_perm",
         "push_src",
         "push_pos",
+        "push_inv",
+        "delta_count",
+        "tomb_count",
     ],
-    meta_fields=["n_shards", "n_per_shard", "n_nodes", "csr_block"],
+    meta_fields=["n_shards", "n_per_shard", "n_nodes", "csr_block",
+                 "delta_blocks"],
 )
 @dataclasses.dataclass(frozen=True)
 class ShardedGraph:
@@ -211,11 +232,34 @@ class ShardedGraph:
     twin (:func:`build_push_csr`): the same edges sorted by source local
     index, so an active frontier's out-edges live in a few contiguous
     blocks that a sparse sweep can gather without streaming the rest
-    (DESIGN.md §2.8).  Both views are built at partition time and kept
-    current together by ``UpdateBatch.apply`` (eager :meth:`with_csr`);
-    the sequential per-edge primitives instead :meth:`invalidate_csr`
-    *both* views and the engines rebuild lazily at the next diffusion, so
-    ``csr_view()``/``push_view()`` raise on a graph mutated that way
+    (DESIGN.md §2.8).
+
+    **Delta-segment incremental maintenance (DESIGN.md §2.9):** both views
+    carry ``delta_blocks`` staged blocks *appended after* the sorted
+    stream, so topology changes never pay the O(E log E) re-sort:
+
+    * deletes become in-place **tombstones** — ``csr_live`` drops to
+      False at the edge's dense position (the structural ``csr_key`` is
+      kept so the scan paths' run layout stays sorted) and ``push_src``
+      drops to ``-1`` at its push position (:meth:`with_edge_tombstones`
+      / :meth:`with_slot_tombstones`);
+    * adds land at the next free **staged delta** position of their
+      cell's delta segment, identically in both views
+      (:meth:`with_staged_edges`; ``delta_count`` is the per-cell
+      cursor), which the relaxation kernels consume as extra
+      frontier-activated blocks;
+    * ``csr_inv``/``push_inv`` map an edge slot back to its stream
+      positions so a delete is an O(1) scatter;
+    * a full :meth:`with_csr` rebuild ("compaction") folds tombstones
+      out and delta edges into sorted position; the update layer
+      triggers it when a cell's delta segment overflows or its
+      ``tomb_count`` passes ``TOMBSTONE_COMPACT_FRACTION`` of its slots.
+
+    Both views are built at partition time and patched together by
+    ``UpdateBatch.apply`` and the sequential per-edge primitives;
+    :meth:`invalidate_csr` remains the escape hatch that drops *both*
+    views (the engines then rebuild lazily at the next diffusion), so
+    ``csr_view()``/``push_view()`` raise on a graph invalidated that way
     until ``with_csr()`` is called.
     """
 
@@ -231,56 +275,187 @@ class ShardedGraph:
     n_shards: int
     n_per_shard: int
     n_nodes: int             # number of real (unpadded) vertices
-    csr_perm: jnp.ndarray | None = None  # [S, Eb] int32 sorted pos -> slot
-    csr_key: jnp.ndarray | None = None   # [S, Eb] int32 sorted dst key | -1
-    push_perm: jnp.ndarray | None = None  # [S, Eb] int32 push pos -> slot
-    push_src: jnp.ndarray | None = None   # [S, Eb] int32 sorted src | -1
-    push_pos: jnp.ndarray | None = None   # [S, Eb] int32 dense pos | -1
+    csr_perm: jnp.ndarray | None = None  # [S, W] int32 stream pos -> slot
+    csr_key: jnp.ndarray | None = None   # [S, W] int32 structural dst key|-1
+    csr_live: jnp.ndarray | None = None  # [S, W] bool live (not tombstone)
+    csr_inv: jnp.ndarray | None = None   # [S, Ep] int32 slot -> dense pos
+    push_perm: jnp.ndarray | None = None  # [S, W] int32 push pos -> slot
+    push_src: jnp.ndarray | None = None   # [S, W] int32 sorted src | -1
+    push_pos: jnp.ndarray | None = None   # [S, W] int32 dense pos | -1
+    push_inv: jnp.ndarray | None = None   # [S, Ep] int32 slot -> push pos
+    delta_count: jnp.ndarray | None = None  # [S] int32 staged adds per cell
+    tomb_count: jnp.ndarray | None = None   # [S] int32 tombstones per cell
     csr_block: int = DEFAULT_EDGE_BLOCK
+    delta_blocks: int = -1               # staged blocks; -1 = policy default
 
     @property
     def edges_per_shard(self) -> int:
         return int(self.src_local.shape[1])
 
-    def with_csr(self, block: int | None = None) -> "ShardedGraph":
-        """Rebuild both blocked-CSR views (pull + push) from the current
-        topology."""
+    @property
+    def sorted_width(self) -> int:
+        """Width of the *sorted* region of both views (Eb): edge capacity
+        rounded up to a ``csr_block`` multiple.  The staged delta region
+        occupies ``[sorted_width, sorted_width + delta_width)``."""
+        return -(-self.edges_per_shard // self.csr_block) * self.csr_block
+
+    @property
+    def delta_width(self) -> int:
+        """Per-cell staged-delta capacity in edge slots."""
+        return max(self.delta_blocks, 0) * self.csr_block
+
+    def with_csr(self, block: int | None = None,
+                 delta_blocks: int | None = None) -> "ShardedGraph":
+        """Rebuild ("compact") both blocked-CSR views from the current
+        topology: tombstones fold out, staged delta edges land in sorted
+        position, and a fresh (empty) delta segment of ``delta_blocks``
+        staged blocks is appended to each view."""
         block = block or self.csr_block
+        if delta_blocks is None:
+            delta_blocks = self.delta_blocks
+        if delta_blocks < 0:
+            delta_blocks = default_delta_blocks(self.edges_per_shard, block)
+        s_, ep = self.src_local.shape
         perm, key = build_csr(self.dst_shard, self.dst_local, self.edge_ok,
                               self.n_shards, self.n_per_shard, block)
         pperm, psrc, ppos = build_push_csr(
             self.src_local, self.edge_ok, perm, self.n_per_shard, block)
+        dw = delta_blocks * block
+        if dw:
+            pad = ((0, 0), (0, dw))
+            perm = jnp.pad(perm, pad)
+            key = jnp.pad(key, pad, constant_values=-1)
+            pperm = jnp.pad(pperm, pad)
+            psrc = jnp.pad(psrc, pad, constant_values=-1)
+            ppos = jnp.pad(ppos, pad, constant_values=-1)
+        # slot -> stream position inverses (O(batch) delete tombstoning);
+        # only live slots' entries are ever read — the first ep stream
+        # positions hold the real argsort, so scattering through them
+        # covers every slot
+        rows = jnp.arange(s_, dtype=jnp.int32)[:, None]
+        pos = jnp.broadcast_to(jnp.arange(ep, dtype=jnp.int32), (s_, ep))
+        inv = jnp.zeros((s_, ep), jnp.int32).at[rows, perm[:, :ep]].set(pos)
+        pinv = jnp.zeros((s_, ep), jnp.int32).at[rows, pperm[:, :ep]].set(pos)
+        zero = jnp.zeros((s_,), jnp.int32)
         return dataclasses.replace(
-            self, csr_perm=perm, csr_key=key, push_perm=pperm,
-            push_src=psrc, push_pos=ppos, csr_block=block,
+            self, csr_perm=perm, csr_key=key, csr_live=key >= 0,
+            csr_inv=inv, push_perm=pperm, push_src=psrc, push_pos=ppos,
+            push_inv=pinv, delta_count=zero, tomb_count=zero,
+            csr_block=block, delta_blocks=delta_blocks,
         )
 
     def invalidate_csr(self) -> "ShardedGraph":
-        """Drop both CSR views without paying the re-sorts.  Used by the
-        sequential per-edge primitives so a k-update loop defers the sort
-        to the next diffusion (via ``_sg_as_dict``) instead of sorting k
-        times.  The rebuild happens in-trace on a local copy — an
-        invalidated graph re-sorts on *every* diffusion until the caller
-        persists it with :meth:`with_csr`; the batched
-        ``UpdateBatch.apply`` rebuilds eagerly so committed graphs never
-        carry that recurring cost.  Pull and push views are always
-        dropped together — a graph can never carry one stale view."""
+        """Drop both CSR views without paying the re-sorts — the escape
+        hatch for callers that batch many mutations outside the
+        tombstone/delta patch path.  The rebuild happens in-trace on a
+        local copy — an invalidated graph re-sorts on *every* diffusion
+        until the caller persists it with :meth:`with_csr`; the batched
+        ``UpdateBatch.apply`` and the per-edge primitives instead patch
+        the views in place (tombstones + staged deltas) so mutated
+        graphs never carry that recurring cost.  Pull and push views are
+        always dropped together — a graph can never carry one stale
+        view."""
         return dataclasses.replace(self, csr_perm=None, csr_key=None,
+                                   csr_live=None, csr_inv=None,
                                    push_perm=None, push_src=None,
-                                   push_pos=None)
+                                   push_pos=None, push_inv=None,
+                                   delta_count=None, tomb_count=None)
+
+    # -- incremental view maintenance (DESIGN.md §2.9) --------------------
+
+    def with_edge_tombstones(self, shard, slot, ok) -> "ShardedGraph":
+        """Tombstone K edges at ``(shard, slot)`` (``ok`` masks no-ops) in
+        both views: O(K) scatters through the slot->position inverses.
+        The dense position keeps its structural ``csr_key`` (the scan
+        paths' run layout stays sorted) and drops ``csr_live``; the push
+        position drops ``push_src`` to ``-1`` (its own validity
+        sentinel)."""
+        ep = self.edges_per_shard
+        w = self.csr_key.shape[-1]
+        sl = jnp.clip(slot, 0, ep - 1)
+        dpos = jnp.where(ok, self.csr_inv[shard, sl], w)
+        ppos = jnp.where(ok, self.push_inv[shard, sl], w)
+        return dataclasses.replace(
+            self,
+            csr_live=self.csr_live.at[shard, dpos].set(False, mode="drop"),
+            push_src=self.push_src.at[shard, ppos].set(-1, mode="drop"),
+            tomb_count=self.tomb_count.at[shard].add(
+                ok.astype(jnp.int32), mode="drop"),
+        )
+
+    def with_slot_tombstones(self, dead) -> "ShardedGraph":
+        """Tombstone every edge slot in the ``dead`` [S, Ep] mask (the
+        vertex-delete path, where the doomed set is discovered as a
+        mask): one O(E) elementwise pass over both views, no sort."""
+        at_dense = jnp.take_along_axis(
+            dead, jnp.clip(self.csr_perm, 0, self.edges_per_shard - 1),
+            axis=-1)
+        newly = self.csr_live & at_dense
+        at_push = jnp.take_along_axis(
+            dead, jnp.clip(self.push_perm, 0, self.edges_per_shard - 1),
+            axis=-1) & (self.push_src >= 0)
+        return dataclasses.replace(
+            self,
+            csr_live=self.csr_live & ~at_dense,
+            push_src=jnp.where(at_push, -1, self.push_src),
+            tomb_count=self.tomb_count
+            + jnp.sum(newly, axis=-1).astype(jnp.int32),
+        )
+
+    def with_staged_edges(self, shard, slot, src_local, dst_key, rank,
+                          ok) -> "ShardedGraph":
+        """Stage K freshly-written edges (``(shard, slot)`` already hold
+        their fields) into the delta segment of both views: position =
+        ``sorted_width + delta_count[shard] + rank`` (``rank`` = the
+        op's index among this batch's adds to the same cell).  O(K)
+        scatters; the caller must have checked capacity
+        (``delta_count + adds-per-cell <= delta_width``)."""
+        es = self.sorted_width
+        w = self.csr_key.shape[-1]
+        ep = self.edges_per_shard
+        dpos = jnp.where(ok, es + self.delta_count[shard] + rank, w)
+        islot = jnp.where(ok, slot, ep)
+        i32 = jnp.int32
+        return dataclasses.replace(
+            self,
+            csr_perm=self.csr_perm.at[shard, dpos].set(
+                slot.astype(i32), mode="drop"),
+            csr_key=self.csr_key.at[shard, dpos].set(
+                dst_key.astype(i32), mode="drop"),
+            csr_live=self.csr_live.at[shard, dpos].set(True, mode="drop"),
+            csr_inv=self.csr_inv.at[shard, islot].set(
+                dpos.astype(i32), mode="drop"),
+            push_perm=self.push_perm.at[shard, dpos].set(
+                slot.astype(i32), mode="drop"),
+            push_src=self.push_src.at[shard, dpos].set(
+                src_local.astype(i32), mode="drop"),
+            push_pos=self.push_pos.at[shard, dpos].set(
+                dpos.astype(i32), mode="drop"),
+            push_inv=self.push_inv.at[shard, islot].set(
+                dpos.astype(i32), mode="drop"),
+            delta_count=self.delta_count.at[shard].add(
+                ok.astype(i32), mode="drop"),
+        )
 
     def csr_view(self) -> dict:
         """The destination-sorted edge streams the relax backends consume.
 
-        [S, Eb] gathers of the edge fields through ``csr_perm``; positions
-        with ``csr_key == -1`` (dead/padding) carry garbage and must be
-        masked by the key.
+        [S, W] gathers of the edge fields through ``csr_perm`` (W =
+        sorted region + staged delta segment); positions with
+        ``csr_key == -1`` (dead / padding / tombstoned / free delta)
+        carry garbage and must be masked by the key.  ``csr_key`` here is
+        the *live-masked* key (tombstones read ``-1``); ``csr_skey``
+        keeps the structural sorted key so the scan paths'
+        ``searchsorted`` run layout survives tombstoning (the delta
+        segment of ``csr_skey`` is unsorted — the kernels consume it
+        through a separate scatter pass, never the scan).
         """
         if self.csr_perm is None:
             raise ValueError("ShardedGraph has no CSR view; call with_csr()")
         take = lambda a: jnp.take_along_axis(a, self.csr_perm, axis=-1)
         return {
-            "csr_key": self.csr_key,
+            "csr_key": jnp.where(self.csr_live, self.csr_key, -1),
+            "csr_skey": self.csr_key,
             "csr_src": take(self.src_local),
             "csr_weight": take(self.weight),
             "csr_dst_gid": take(self.dst_gid),
@@ -289,10 +464,12 @@ class ShardedGraph:
     def push_view(self) -> dict:
         """The source-sorted edge streams the push sweep consumes.
 
-        [S, Eb] gathers of the edge fields through ``push_perm``;
-        positions with ``push_src == -1`` (dead/padding) carry garbage
-        and must be masked.  ``push_pos`` maps each push position back to
-        its slot in the destination-sorted stream of :meth:`csr_view`.
+        [S, W] gathers of the edge fields through ``push_perm``;
+        positions with ``push_src == -1`` (dead / padding / tombstoned)
+        carry garbage and must be masked.  ``push_pos`` maps each push
+        position back to its slot in the destination-sorted stream of
+        :meth:`csr_view` (staged delta edges map to their own delta
+        position — the two views stage identically).
         """
         if self.push_perm is None:
             raise ValueError("ShardedGraph has no push view; call with_csr()")

@@ -121,7 +121,8 @@ def select_bucket(n_active_blocks, n_blocks: int, sweep: str,
 
 def make_relax(prog, n_shards: int, n_per_shard: int, block_e: int,
                backend: str = "xla", sweep: str = "pull",
-               push_threshold: float = DEFAULT_PUSH_THRESHOLD) -> Callable:
+               push_threshold: float = DEFAULT_PUSH_THRESHOLD,
+               delta_e: int = 0) -> Callable:
     """Build the per-cell relaxation step for ``prog`` on ``backend``.
 
     The returned function maps one cell's (vstate [Np] pytree, senders
@@ -149,6 +150,11 @@ def make_relax(prog, n_shards: int, n_per_shard: int, block_e: int,
     runtime with zero recompiles.  Every branch returns the same table
     bitwise (tests/test_sweep.py), so the direction is invisible to
     programs.
+
+    ``delta_e`` (static) is the width of the graph's staged delta
+    segment (``ShardedGraph.delta_width``, DESIGN.md §2.9): the scan
+    paths scan only the sorted region and fold the staged blocks in
+    through a scatter; 0 = delta-free streams.
     """
     if backend not in RELAX_BACKENDS:
         raise ValueError(
@@ -184,7 +190,8 @@ def make_relax(prog, n_shards: int, n_per_shard: int, block_e: int,
             sg_s["csr_key"], sg_s["csr_src"], sg_s["csr_weight"],
             sg_s["csr_dst_gid"],
             n_keys=n_keys, block_e=block_e, backend=backend,
-            interpret=interpret,
+            interpret=interpret, skey=sg_s.get("csr_skey"),
+            delta_e=delta_e,
         )
 
     if sweep == "pull":
@@ -200,7 +207,8 @@ def make_relax(prog, n_shards: int, n_per_shard: int, block_e: int,
         return edge_relax_push(
             prog, vstate, senders, sg_s["gid"], sg_push, sg_s["csr_key"],
             n_keys=n_keys, block_e=block_e, cap=cap, backend=backend,
-            interpret=interpret,
+            interpret=interpret, skey=sg_s.get("csr_skey"),
+            delta_e=delta_e,
         )
 
     def relax(vstate, senders, sg_s, bucket=None):

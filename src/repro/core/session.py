@@ -12,9 +12,13 @@ not three code paths.  The session realizes that (DESIGN.md §2.4):
   (``engine="sharded" | "event" | "spmd"``);
 * **mutations** accumulate in an :class:`UpdateBatch` (the seven
   primitives of §VI, batched) and land with ``session.commit()``, which
-  applies them as vectorized scatters and then *repairs* every cached
-  program by re-diffusing only the affected frontier — the generic form
-  of the paper's dynamic-graph processing.
+  applies them as **one compiled, device-resident scatter program** that
+  patches the blocked-CSR views in place (tombstones + staged delta
+  blocks — O(batch), no stream re-sort; DESIGN.md §2.9) and then
+  *repairs* every cached program by re-diffusing only the affected
+  frontier — the generic form of the paper's dynamic-graph processing.
+  ``max_cache_entries=`` bounds the query cache with LRU eviction for
+  long-running streaming sessions.
 
 Repair strategies (per registered program, picked to reproduce the
 from-scratch fixed point exactly):
@@ -61,7 +65,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .diffuse import _sg_as_dict, diffuse, diffuse_from, make_spmd_diffuse
+from .diffuse import (
+    _sg_as_dict,
+    diffuse,
+    diffuse_from,
+    exact_streams_for,
+    make_spmd_diffuse,
+)
 from .dynamic import NameServer, _invalidate_subtrees
 from .graph import from_edges
 from .partition import Partitioned, partition
@@ -160,7 +170,8 @@ class DiffusionSession:
     def __init__(self, part: Partitioned, ns: NameServer | None = None,
                  engine: str = "sharded", backend: str = "xla",
                  sweep: str = "pull", max_local_iters: int = 64,
-                 max_rounds: int = 10_000):
+                 max_rounds: int = 10_000,
+                 max_cache_entries: int | None = None):
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, "
                              f"got {engine!r}")
@@ -170,6 +181,9 @@ class DiffusionSession:
         if sweep not in RELAX_SWEEPS:
             raise ValueError(f"sweep must be one of {RELAX_SWEEPS}, "
                              f"got {sweep!r}")
+        if max_cache_entries is not None and max_cache_entries < 1:
+            raise ValueError("max_cache_entries must be >= 1 (or None "
+                             "for an unbounded cache)")
         self.part = part
         self._ns = ns                # lazily built: queries don't need one
         self.engine = engine
@@ -177,6 +191,13 @@ class DiffusionSession:
         self.sweep = sweep
         self.max_local_iters = max_local_iters
         self.max_rounds = max_rounds
+        # LRU query cache: a long-running streaming session sees an
+        # unbounded stream of (program, source, backend, sweep) variants;
+        # max_cache_entries bounds the retained fixed points — an evicted
+        # entry simply recomputes on its next query and is no longer
+        # repaired by commit().  Insertion order doubles as recency
+        # (hits reinsert).
+        self.max_cache_entries = max_cache_entries
         self._cache: dict[tuple, _Entry] = {}
         self._pending: UpdateBatch | None = None
         self._spmd_fns: dict = {}
@@ -280,6 +301,23 @@ class DiffusionSession:
             key = key + (("sweep", sweep),)
         return key
 
+    def _cache_get(self, key) -> _Entry | None:
+        """Cache lookup that refreshes recency (LRU via insertion order)."""
+        entry = self._cache.pop(key, None)
+        if entry is not None:
+            self._cache[key] = entry
+        return entry
+
+    def _cache_put(self, key, entry: _Entry):
+        """Insert most-recent; evict the least-recently-used entries
+        beyond ``max_cache_entries`` (evictees just recompute on their
+        next query and stop being repaired by commit())."""
+        self._cache.pop(key, None)
+        self._cache[key] = entry
+        if self.max_cache_entries is not None:
+            while len(self._cache) > self.max_cache_entries:
+                self._cache.pop(next(iter(self._cache)))
+
     def _resolve(self, prog, kwargs: dict):
         """One registry path for every way of naming a program — a
         registry string, a :class:`ProgramHandle` (``sssp``), a
@@ -382,12 +420,14 @@ class DiffusionSession:
                     f"relaxation sweep; backend=/sweep=/delta= would be "
                     f"silently ignored")
             key = self._key(name, engine, kwargs)
-            if not refresh and key in self._cache:
-                return self._cache[key].raw
+            if not refresh:
+                hit = self._cache_get(key)
+                if hit is not None:
+                    return hit.raw
             res = spec.run_fn(self, engine=engine, **kwargs)
-            self._cache[key] = _Entry(spec, None, spec.value_key,
-                                      dict(kwargs), None, res.stats,
-                                      engine, raw=res)
+            self._cache_put(key, _Entry(spec, None, spec.value_key,
+                                        dict(kwargs), None, res.stats,
+                                        engine, raw=res))
             return res
 
         lane_kw = spec.lane_param + "s" if spec.lane_param else None
@@ -398,8 +438,10 @@ class DiffusionSession:
                                      sweep, explicit_sweep)
 
         key = self._key(name, engine, kwargs, backend, delta, sweep)
-        if not refresh and key in self._cache:
-            return self._result(self._cache[key])
+        if not refresh:
+            hit = self._cache_get(key)
+            if hit is not None:
+                return self._result(hit)
 
         if engine == "event":
             if spec.event_fn is not None:
@@ -430,11 +472,22 @@ class DiffusionSession:
         entry = _Entry(spec, program, vk, dict(kwargs), vstate, stats,
                        engine, backend=backend, delta=delta,
                        sweep=explicit_sweep)
-        self._cache[key] = entry
+        self._cache_put(key, entry)
         return self._result(entry)
+
+    def _compact_for(self, program: VertexProgram | None):
+        """Sum-combine diffusions must see compacted (delta-free) streams
+        to stay bitwise-equal to a full rebuild (DESIGN.md §2.9) —
+        delegate the policy to :func:`~.diffuse.exact_streams_for` and
+        *persist* its result, so every later query and repair reuses the
+        clean graph instead of re-sorting per call; min/max programs
+        consume the incremental views directly and come back unchanged."""
+        if program is not None:
+            self.part.sg = exact_streams_for(self.sg, program)
 
     def _run_diffusion(self, program: VertexProgram, engine: str,
                        backend: str, delta, sweep: str = "pull"):
+        self._compact_for(program)
         if engine == "sharded":
             return diffuse(
                 self.sg, program, max_local_iters=self.max_local_iters,
@@ -460,7 +513,7 @@ class DiffusionSession:
         keys = [self._key(name, engine, kw, backend, delta, sweep)
                 for kw in per_lane]
         if not refresh and all(k in self._cache for k in keys):
-            return [self._result(self._cache[k]) for k in keys]
+            return [self._result(self._cache_get(k)) for k in keys]
 
         if engine == "event":
             # the host oracle is message-at-a-time; lanes degrade to a loop
@@ -480,7 +533,7 @@ class DiffusionSession:
             entry = _Entry(spec, progs[i], vk, kw, lane_state,
                            stats, engine, backend=backend, delta=delta,
                            sweep=explicit_sweep)
-            self._cache[key] = entry
+            self._cache_put(key, entry)
             results.append(self._result(entry))
         return results
 
@@ -495,9 +548,10 @@ class DiffusionSession:
         backend = backend or self.backend
         key = self._key(name, engine, kwargs, backend, delta,
                         sweep or self.sweep)
-        self._cache[key] = _Entry(spec, prog, spec.value_key, dict(kwargs),
-                                  vstate, stats, engine, backend=backend,
-                                  delta=delta, sweep=sweep)
+        self._cache_put(key, _Entry(spec, prog, spec.value_key,
+                                    dict(kwargs), vstate, stats, engine,
+                                    backend=backend, delta=delta,
+                                    sweep=sweep))
         return key
 
     def vertex_state(self, name: str, engine: str | None = None,
@@ -507,7 +561,12 @@ class DiffusionSession:
         key = self._key(name, engine or self.engine, kwargs,
                         backend or self.backend, delta,
                         sweep or self.sweep)
-        entry = self._cache[key]
+        entry = self._cache_get(key)    # reads keep the entry warm (LRU)
+        if entry is None:
+            raise KeyError(
+                f"no cached fixed point for {name!r} with {kwargs} — "
+                f"never queried, or evicted by max_cache_entries; "
+                f"query() recomputes it")
         if entry.vstate is None:
             raise ValueError(
                 f"{name!r} is a custom run_fn query; it caches a whole "
@@ -516,6 +575,7 @@ class DiffusionSession:
 
     def _run_spmd(self, program: VertexProgram, backend: str = "xla",
                   sweep: str = "pull"):
+        self._compact_for(program)
         S = self.n_cells
         if len(jax.devices()) < S:
             raise RuntimeError(
@@ -620,7 +680,7 @@ class DiffusionSession:
             else:
                 self.query(name, engine=engine, backend=backend,
                            sweep=sweep_kw, delta=delta, **kwargs)
-        entry = self._cache[key]
+        entry = self._cache_get(key)    # reads keep the entry warm (LRU)
         return _peek(self.sg, entry.vstate[entry.value_key], self.ns, u)
 
     # ------------------------------------------------------------------
@@ -662,6 +722,8 @@ class DiffusionSession:
             strategy = "restart"
 
         if strategy == "restart":
+            self._compact_for(entry.prog)
+            sg = self.sg            # _compact_for may have persisted
             if entry.engine == "spmd":
                 vstate, stats = self._run_spmd(entry.prog, entry.backend,
                                                entry.sweep or self.sweep)

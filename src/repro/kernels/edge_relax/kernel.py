@@ -76,10 +76,10 @@ def _kernel(*refs, prog, treedef, n_leaves: int, block_e: int):
 
 def _scan_kernel(*refs, prog, treedef, n_leaves: int):
     vrefs = refs[:n_leaves]
-    senders_ref, gid_ref, key_ref, src_ref, w_ref, dstg_ref = (
-        refs[n_leaves:n_leaves + 6]
+    senders_ref, gid_ref, key_ref, skey_ref, src_ref, w_ref, dstg_ref = (
+        refs[n_leaves:n_leaves + 7]
     )
-    outs = refs[n_leaves + 6:]
+    outs = refs[n_leaves + 7:]
     vstate = jax.tree_util.tree_unflatten(
         treedef, [r[0] for r in vrefs]
     )
@@ -87,7 +87,7 @@ def _scan_kernel(*refs, prog, treedef, n_leaves: int):
         prog, vstate, senders_ref[0], gid_ref[0], key_ref[0], src_ref[0],
         w_ref[0], dstg_ref[0],
     )
-    v, c, p = stream_scan(prog.monoid, cand, send, key_ref[0], pay)
+    v, c, p = stream_scan(prog.monoid, cand, send, skey_ref[0], pay)
     outs[0][0] = v
     outs[1][0] = c
     if p is not None:
@@ -95,7 +95,7 @@ def _scan_kernel(*refs, prog, treedef, n_leaves: int):
 
 
 def edge_relax_scan(prog, vstate, senders, gid, key, src, weight, dst_gid,
-                    interpret: bool = False):
+                    skey=None, interpret: bool = False):
     """Pallas scan kernel: the whole destination-sorted stream resident in
     VMEM, combined by the segmented associative scan (``ref.stream_scan``
     executed verbatim — bitwise parity with the XLA scan path by
@@ -103,9 +103,17 @@ def edge_relax_scan(prog, vstate, senders, gid, key, src, weight, dst_gid,
     programs, whose per-destination accumulation must not depend on block
     boundaries or lane count.
 
+    ``key`` is the live-masked destination key (send masking; tombstones
+    read ``-1``) and ``skey`` the structural sorted key driving the
+    scan's run layout (defaults to ``key``); the caller slices off the
+    staged delta segment first — it is combined outside the kernel by
+    the shared scatter pass (ops.py).
+
     Returns the scanned (value, count[, payload]) streams, each [E]; feed
     to ``ref.gather_runs`` for the run-end gather (shared XLA phase 2).
     """
+    if skey is None:
+        skey = key
     leaves, treedef = jax.tree_util.tree_flatten(vstate)
     np_ = gid.shape[0]
     e = key.shape[0]
@@ -119,7 +127,7 @@ def edge_relax_scan(prog, vstate, senders, gid, key, src, weight, dst_gid,
         in_specs=(
             [whole(np_) for _ in leaves]
             + [whole(np_), whole(np_)]          # senders, gid
-            + [whole(e) for _ in range(4)]      # key, src, weight, dst_gid
+            + [whole(e) for _ in range(5)]      # key, skey, src, w, dst_gid
         ),
         out_specs=[whole(e) for _ in range(n_out)],
         out_shape=[jax.ShapeDtypeStruct((1, e), dt) for dt in out_dtypes],
@@ -127,7 +135,7 @@ def edge_relax_scan(prog, vstate, senders, gid, key, src, weight, dst_gid,
     )(
         *[leaf[None] for leaf in leaves],
         senders[None], gid[None],
-        key[None], src[None], weight[None], dst_gid[None],
+        key[None], skey[None], src[None], weight[None], dst_gid[None],
     )
     v, c = outs[0][0], outs[1][0]
     p = outs[2][0] if prog.with_payload else None

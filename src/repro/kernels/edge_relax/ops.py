@@ -33,11 +33,14 @@ from ...core.relax import RELAX_BACKENDS
 from .kernel import edge_relax_blocks, edge_relax_push_blocks, edge_relax_scan
 from .ref import (
     compact_push_blocks,
+    delta_tables,
     edge_relax_flat,
     edge_relax_push_flat,
     edge_relax_push_stream,
     edge_relax_stream,
     gather_runs,
+    merge_tables,
+    stream_messages,
 )
 
 __all__ = ["edge_relax", "edge_relax_push", "RELAX_BACKENDS"]
@@ -82,7 +85,8 @@ def _mask_fill_blocks(part, cnt, uniq, pay, valid):
 
 def edge_relax_push(prog, vstate, senders, gid, sg_push, csr_key,
                     n_keys: int, block_e: int, cap: int,
-                    backend: str = "xla", interpret: bool = False):
+                    backend: str = "xla", interpret: bool = False,
+                    skey=None, delta_e: int = 0):
     """Frontier-compacted push sweep of one cell — the sparse twin of
     :func:`edge_relax`, same (table, cnt, pay) contract.
 
@@ -97,6 +101,13 @@ def edge_relax_push(prog, vstate, senders, gid, sg_push, csr_key,
     on ``xla`` and the scalar-prefetch blocked kernel on ``pallas``
     (order-free monoids agree across all paths).  Phase 2 is the same
     shared XLA code as the dense sweep.
+
+    A graph with a staged delta segment (``delta_e`` trailing stream
+    positions, DESIGN.md §2.9) needs no special push handling on the
+    flat/blocked paths — a delta block is active exactly when one of its
+    staged edges' sources sends, so compaction covers it like any sorted
+    block; the stream path forwards ``skey``/``delta_e`` so its dense
+    reconstruction scans only the sorted region.
     """
     if backend not in RELAX_BACKENDS:
         raise ValueError(
@@ -105,7 +116,8 @@ def edge_relax_push(prog, vstate, senders, gid, sg_push, csr_key,
 
     if prog.combine == "sum" or laned:
         return edge_relax_push_stream(prog, vstate, senders, gid, sg_push,
-                                      csr_key, n_keys, block_e, cap)
+                                      csr_key, n_keys, block_e, cap,
+                                      skey=skey, delta_e=delta_e)
     if backend == "xla":
         return edge_relax_push_flat(prog, vstate, senders, gid, sg_push,
                                     n_keys, block_e, cap)
@@ -122,17 +134,28 @@ def edge_relax_push(prog, vstate, senders, gid, sg_push, csr_key,
 
 def edge_relax(prog, vstate, senders, gid, key, src, weight, dst_gid,
                n_keys: int, block_e: int, backend: str = "xla",
-               interpret: bool = False):
+               interpret: bool = False, skey=None, delta_e: int = 0):
     """One relaxation sweep of one cell; see module docstring for the
     returned (table, cnt, pay) contract.
 
     Multi-query lanes: when ``senders`` is [L, Np] (vstate leaves [L, Np])
     the sweep broadcasts over the lane axis against the *same* edge stream
     — the kernel's gather/emit/combine runs per lane under one batched
-    dispatch — and the outputs gain a leading lane axis [L, n_keys]."""
+    dispatch — and the outputs gain a leading lane axis [L, n_keys].
+
+    Incremental streams (DESIGN.md §2.9): ``key`` is the live-masked
+    destination key (tombstones read ``-1`` and never send) and ``skey``
+    the structural sorted key; ``delta_e`` trailing positions are the
+    staged delta segment.  The flat and blocked paths consume tombstones
+    and delta blocks through their ordinary masking/scatter handling; the
+    scan paths scan the sorted region against ``skey`` and fold the
+    (unsorted) delta segment in through the shared
+    :func:`~.ref.delta_tables` scatter."""
     if backend not in RELAX_BACKENDS:
         raise ValueError(
             f"backend must be one of {RELAX_BACKENDS}, got {backend!r}")
+    if skey is None:
+        skey = key
     laned = senders.ndim == 2      # [L, Np] lane-stacked vertex block
 
     # Sum programs take the segmented-scan path on *both* backends: its
@@ -143,21 +166,32 @@ def edge_relax(prog, vstate, senders, gid, key, src, weight, dst_gid,
     if prog.combine == "sum" or (laned and backend == "xla"):
         if backend == "xla":
             return edge_relax_stream(prog, vstate, senders, gid, key, src,
-                                     weight, dst_gid, n_keys)
+                                     weight, dst_gid, n_keys, skey=skey,
+                                     delta_e=delta_e)
+        es = key.shape[-1] - delta_e
         scan1 = lambda vs, sd: edge_relax_scan(
-            prog, vs, sd, gid, key, src, weight, dst_gid,
-            interpret=interpret)
+            prog, vs, sd, gid, key[:es], src[:es], weight[:es],
+            dst_gid[:es], skey=skey[:es], interpret=interpret)
         scanned = (jax.vmap(scan1)(vstate, senders) if laned
                    else scan1(vstate, senders))
-        return gather_runs(scanned, key, n_keys, prog.monoid,
-                           prog.msg_dtype)
+        out = gather_runs(scanned, skey[:es], n_keys, prog.monoid,
+                          prog.msg_dtype)
+        if delta_e:
+            # delta tail: shared XLA phase (message bodies + scatter),
+            # merged by the monoid — same code the XLA path runs
+            cand, send, pay = stream_messages(
+                prog, vstate, senders, gid, key[es:], src[es:],
+                weight[es:], dst_gid[es:])
+            out = merge_tables(prog, out, delta_tables(
+                prog, cand, send, pay, key[es:], n_keys))
+        return out
 
     if laned:                      # pallas min/max: lane-batched kernel
         return jax.vmap(
             lambda vs, sd: edge_relax(
                 prog, vs, sd, gid, key, src, weight, dst_gid,
                 n_keys=n_keys, block_e=block_e, backend=backend,
-                interpret=interpret,
+                interpret=interpret, skey=skey, delta_e=delta_e,
             )
         )(vstate, senders)
     if backend == "xla":

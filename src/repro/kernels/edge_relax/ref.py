@@ -38,6 +38,9 @@ __all__ = [
     "edge_relax_flat",
     "stream_scan",
     "gather_runs",
+    "delta_tables",
+    "merge_tables",
+    "stream_combine",
     "edge_relax_stream",
     "compact_push_blocks",
     "push_gather",
@@ -248,19 +251,107 @@ def gather_runs(scanned, key, n_keys: int, monoid, msg_dtype):
     return table, cnt, pay
 
 
+def delta_tables(prog, cand, send, pay, key, n_keys: int):
+    """Combine a staged **delta segment** (DESIGN.md §2.9) into a flat
+    key-space table: the appended delta blocks are unsorted, so they take
+    a shared-index scatter by destination instead of the scan — the same
+    scatter-class semantics as :func:`flat_combine`, batched over leading
+    lane axes for free because the index vector is shared across lanes.
+    Order-free (min/max) monoids stay bitwise-equal to a full rebuild
+    that would have sorted these edges into their runs; sum reassociates
+    (which is why the engines compact before sum-combine programs).
+
+    ``cand``/``send``/``pay`` are [..., D] message streams from
+    :func:`stream_messages` over the delta slice, ``key`` [D] its
+    destination ids (``-1`` = free/tombstoned, dropped).
+    """
+    ids = jnp.where(key >= 0, key, n_keys).astype(jnp.int32)
+    lane = cand.shape[:-1]
+    ident = prog.monoid.identity(prog.msg_dtype)
+    table = jnp.full(lane + (n_keys + 1,), ident, prog.msg_dtype)
+    if prog.combine == "min":
+        table = table.at[..., ids].min(cand)
+    elif prog.combine == "max":
+        table = table.at[..., ids].max(cand)
+    else:
+        table = table.at[..., ids].add(cand)     # non-senders hold +0
+    sendb = jnp.broadcast_to(send, cand.shape)
+    cnt = jnp.zeros(lane + (n_keys + 1,), jnp.int32).at[..., ids].add(
+        sendb.astype(jnp.int32))
+    pay_t = None
+    if pay is not None:
+        payb = jnp.broadcast_to(pay, cand.shape)
+        win = sendb & (cand == table[..., ids])
+        pay_t = jnp.full(lane + (n_keys + 1,), -1, jnp.int32).at[
+            ..., ids].max(jnp.where(win, payb, -1))
+        pay_t = jnp.where(cnt[..., :n_keys] > 0, pay_t[..., :n_keys], -1)
+    return table[..., :n_keys], cnt[..., :n_keys], pay_t
+
+
+def merge_tables(prog, a, b):
+    """Monoid-merge two (table, cnt, pay) triples over the same key space
+    — how the sorted region's scan output absorbs the delta segment's
+    scatter output.  The payload rule is the shared tie-break (max over
+    winners), so argbest programs stay bitwise-equal to the single-pass
+    combines."""
+    t1, c1, p1 = a
+    t2, c2, p2 = b
+    table = prog.monoid.elem(t1, t2)
+    cnt = c1 + c2
+    pay = None
+    if p1 is not None:
+        pay = jnp.maximum(jnp.where((t1 == table) & (c1 > 0), p1, -1),
+                          jnp.where((t2 == table) & (c2 > 0), p2, -1))
+    return table, cnt, pay
+
+
+def stream_combine(prog, cand, send, pay, key, skey, n_keys: int,
+                   delta_e: int):
+    """The one home of the sorted-region/delta-segment split: segmented
+    scan + run-end gather over ``[..., :es]`` against the structural
+    ``skey``, with the staged delta segment (``delta_e`` trailing
+    positions, unsorted) folded in through :func:`delta_tables` and
+    merged by the monoid.  Every full-width message-stream consumer
+    (dense scan path, push-sweep reconstruction) calls this, so the
+    'incremental == rebuild bitwise' contract cannot drift between
+    backends or sweeps.
+    """
+    es = key.shape[-1] - delta_e
+    sl = lambda a: None if a is None else a[..., :es]
+    scanned = stream_scan(prog.monoid, cand[..., :es], send[..., :es],
+                          skey[:es], sl(pay))
+    out = gather_runs(scanned, skey[:es], n_keys, prog.monoid,
+                      prog.msg_dtype)
+    if delta_e:
+        dl = lambda a: None if a is None else a[..., es:]
+        out = merge_tables(prog, out, delta_tables(
+            prog, cand[..., es:], send[..., es:], dl(pay), key[es:],
+            n_keys))
+    return out
+
+
 def edge_relax_stream(prog, vstate, senders, gid, key, src, weight, dst_gid,
-                      n_keys: int):
+                      n_keys: int, skey=None, delta_e: int = 0):
     """Scan-based relaxation sweep (XLA): gather → emit → segmented scan
-    → run-end gather.  Handles single ([Np] leaves) and laned ([L, Np])
-    vertex blocks uniformly; the canonical sum path and the fast path for
-    every laned program.
+    over the sorted region → run-end gather, plus the shared-index
+    scatter over the staged delta segment (``delta_e`` trailing
+    positions) merged in by the monoid (:func:`stream_combine`).
+    Handles single ([Np] leaves) and laned ([L, Np]) vertex blocks
+    uniformly; the canonical sum path and the fast path for every laned
+    program.
+
+    ``key`` is the live-masked destination key (tombstones ``-1``) used
+    for send masking; ``skey`` the structural sorted key driving the
+    run layout (defaults to ``key`` — identical on delta-free graphs).
 
     Returns (table [..., n_keys], cnt, pay | None).
     """
+    if skey is None:
+        skey = key
     cand, send, pay = stream_messages(prog, vstate, senders, gid, key, src,
                                       weight, dst_gid)
-    scanned = stream_scan(prog.monoid, cand, send, key, pay)
-    return gather_runs(scanned, key, n_keys, prog.monoid, prog.msg_dtype)
+    return stream_combine(prog, cand, send, pay, key, skey, n_keys,
+                          delta_e)
 
 
 # --------------------------------------------------------------------------
@@ -337,11 +428,15 @@ def edge_relax_push_flat(prog, vstate, senders, gid, sg_push, n_keys: int,
 
 
 def edge_relax_push_stream(prog, vstate, senders, gid, sg_push, csr_key,
-                           n_keys: int, block_e: int, cap: int):
+                           n_keys: int, block_e: int, cap: int, skey=None,
+                           delta_e: int = 0):
     """Frontier-compacted push sweep for sum programs and all laned runs:
     compact -> gather -> emit -> scatter the messages back into the dense
     destination-sorted stream layout (via ``push_pos``) -> the shared
-    :func:`stream_scan` + :func:`gather_runs`.
+    :func:`stream_scan` + :func:`gather_runs` over the sorted region and
+    :func:`delta_tables` over the staged delta segment (a staged edge's
+    ``push_pos`` is its own delta position, so its message lands exactly
+    where the dense sweep would emit it).
 
     Reconstructing the dense stream (identity everywhere no gathered edge
     sends — exactly what the dense sweep holds there) keeps the scan's
@@ -350,6 +445,8 @@ def edge_relax_push_stream(prog, vstate, senders, gid, sg_push, csr_key,
     shrinks to the frontier's blocks.  Laned ``senders`` [L, Np] share one
     OR-ed active set (one gather serves every lane).
     """
+    if skey is None:
+        skey = csr_key
     senders_any = senders if senders.ndim == 1 else senders.any(axis=0)
     idx, _ = compact_push_blocks(senders_any, sg_push["push_src"], block_e,
                                  cap)
@@ -368,10 +465,8 @@ def edge_relax_push_stream(prog, vstate, senders, gid, sg_push, csr_key,
     if pay is not None:
         pay_full = scat(jnp.full(lane + (e,), -1, jnp.int32),
                         jnp.broadcast_to(pay, cand.shape))
-    scanned = stream_scan(prog.monoid, cand_full, send_full, csr_key,
-                          pay_full)
-    return gather_runs(scanned, csr_key, n_keys, prog.monoid,
-                       prog.msg_dtype)
+    return stream_combine(prog, cand_full, send_full, pay_full, csr_key,
+                          skey, n_keys, delta_e)
 
 
 def edge_relax_flat(prog, vstate, senders, gid, key, src, weight, dst_gid,

@@ -48,6 +48,7 @@ def build_specs(scale: int, n_cells: int, edge_factor: int = 16,
         "gid": jax.ShapeDtypeStruct((S, np_), i32),
         "out_degree": jax.ShapeDtypeStruct((S, np_), i32),
         "csr_key": jax.ShapeDtypeStruct((S, eb), i32),
+        "csr_skey": jax.ShapeDtypeStruct((S, eb), i32),
         "csr_src": jax.ShapeDtypeStruct((S, eb), i32),
         "csr_weight": jax.ShapeDtypeStruct((S, eb), jnp.float32),
         "csr_dst_gid": jax.ShapeDtypeStruct((S, eb), i32),

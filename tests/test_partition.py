@@ -70,9 +70,11 @@ def test_csr_view_is_destination_sorted_permutation():
 
 
 def test_csr_view_tracks_updates():
-    """Every topology-changing primitive refreshes both CSR views —
-    destination-sorted pull and source-sorted push — together (batched
-    and sequential paths)."""
+    """Every topology-changing primitive keeps both CSR views current —
+    destination-sorted pull and source-sorted push — by in-place
+    tombstone/delta patching (batched and sequential paths), and a
+    compacting ``with_csr()`` of either path agrees with the other
+    (same edge multiset per cell => same sorted key stream)."""
     from repro.core import DiffusionSession
     from repro.core.dynamic import NameServer, edge_add, edge_delete
 
@@ -82,35 +84,32 @@ def test_csr_view_tracks_updates():
     sess.add_edge(0, 7, 2.0)
     sess.delete_edge(int(src[0]), int(dst[0]))
     sess.commit()
-    rebuilt = sess.sg.with_csr()
-    assert np.array_equal(np.asarray(sess.sg.csr_perm),
-                          np.asarray(rebuilt.csr_perm))
-    assert np.array_equal(np.asarray(sess.sg.push_perm),
-                          np.asarray(rebuilt.push_perm))
-    assert np.array_equal(np.asarray(sess.sg.push_pos),
-                          np.asarray(rebuilt.push_pos))
+    # commit() staged the add and tombstoned the delete — O(batch), no
+    # re-sort — and the views remained present throughout
+    assert sess.sg.csr_perm is not None
+    assert int(np.asarray(sess.sg.delta_count).sum()) == 1
+    assert int(np.asarray(sess.sg.tomb_count).sum()) == 1
 
     part = build(src, dst, n, w, n_cells=2, edge_slack=0.5)
     ns = NameServer(part)
     sg = edge_add(part.sg, ns, 0, 7, 2.0)
     sg = edge_delete(sg, ns, int(src[0]), int(dst[0]))
-    # sequential primitives invalidate (lazy rebuild at the next diffusion)
-    # instead of paying one sort per single-edge update — both views drop
-    # together, a graph can never carry one stale view
-    assert sg.csr_perm is None and sg.push_perm is None
-    assert sg.push_src is None and sg.push_pos is None
-    # ...and the rebuilt streams match the batched path's (same edge
-    # multiset per cell => same sorted key stream, slot layout aside)
+    # the sequential primitives patch the same way (no invalidation, no
+    # per-update sort): both views stay present together
+    assert sg.csr_perm is not None and sg.push_perm is not None
+    assert int(np.asarray(sg.delta_count).sum()) == 1
+    # ...and both paths compact to identical sorted streams
     assert np.array_equal(np.asarray(sg.with_csr().csr_key),
-                          np.asarray(sess.sg.csr_key))
+                          np.asarray(sess.sg.with_csr().csr_key))
     assert np.array_equal(np.asarray(sg.with_csr().push_src),
-                          np.asarray(sess.sg.push_src))
+                          np.asarray(sess.sg.with_csr().push_src))
 
 
-def test_sequential_primitives_invalidate_both_views():
-    """Regression: edge_add / edge_delete / vertex_delete each lazily
-    invalidate the pull AND push views consistently, and the lazy rebuild
-    agrees with an eager with_csr() after every step."""
+def test_invalidate_csr_escape_hatch():
+    """Regression: ``invalidate_csr`` still drops the pull AND push views
+    (and every delta-maintenance field) consistently — the escape hatch
+    for out-of-band mutation — and the lazy rebuild agrees with an eager
+    with_csr() after every sequential step."""
     from repro.core.dynamic import (NameServer, edge_add, edge_delete,
                                     vertex_delete)
 
@@ -125,9 +124,10 @@ def test_sequential_primitives_invalidate_both_views():
         lambda g: vertex_delete(g, ns, 17),
     ]
     for step in steps:
-        sg = step(sg)
-        for f in ("csr_perm", "csr_key", "push_perm", "push_src",
-                  "push_pos"):
+        sg = step(sg).invalidate_csr()
+        for f in ("csr_perm", "csr_key", "csr_live", "csr_inv",
+                  "push_perm", "push_src", "push_pos", "push_inv",
+                  "delta_count", "tomb_count"):
             assert getattr(sg, f) is None, f
         with pytest.raises(ValueError):
             sg.csr_view()
@@ -166,10 +166,10 @@ def test_push_view_is_source_sorted_permutation():
 
 
 def test_lazy_csr_invalidation_rebuilds_before_query():
-    """Regression (PR 2 lazy-invalidate path): sequential add_edge /
-    delete_edge leave csr_perm=None, and a following peek()/query() must
-    see the *rebuilt* CSR — bitwise-equal to a from-scratch partition of
-    the same edge set, for a min and a sum program."""
+    """Regression (PR 2 lazy-invalidate path): an explicitly invalidated
+    graph (csr_perm=None — the escape hatch) still serves peek()/query()
+    through the in-trace rebuild — bitwise-equal to a from-scratch
+    partition of the same edge set, for a min and a sum program."""
     from repro.core import DiffusionSession, diffuse
     from repro.core.dynamic import edge_add, edge_delete
     from repro.core.programs import sssp_program
@@ -177,8 +177,8 @@ def test_lazy_csr_invalidation_rebuilds_before_query():
     src, dst, w, n = make_graph_family("small_world", 100, seed=11)
     sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=2,
                                        edge_slack=0.5)
-    # mutate through the sequential primitives (bypassing UpdateBatch's
-    # eager with_csr), directly on the session's graph
+    # mutate through the sequential primitives directly on the session's
+    # graph, then drop the patched views through the escape hatch
     sg = sess.part.sg
     dels = [(int(src[i]), int(dst[i])) for i in (0, 3)]
     adds = [(1, 50, 0.25), (50, 97, 0.5)]
@@ -186,6 +186,7 @@ def test_lazy_csr_invalidation_rebuilds_before_query():
         sg = edge_delete(sg, sess.ns, u, v)
     for u, v, x in adds:
         sg = edge_add(sg, sess.ns, u, v, x)
+    sg = sg.invalidate_csr()
     assert sg.csr_perm is None            # invalidated, not rebuilt
     sess.part.sg = sg
 
@@ -221,3 +222,208 @@ def test_lazy_csr_invalidation_rebuilds_before_query():
     assert np.array_equal(
         np.asarray(sess.vertex_state("sssp", source=0)["dist"]),
         np.asarray(vstate["dist"]))
+
+
+# --------------------------------------------------------------------------
+# delta-segment incremental CSR maintenance (DESIGN.md §2.9)
+# --------------------------------------------------------------------------
+
+def _delta_session(n=120, n_cells=3, seed=5):
+    from repro.core import DiffusionSession
+
+    src, dst, w, n = make_graph_family("erdos_renyi", n, seed=seed)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=n_cells,
+                                       edge_slack=0.5, node_slack=0.2)
+    return sess, (src, dst, w, n)
+
+
+def test_delta_segment_invariants_after_mixed_batch():
+    """CSR invariants for tombstoned and staged positions: staged delta
+    entries carry the right slot/key/src in both views at matching
+    positions, tombstones keep the structural key but drop the live
+    mask / push validity, the slot inverses round-trip, and the counters
+    track exactly."""
+    sess, (src, dst, w, n) = _delta_session()
+    sg0 = sess.sg
+    es = sg0.sorted_width
+    rng = np.random.default_rng(3)
+    adds = [(int(rng.integers(0, n)), int(rng.integers(0, n)),
+             float(0.3 + rng.random())) for _ in range(7)]
+    dels = [(int(src[i]), int(dst[i])) for i in (0, 4, 9)]
+    for u, v, x in adds:
+        sess.add_edge(u, v, x)
+    for u, v in dels:
+        sess.delete_edge(u, v)
+    sess.commit()
+    sg = sess.sg
+
+    key = np.asarray(sg.csr_key)
+    live = np.asarray(sg.csr_live)
+    perm = np.asarray(sg.csr_perm)
+    inv = np.asarray(sg.csr_inv)
+    psrc = np.asarray(sg.push_src)
+    pperm = np.asarray(sg.push_perm)
+    ppos = np.asarray(sg.push_pos)
+    pinv = np.asarray(sg.push_inv)
+    ok = np.asarray(sg.edge_ok)
+    dc = np.asarray(sg.delta_count)
+    tc = np.asarray(sg.tomb_count)
+    flat_dst = (np.asarray(sg.dst_shard) * sg.n_per_shard
+                + np.asarray(sg.dst_local))
+
+    assert int(dc.sum()) == len(adds)
+    assert int(tc.sum()) == len(dels)
+    for s in range(sg.n_shards):
+        # structural key stays sorted over the whole sorted region
+        sk = key[s, :es][key[s, :es] >= 0]
+        assert np.array_equal(sk, np.sort(sk))
+        # live positions (sorted survivors + staged deltas) are exactly
+        # the live edges, and carry their current destination keys
+        lp = np.flatnonzero(live[s])
+        assert lp.size == ok[s].sum()
+        assert np.array_equal(np.sort(perm[s, lp]), np.flatnonzero(ok[s]))
+        assert np.array_equal(key[s, lp], flat_dst[s][perm[s, lp]])
+        # staged region: first delta_count[s] positions after the sorted
+        # region are live, the rest of the delta capacity is free
+        dl = live[s, es:]
+        assert dl[: dc[s]].all() and not dl[dc[s]:].any()
+        # push view mirrors: staged edges sit at the *same* positions
+        # with src filled; tombstones read -1
+        assert np.array_equal(pperm[s, es:es + dc[s]],
+                              perm[s, es:es + dc[s]])
+        assert np.array_equal(
+            psrc[s, es:es + dc[s]],
+            np.asarray(sg.src_local)[s][perm[s, es:es + dc[s]]])
+        assert np.array_equal(ppos[s, es:es + dc[s]],
+                              np.arange(es, es + dc[s]))
+        live_push = psrc[s] >= 0
+        assert live_push.sum() == ok[s].sum()
+        assert np.array_equal(np.sort(pperm[s, live_push]),
+                              np.flatnonzero(ok[s]))
+        # slot inverses round-trip for every live edge
+        slots = np.flatnonzero(ok[s])
+        assert np.array_equal(perm[s, inv[s, slots]], slots)
+        assert np.array_equal(pperm[s, pinv[s, slots]], slots)
+    # tombstoned dense positions: structural key kept, live dropped
+    tomb = (key >= 0) & ~live
+    tomb[:, es:] = False
+    assert int(tomb.sum()) == len(dels)
+
+
+def test_compaction_on_delta_overflow():
+    """A batch that would overflow a cell's delta segment falls back to
+    the eager compacting rebuild: counters reset and the streams equal a
+    from-scratch with_csr()."""
+    from repro.core import DiffusionSession
+
+    src, dst, w, n = make_graph_family("erdos_renyi", 120, seed=5)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=3,
+                                       edge_slack=3.0)   # slots >> delta
+    cap = sess.sg.delta_width
+    rng = np.random.default_rng(11)
+    for _ in range(cap + 1):          # all adds land in one cell
+        sess.add_edge(3, int(rng.integers(0, n)), 0.5)
+    sess.commit()
+    sg = sess.sg
+    assert int(np.asarray(sg.delta_count).sum()) == 0
+    assert int(np.asarray(sg.tomb_count).sum()) == 0
+    rebuilt = sg.with_csr()
+    assert np.array_equal(np.asarray(sg.csr_perm),
+                          np.asarray(rebuilt.csr_perm))
+    assert np.array_equal(np.asarray(sg.push_perm),
+                          np.asarray(rebuilt.push_perm))
+
+
+def test_apply_is_fully_device_resident():
+    """Acceptance: the steady-state apply is one compiled program with
+    zero device->host transfers (the old path pulled the whole edge_ok
+    stream to the host every batch)."""
+    import jax
+
+    from repro.core.dynamic import NameServer
+    from repro.core.updates import UpdateBatch, apply_updates
+
+    src, dst, w, n = make_graph_family("scale_free", 150, seed=2)
+    part = build(src, dst, n, w, n_cells=2, edge_slack=0.5,
+                 node_slack=0.2)
+    ns = NameServer(part)
+    ub = UpdateBatch(ns)
+    for i in range(6):
+        ub.add_edge(i, (i * 11 + 5) % n, 0.5)
+    ub.delete_edge(int(src[0]), int(dst[0]))
+    gid = ub.add_vertex()
+    ub.add_edge(gid, 1, 1.0)
+    ops, _ = ub._pack_ops(part.sg)
+    with jax.transfer_guard("disallow"):
+        sg2, del_ok, add_ok = apply_updates(part.sg, ops, stage=True)
+        jax.block_until_ready(sg2.csr_live)
+    # and the padded op arrays ride a power-of-two ladder, so a stream
+    # of similar batches reuses one compiled apply
+    assert ops["ea_su"].shape[0] == 8          # 7 adds -> 8
+    assert ops["ed_su"].shape[0] == 1
+
+
+def test_incremental_apply_can_be_forced_or_disabled():
+    """apply(incremental=False) forces the eager rebuild (benchmark
+    baseline); incremental=True raises when the graph cannot stage."""
+    from repro.core.dynamic import NameServer
+    from repro.core.updates import UpdateBatch
+
+    src, dst, w, n = make_graph_family("erdos_renyi", 80, seed=1)
+    part = build(src, dst, n, w, n_cells=2, edge_slack=0.5)
+    ns = NameServer(part)
+    ub = UpdateBatch(ns)
+    ub.add_edge(0, 7, 2.0)
+    sg2, _ = ub.apply(part.sg, incremental=False)
+    assert int(np.asarray(sg2.delta_count).sum()) == 0   # rebuilt eagerly
+    ub.add_edge(1, 9, 1.0)
+    with pytest.raises(ValueError):
+        ub.apply(part.sg.invalidate_csr(), incremental=True)
+
+
+def test_incremental_views_equal_rebuild_random_batches():
+    """Seeded twin of the hypothesis property test (test_properties.py —
+    skipped where hypothesis is absent): two random mixed batches
+    committed through the tombstone/delta path, then a representative
+    program x backend x sweep matrix answers bitwise-identically on the
+    incremental views and on a full with_csr() rebuild of the same
+    graph."""
+    from repro.core import DiffusionSession, diffuse
+    from repro.core.programs import PROGRAMS
+
+    src, dst, w, n = make_graph_family("scale_free", 90, seed=17)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=2,
+                                       edge_slack=1.0, node_slack=0.5)
+    rng = np.random.default_rng(23)
+    for _ in range(2):                      # two accumulating batches
+        for _ in range(5):
+            sess.add_edge(int(rng.integers(0, n)), int(rng.integers(0, n)),
+                          float(0.2 + rng.random()))
+        i = int(rng.integers(0, len(src)))
+        sess.delete_edge(int(src[i]), int(dst[i]))
+        g = sess.add_vertex()
+        sess.add_edge(g, int(rng.integers(0, n)), 1.0)
+        sess.delete_vertex(int(rng.integers(0, n)))
+        sess.commit()
+    assert int(np.asarray(sess.sg.delta_count).sum()) > 0   # really dirty
+    assert int(np.asarray(sess.sg.tomb_count).sum()) > 0
+
+    rebuilt = sess.sg.with_csr()
+    matrix = [("sssp", dict(source=0)), ("cc", {}),
+              ("widest", dict(source=0, track_parents=True)),
+              ("ppr", dict(source=0, eps=1e-5)),
+              ("reach", dict(sources=(0, 7)))]
+    for backend, sweep in [("xla", "pull"), ("xla", "push"),
+                           ("pallas", "auto")]:
+        for name, kw in matrix:
+            prog = PROGRAMS[name].factory(**kw)
+            got, _ = diffuse(sess.sg, prog, backend=backend, sweep=sweep)
+            want, _ = diffuse(rebuilt, prog, backend=backend, sweep=sweep)
+            for k in got:
+                a, b = np.asarray(got[k]), np.asarray(want[k])
+                assert np.array_equal(np.isfinite(a), np.isfinite(b)), (
+                    backend, sweep, name, k)
+                fin = np.isfinite(a)
+                assert np.array_equal(np.where(fin, a, 0),
+                                      np.where(fin, b, 0)), (
+                    backend, sweep, name, k)

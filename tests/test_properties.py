@@ -155,3 +155,91 @@ def test_cca_cost_model_matches_paper_table():
     assert 9.0 < c.speedup < 10.0
     c = cca_cost_model(wedges=1.226e13, triangles=9.65e12)   # wdc
     assert 3.0 < c.speedup < 4.0
+
+
+# --------------------------------------------------------------------------
+# delta-segment incremental CSR maintenance (DESIGN.md §2.9): random mixed
+# op batches leave views that answer every query exactly like a rebuild
+# --------------------------------------------------------------------------
+
+_mixed_ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("add_edge"), st.integers(0, 59),
+                  st.integers(0, 59), st.floats(0.1, 5.0)),
+        st.tuples(st.just("del_edge"), st.integers(0, 400)),
+        st.tuples(st.just("add_vertex"), st.integers(0, 59)),
+        st.tuples(st.just("del_vertex"), st.integers(0, 59)),
+        st.tuples(st.just("touch"), st.integers(0, 59)),
+    ),
+    min_size=1, max_size=12,
+)
+
+# one (backend, sweep) pairing per sweep keeps the jit-compile budget
+# sane while still crossing both kernel backends with all three sweeps
+_INCR_MATRIX = [("xla", "pull"), ("xla", "push"), ("pallas", "auto")]
+
+
+@settings(max_examples=8, deadline=None)
+@given(_mixed_ops, _mixed_ops)
+def test_incremental_views_equal_rebuild_at_query_level(ops1, ops2):
+    """Two random mixed batches committed through the tombstone/delta
+    path, then every registered diffusive program on every
+    backend x sweep pairing answers bitwise-identically on the
+    incremental views and on a full with_csr() rebuild of the same
+    graph (sum programs compact on entry — that *is* their contract)."""
+    from repro.core import DiffusionSession, diffuse
+    from repro.core.generators import make_graph_family
+    from repro.core.programs import PROGRAMS
+
+    src, dst, w, n = make_graph_family("erdos_renyi", 60, seed=21)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=2,
+                                       edge_slack=1.0, node_slack=0.5)
+    edge_list = list(zip(src.tolist(), dst.tolist()))
+    dead: set = set()
+
+    def commit_batch(ops):
+        for op in ops:
+            kind = op[0]
+            if kind == "add_edge":
+                _, u, v, x = op
+                if u not in dead and v not in dead:
+                    sess.add_edge(u, v, x)
+            elif kind == "del_edge":
+                u, v = edge_list[op[1] % len(edge_list)]
+                if u not in dead and v not in dead:
+                    sess.delete_edge(u, v)      # phantom dels are no-ops
+            elif kind == "add_vertex":
+                g = sess.add_vertex()
+                if op[1] not in dead:
+                    sess.add_edge(g, op[1], 1.0)
+            elif kind == "del_vertex":
+                if op[1] not in dead:
+                    dead.add(op[1])
+                    sess.delete_vertex(op[1])
+            else:
+                if op[1] not in dead:
+                    sess.touch(op[1])
+        sess.commit()
+
+    commit_batch(ops1)
+    commit_batch(ops2)
+
+    matrix = [("sssp", {"source": 0}), ("bfs", {"source": 0}), ("cc", {}),
+              ("ppr", {"source": 0, "eps": 1e-5}), ("pagerank", {}),
+              ("widest", {"source": 0, "track_parents": True}),
+              ("reach", {"sources": (0, 7)})]
+    rebuilt = sess.sg.with_csr()
+    for backend, sweep in _INCR_MATRIX:
+        for name, kw in matrix:
+            spec = PROGRAMS[name]
+            prog = spec.factory(**kw)
+            got, _ = diffuse(sess.sg, prog, backend=backend, sweep=sweep)
+            want, _ = diffuse(rebuilt, prog, backend=backend, sweep=sweep)
+            for k in got:
+                a, b = np.asarray(got[k]), np.asarray(want[k])
+                fin = np.isfinite(a) & np.isfinite(b)
+                assert np.array_equal(np.isfinite(a), np.isfinite(b)), (
+                    backend, sweep, name, k)
+                assert np.array_equal(np.where(fin, a, 0),
+                                      np.where(fin, b, 0)), (
+                    backend, sweep, name, k)

@@ -478,3 +478,57 @@ def test_triangles_cached_and_recounted_on_commit():
         assert t3.extra["triangles"] > t1.extra["triangles"]
     finally:
         PROGRAMS["triangles"] = spec
+
+
+def test_session_cache_is_lru_bounded():
+    """Satellite (PR 5): ``max_cache_entries`` bounds the query cache
+    with LRU eviction — long-running streaming sessions (many sources x
+    sweeps x backends) must not grow state without limit.  A cache hit
+    refreshes recency; an evicted entry recomputes on its next query and
+    is no longer repaired by commit()."""
+    src, dst, w, n = make_graph_family("small_world", 100, seed=3)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=2,
+                                       edge_slack=0.3,
+                                       max_cache_entries=2)
+    sess.query("sssp", source=0)
+    sess.query("sssp", source=1)
+    sess.query("sssp", source=0)          # hit: source=0 becomes recent
+    sess.query("sssp", source=2)          # evicts source=1 (LRU)
+    assert len(sess._cache) == 2
+    cached_sources = {dict(k[2]).get("source") for k in sess._cache}
+    assert cached_sources == {0, 2}
+
+    # evicted entries are simply not repaired; surviving ones are
+    sess.add_edge(0, 5, 0.1)
+    info = sess.commit()
+    repaired = {dict(k[2]).get("source") for k in info.repairs}
+    assert repaired == {0, 2}
+
+    # unbounded default unchanged
+    free = DiffusionSession.from_edges(src, dst, n, w, n_cells=2)
+    for s in range(5):
+        free.query("sssp", source=s)
+    assert len(free._cache) == 5
+    with pytest.raises(ValueError):
+        DiffusionSession.from_edges(src, dst, n, w, n_cells=2,
+                                    max_cache_entries=0)
+
+
+def test_sum_programs_compact_once_and_persist():
+    """Sum-combine queries on a dirty graph compact the streams once and
+    the session persists the clean graph (the sort is paid per dirty
+    epoch, not per query) — while min/max queries consume the dirty
+    views directly."""
+    src, dst, w, n = make_graph_family("erdos_renyi", 90, seed=6)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=2,
+                                       edge_slack=0.5)
+    sess.add_edge(0, 7, 2.0)
+    sess.add_edge(7, 3, 1.0)
+    sess.commit()
+    assert int(np.asarray(sess.sg.delta_count).sum()) == 2
+    sess.query("sssp", source=0)          # min: stays dirty
+    assert int(np.asarray(sess.sg.delta_count).sum()) == 2
+    r1 = sess.query("ppr", source=0, eps=1e-5)   # sum: compacts + persists
+    assert int(np.asarray(sess.sg.delta_count).sum()) == 0
+    ref, _ = diffuse(sess.sg.with_csr(), ppr_program(0, eps=1e-5))
+    assert np.array_equal(r1.values, sess.to_global(ref["rank"]))
