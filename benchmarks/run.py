@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call for the timed
 benches; derived = the paper-comparable metric) and writes the same
-records, plus the kernel-backend tag, to ``BENCH_pr5.json`` at the repo
+records, plus the kernel-backend tag, to ``BENCH_pr7.json`` at the repo
 root so the perf trajectory accumulates machine-readably across PRs.
 """
 
@@ -154,6 +154,35 @@ def main() -> None:
                 backend="xla",
             )
 
+    # DESIGN.md §2.10: scaled ingest — partition+CSR build speedup vs the
+    # pre-PR path, skewed-family byte ratios, and graph500 RMAT
+    # generate->partition->query end to end (both asserts live inside)
+    from benchmarks import bench_scaling
+    for r in bench_scaling.run(quick=quick):
+        if r["bench"] == "speedup":
+            _csv(
+                f"scaling/build/{r['family']}/n{r['n']}",
+                r["new_s"] * 1e6,
+                f"speedup_vs_prepr={r['speedup']:.2f};"
+                f"edge_slots={r['new_edge_slots']}",
+            )
+        elif r["bench"] == "bytes":
+            _csv(
+                f"scaling/bytes/{r['family']}",
+                0.0,
+                f"stream_vs_live={r['ratio']:.3f};"
+                f"edge_stream_mb={r['edge_stream_mb']:.1f}",
+            )
+        else:
+            _csv(
+                f"scaling/rmat/s{r['scale']}",
+                r["total_s"] * 1e6,
+                f"us_per_edge={r['us_per_edge']:.3f};"
+                f"part_s={r['part_s']:.2f};layout_mb={r['layout_mb']:.0f};"
+                f"rss_mb={r['rss_mb']:.0f}",
+                backend="xla",
+            )
+
     # Roofline table from any dry-run artifacts present
     from benchmarks import roofline
     rows = roofline.table()
@@ -168,7 +197,7 @@ def main() -> None:
 
     # quick (CI smoke) runs write a sibling file so they never clobber the
     # committed full-size trajectory records
-    fname = "BENCH_pr5.quick.json" if quick else "BENCH_pr5.json"
+    fname = "BENCH_pr7.quick.json" if quick else "BENCH_pr7.json"
     out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                        "..", fname)
     with open(os.path.abspath(out), "w") as f:

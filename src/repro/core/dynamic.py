@@ -160,6 +160,12 @@ def edge_add(sg: ShardedGraph, ns: NameServer, u: int, v: int, w: float):
     patchable views invalidate instead (the escape hatch)."""
     su, lu = ns.resolve(u)
     sv, lv = ns.resolve(v)
+    can_patch = _can_patch(sg)
+    if can_patch and int(sg.delta_count[su]) >= sg.delta_width:
+        # compact BEFORE touching topology: the views are consistent
+        # here, so this is the cheap merge; compacting after the write
+        # would hand the merge a stale stream missing the new edge
+        sg = sg.with_csr()
     free = ~sg.edge_ok[su]
     slot = jnp.argmax(free)  # first free slot
     ok = free[slot]          # False => cell's edge memory is full
@@ -175,15 +181,14 @@ def edge_add(sg: ShardedGraph, ns: NameServer, u: int, v: int, w: float):
     )
     if not bool(ok):
         raise RuntimeError(f"compute cell {su} has no free edge slots")
-    if _can_patch(sg):
-        if int(sg.delta_count[su]) < sg.delta_width:
-            one = jnp.ones((1,), bool)
-            return sg.with_staged_edges(
-                jnp.array([su], jnp.int32), slot[None].astype(jnp.int32),
-                jnp.array([lu], jnp.int32),
-                jnp.array([sv * sg.n_per_shard + lv], jnp.int32),
-                jnp.zeros((1,), jnp.int32), one)
-        return sg.with_csr()        # delta segment full: compact now
+    if can_patch:
+        # the pre-write compaction guarantees delta headroom here
+        one = jnp.ones((1,), bool)
+        return sg.with_staged_edges(
+            jnp.array([su], jnp.int32), slot[None].astype(jnp.int32),
+            jnp.array([lu], jnp.int32),
+            jnp.array([sv * sg.n_per_shard + lv], jnp.int32),
+            jnp.zeros((1,), jnp.int32), one)
     return sg.invalidate_csr()
 
 

@@ -38,6 +38,12 @@ DEFAULT_EDGE_BLOCK = 128
 DELTA_BLOCK_FRACTION = 0.25
 TOMBSTONE_COMPACT_FRACTION = 0.25
 
+# with_csr() compaction switches from the full re-argsort to the staged
+# merge (sorted-prefix compact + delta-only sort + searchsorted merge) once
+# the per-cell stream is at least this wide: below it the merge's extra
+# elementwise passes cost more than the sort they avoid.
+MERGE_COMPACT_MIN_WIDTH = 4096
+
 
 def default_delta_blocks(edges_per_shard: int, block: int) -> int:
     """Staged-delta capacity (in blocks) reserved by a rebuild."""
@@ -117,6 +123,104 @@ def build_push_csr(src_local, edge_ok, csr_perm, n_per_shard: int,
         ssrc = jnp.pad(ssrc, ((0, 0), (0, pad)), constant_values=-1)
         pos = jnp.pad(pos, ((0, 0), (0, pad)), constant_values=-1)
     return perm, ssrc, pos
+
+
+@partial(jax.jit, static_argnames=("sw", "dwid", "ep"))
+def _merge_compact_views(csr_key, csr_perm, csr_live, push_src, push_perm,
+                         edge_ok, *, sw: int, dwid: int, ep: int):
+    """Jitted body of :meth:`ShardedGraph._merge_compact` — one fused
+    program per (S, width) shape, so the merge's many elementwise passes
+    don't pay eager dispatch at scale.  Must be traced under ``enable_x64``
+    (the composites are int64); all outputs are int32.
+
+    XLA:CPU executes 2-D index scatters slowly, so every scatter here is a
+    flattened 1-D scatter, and the (key, slot) pair is carried as the single
+    int64 composite ``key * (ep + 1) + slot`` — exactly invertible by
+    divmod — so each view needs only 4 scatters total."""
+    s_ = edge_ok.shape[0]
+    w = sw + dwid
+    i32 = jnp.int32
+    idx_a = jnp.arange(sw, dtype=i32)[None, :]
+    idx_b = jnp.arange(dwid, dtype=i32)[None, :]
+    idx_w = jnp.arange(w, dtype=i32)[None, :]
+    row_off_w = (jnp.arange(s_, dtype=i32) * w)[:, None]
+    row_off_ep = (jnp.arange(s_, dtype=i32) * ep)[:, None]
+    oob_w = s_ * w
+    oob_ep = s_ * ep
+    dead_m = ~edge_ok
+    slot_ids = jnp.broadcast_to(jnp.arange(ep, dtype=i32), (s_, ep))
+    dead_rank = jnp.cumsum(dead_m, axis=1).astype(i32) - 1
+    n_dead = jnp.sum(dead_m, axis=1).astype(i32)
+
+    def flat_set(dest, pos, valid, row_off, oob, vals):
+        """dest[s, pos] = vals where valid, via a flattened 1-D scatter."""
+        flat = jnp.where(valid, pos + row_off, oob)
+        return dest.reshape(-1).at[flat.reshape(-1)].set(
+            vals.reshape(-1), mode="drop").reshape(dest.shape)
+
+    def compact_merge(key, perm, live, dead_val):
+        """One view's (key, perm, live-mask) -> merged (key, perm,
+        [S, ep] slot -> new position inverse)."""
+        comp_base = jnp.asarray(ep + 1, jnp.int64)
+        big = jnp.asarray(1 << 60, jnp.int64)
+        live_a = live[:, :sw] & (key[:, :sw] != dead_val)
+        comp_src = jnp.where(
+            live_a,
+            key[:, :sw].astype(jnp.int64) * comp_base + perm[:, :sw],
+            big)
+        pos_a0 = jnp.cumsum(live_a, axis=1).astype(i32) - 1
+        comp_a = flat_set(jnp.full((s_, sw), big, jnp.int64),
+                          pos_a0, live_a,
+                          (jnp.arange(s_, dtype=i32) * sw)[:, None],
+                          s_ * sw, comp_src)
+        n_a = jnp.sum(live_a, axis=1).astype(i32)
+
+        live_b = live[:, sw:] & (key[:, sw:] != dead_val)
+        comp_src_b = jnp.where(
+            live_b,
+            key[:, sw:].astype(jnp.int64) * comp_base + perm[:, sw:],
+            big)
+        comp_b = jnp.sort(comp_src_b, axis=1)
+        n_b = jnp.sum(live_b, axis=1).astype(i32)
+
+        ins_a = jax.vmap(jnp.searchsorted)(comp_b, comp_a).astype(i32)
+        ins_b = jax.vmap(jnp.searchsorted)(comp_a, comp_b).astype(i32)
+        pos_a = idx_a + ins_a
+        pos_b = idx_b + ins_b
+
+        merged = jnp.full((s_, w), big, jnp.int64)
+        merged = flat_set(merged, pos_a, idx_a < n_a[:, None],
+                          row_off_w, oob_w, comp_a)
+        merged = flat_set(merged, pos_b, idx_b < n_b[:, None],
+                          row_off_w, oob_w, comp_b)
+        n_live = n_a + n_b
+        live_pos = idx_w < n_live[:, None]
+        new_key = jnp.where(
+            live_pos, (merged // comp_base).astype(i32), dead_val)
+        new_perm = jnp.where(
+            live_pos, (merged % comp_base).astype(i32), 0)
+        # dead slots tail the live region in ascending slot order — the
+        # stable argsort's tie-break on the shared sentinel key
+        dead_pos = (n_live[:, None] + dead_rank).astype(i32)
+        new_perm = flat_set(new_perm, dead_pos, dead_m, row_off_w, oob_w,
+                            slot_ids)
+        # positions [0, n_live + n_dead) hold each slot id exactly once,
+        # so the inverse is one scatter of position keyed by slot
+        occupied = idx_w < (n_live + n_dead)[:, None]
+        inv = flat_set(jnp.zeros((s_, ep), i32),
+                       jnp.where(occupied, new_perm, ep),
+                       occupied, row_off_ep, oob_ep,
+                       jnp.broadcast_to(idx_w, (s_, w)))
+        return new_key, new_perm, inv
+
+    key, perm, inv = compact_merge(csr_key, csr_perm, csr_live, -1)
+    psrc, pperm, pinv = compact_merge(push_src, push_perm, push_src >= 0, -1)
+    ppos = jnp.where(
+        psrc >= 0,
+        jnp.take_along_axis(
+            inv, jnp.clip(pperm, 0, ep - 1).astype(i32), axis=-1),
+        -1)
+    return key, perm, inv, psrc, pperm, pinv, ppos
 
 
 @partial(
@@ -309,12 +413,34 @@ class ShardedGraph:
         """Rebuild ("compact") both blocked-CSR views from the current
         topology: tombstones fold out, staged delta edges land in sorted
         position, and a fresh (empty) delta segment of ``delta_blocks``
-        staged blocks is appended to each view."""
+        staged blocks is appended to each view.
+
+        When the graph already carries consistent views (every mutation
+        patched them — the tombstone/delta invariant) and the geometry is
+        unchanged, the rebuild is a *merge* (DESIGN.md §2.10): the live
+        sorted prefix is already in (key, slot) order, so compaction is a
+        rank/compact pass plus a sort of only the small delta segment and
+        a two-way ``searchsorted`` merge — bitwise-identical output to
+        the full stable argsort at a fraction of its cost.  Graphs whose
+        views were dropped (:meth:`invalidate_csr`) take the full-sort
+        path, which is also the only path reachable in-trace."""
         block = block or self.csr_block
         if delta_blocks is None:
             delta_blocks = self.delta_blocks
         if delta_blocks < 0:
             delta_blocks = default_delta_blocks(self.edges_per_shard, block)
+        if (self.csr_perm is not None and self.delta_count is not None
+                and block == self.csr_block
+                and delta_blocks == self.delta_blocks):
+            # every mutation path either patches the views and bumps a
+            # counter, or drops the views entirely — so zero counters on
+            # present views means they are already exactly what a rebuild
+            # would produce
+            if (not self.delta_count.any()) and (
+                    self.tomb_count is None or not self.tomb_count.any()):
+                return self
+            if self.sorted_width >= MERGE_COMPACT_MIN_WIDTH:
+                return self._merge_compact()
         s_, ep = self.src_local.shape
         perm, key = build_csr(self.dst_shard, self.dst_local, self.edge_ok,
                               self.n_shards, self.n_per_shard, block)
@@ -343,6 +469,71 @@ class ShardedGraph:
             push_inv=pinv, delta_count=zero, tomb_count=zero,
             csr_block=block, delta_blocks=delta_blocks,
         )
+
+    def _merge_compact(self) -> "ShardedGraph":
+        """Compact both views by merging instead of re-sorting.
+
+        The sorted region's live entries are already in ascending
+        ``(key, slot)`` composite order — exactly the order a stable
+        argsort of the full key stream would produce (its tie-break *is*
+        slot order, and slots are unique per cell) — so folding the
+        tombstones out is a cumsum/scatter compact, only the delta
+        segment (<= ``delta_width`` entries) is sorted, and the two
+        ascending streams meet through a pair of vmapped
+        ``searchsorted`` calls.  Dead slots fill the tail in ascending
+        slot order, reproducing the full rebuild bit for bit.  Pure jnp
+        and shape-static."""
+        from jax.experimental import enable_x64
+
+        # the (key, slot) composites need 64-bit ints at scale; every
+        # *stored* array stays int32/bool — only jitted intermediates are
+        # wide, so the x64 flag never leaks outside this call
+        with enable_x64():
+            key, perm, inv, psrc, pperm, pinv, ppos = _merge_compact_views(
+                self.csr_key, self.csr_perm, self.csr_live,
+                self.push_src, self.push_perm, self.edge_ok,
+                sw=self.sorted_width, dwid=self.delta_width,
+                ep=self.edges_per_shard)
+        zero = jnp.zeros((self.src_local.shape[0],), jnp.int32)
+        return dataclasses.replace(
+            self, csr_perm=perm, csr_key=key, csr_live=key >= 0,
+            csr_inv=inv, push_perm=pperm, push_src=psrc, push_pos=ppos,
+            push_inv=pinv, delta_count=zero, tomb_count=zero,
+        )
+
+    def layout_bytes(self) -> dict:
+        """Host-side accounting of the device layout's byte footprint.
+
+        ``edge_stream`` is the per-slot edge fields, ``csr_views`` both
+        blocked-CSR views (and their inverses/counters), ``node`` the
+        vertex-slot arrays.  ``live_edge_bytes`` is the floor: live
+        edges x bytes-per-edge-slot — the degree-aware capacity model
+        keeps ``edge_stream`` within ~2x of it even on skewed families
+        (DESIGN.md §2.10)."""
+        def nbytes(*arrays):
+            return int(sum(a.size * a.dtype.itemsize
+                           for a in arrays if a is not None))
+
+        edge_stream = nbytes(self.src_local, self.dst_shard, self.dst_local,
+                             self.dst_gid, self.weight, self.edge_ok)
+        slot_bytes = edge_stream // max(1, self.n_shards
+                                        * self.edges_per_shard)
+        live_edges = int(jnp.sum(self.edge_ok))
+        return {
+            "edge_stream": edge_stream,
+            "csr_views": nbytes(self.csr_perm, self.csr_key, self.csr_live,
+                                self.csr_inv, self.push_perm, self.push_src,
+                                self.push_pos, self.push_inv,
+                                self.delta_count, self.tomb_count),
+            "node": nbytes(self.node_ok, self.gid, self.out_degree),
+            "live_edges": live_edges,
+            "live_edge_bytes": live_edges * slot_bytes,
+            "total": edge_stream + nbytes(
+                self.csr_perm, self.csr_key, self.csr_live, self.csr_inv,
+                self.push_perm, self.push_src, self.push_pos, self.push_inv,
+                self.delta_count, self.tomb_count, self.node_ok, self.gid,
+                self.out_degree),
+        }
 
     def invalidate_csr(self) -> "ShardedGraph":
         """Drop both CSR views without paying the re-sorts — the escape

@@ -6,6 +6,15 @@ approximates it with a BFS traversal order so that topologically close
 vertices land on the same cell, minimizing cross-cell operon traffic; the
 ``hash`` partitioner is the adversarial baseline (no locality); ``block``
 keeps the generator's vertex order.
+
+The build path is sized for graph500 s18-s20 inputs (DESIGN.md §2.10):
+everything is vectorized numpy (no per-vertex or per-shard Python loops),
+cells are cut by a degree-aware capacity budget so the per-cell edge
+capacity tracks the *mean* cell load instead of the skew tail, and edges are
+placed in ``(owner, dst_key)`` order by ONE stable sort — which makes the
+placed slot order itself the destination-sorted pull-CSR stream, so both
+blocked-CSR views are assembled directly on the host without any device
+argsort.
 """
 
 from __future__ import annotations
@@ -13,9 +22,20 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from .graph import Graph, ShardedGraph
+from .graph import Graph, ShardedGraph, default_delta_blocks, DEFAULT_EDGE_BLOCK
 
 __all__ = ["partition", "Partitioned"]
+
+# Above this vertex count ``strategy="locality"`` falls back to ``block``:
+# the BFS order no longer pays for itself at that scale (and the generator
+# families we run there are label-permuted RMAT, where BFS locality is weak).
+LOCALITY_FALLBACK_NODES = 1 << 20
+
+# Equal-vertex chunking is kept (it preserves the strategy's neighborhood
+# contiguity) until its max-cell edge count exceeds this multiple of the
+# mean — past that, the skew tail would dominate the per-cell capacity, so
+# the cut switches to the degree-aware budget (DESIGN.md §2.10).
+CAPACITY_SKEW_THRESHOLD = 1.75
 
 
 class Partitioned:
@@ -44,7 +64,13 @@ class Partitioned:
 
 
 def _bfs_order(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
-    """BFS traversal order over all components (host side)."""
+    """BFS traversal order over all components (host side, vectorized).
+
+    Level-synchronous: each whole frontier's neighbor lists are gathered in
+    one repeat/advanced-index pass and deduplicated with ``np.unique``, so
+    the Python-level work is O(diameter) per component instead of
+    O(vertices + edges).
+    """
     order = np.argsort(src, kind="stable")
     s_sorted, d_sorted = src[order], dst[order]
     starts = np.searchsorted(s_sorted, np.arange(n))
@@ -52,23 +78,48 @@ def _bfs_order(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
     visited = np.zeros(n, bool)
     out = np.empty(n, np.int64)
     k = 0
-    from collections import deque
-
-    for root in range(n):
-        if visited[root]:
-            continue
+    root = 0
+    while k < n:
+        while root < n and visited[root]:  # amortized O(n) root scan
+            root += 1
         visited[root] = True
-        q = deque([root])
-        while q:
-            v = q.popleft()
-            out[k] = v
-            k += 1
-            for e in range(starts[v], ends[v]):
-                u = d_sorted[e]
-                if not visited[u]:
-                    visited[u] = True
-                    q.append(u)
+        frontier = np.array([root], np.int64)
+        while frontier.size:
+            out[k:k + frontier.size] = frontier
+            k += frontier.size
+            cnt = ends[frontier] - starts[frontier]
+            total = int(cnt.sum())
+            if not total:
+                break
+            # gather the concatenated neighbor lists of the whole frontier
+            offs = np.cumsum(cnt) - cnt
+            idx = np.repeat(starts[frontier] - offs, cnt) + np.arange(total)
+            nbrs = d_sorted[idx]
+            nbrs = nbrs[~visited[nbrs]]
+            # first-occurrence dedup in discovery order: with a FIFO
+            # queue the traversal is exactly level-synchronous, so this
+            # reproduces the sequential BFS order bit for bit
+            _, first = np.unique(nbrs, return_index=True)
+            nbrs = nbrs[np.sort(first)]
+            visited[nbrs] = True
+            frontier = nbrs
     return out
+
+
+def _degree_aware_cut(live_deg_sorted: np.ndarray, n_shards: int):
+    """Cut an ordered vertex sequence into ``n_shards`` contiguous chunks
+    balanced by cost = out_degree + t (t = mean live degree, min 1), so a
+    cell's edge count tracks the budget instead of the skew tail while its
+    vertex count stays within ~2x of even.  Returns the per-rank cell id.
+    """
+    n_live = live_deg_sorted.shape[0]
+    if n_live == 0:
+        return np.empty(0, np.int64)
+    t = max(1, int(live_deg_sorted.sum()) // n_live)
+    cost = live_deg_sorted.astype(np.int64) + t
+    prefix = np.cumsum(cost) - cost            # exclusive prefix sum
+    budget = -(-int(cost.sum()) // n_shards)
+    return np.minimum(prefix // budget, n_shards - 1)
 
 
 def partition(
@@ -92,6 +143,8 @@ def partition(
     # slots evenly over the cells so dynamic vertex_add works everywhere.
     live = np.where(nok)[0]
     n_live = live.shape[0]
+    if strategy == "locality" and n > LOCALITY_FALLBACK_NODES:
+        strategy = "block"
     if strategy == "block":
         live_sorted = live
     elif strategy == "hash":
@@ -105,36 +158,65 @@ def partition(
     else:  # pragma: no cover
         raise ValueError(f"unknown strategy {strategy!r}")
 
-    q = -(-n_live // n_shards)            # live vertices per cell (ceil)
-    n_per = max(q, -(-n // n_shards))     # room for the spread free slots
+    # Contiguous chunking of the ordered live vertices.  Equal-vertex
+    # chunks by default (old behavior: preserves neighborhood contiguity
+    # exactly); when that concentrates the hub tail into one cell past
+    # CAPACITY_SKEW_THRESHOLD x the mean edge load, switch to the
+    # degree-aware budget so capacity tracks live edges instead of skew.
+    live_deg = np.bincount(src[eok], minlength=n)
+    deg_ranked = live_deg[live_sorted]
+    q = max(1, -(-n_live // n_shards))
+    eq_cells = np.minimum(np.arange(n_live) // q, n_shards - 1)
+    eq_load = np.bincount(eq_cells, weights=deg_ranked, minlength=n_shards)
+    mean_load = max(1.0, float(deg_ranked.sum()) / n_shards)
+    if eq_load.max(initial=0.0) > CAPACITY_SKEW_THRESHOLD * mean_load:
+        cell_of_rank = _degree_aware_cut(deg_ranked, n_shards)
+    else:
+        cell_of_rank = eq_cells
+    cell_counts = np.bincount(cell_of_rank, minlength=n_shards)
+    starts = np.concatenate([[0], np.cumsum(cell_counts)])[:-1]
+    n_per = max(int(cell_counts.max(initial=0)), -(-n // n_shards))
     owner = np.zeros(n, np.int32)
     local = np.zeros(n, np.int32)
     r = np.arange(n_live)
-    owner[live_sorted] = (r // q).astype(np.int32)
-    local[live_sorted] = (r % q).astype(np.int32)
-    # free (dead) slots fill the remaining (shard, local) positions
-    taken = np.zeros((n_shards, n_per), bool)
-    taken[owner[live_sorted], local[live_sorted]] = True
-    free_pos = np.argwhere(~taken)
+    owner[live_sorted] = cell_of_rank.astype(np.int32)
+    local[live_sorted] = (r - starts[cell_of_rank]).astype(np.int32)
+    # free (dead) slots fill the remaining (shard, local) positions in
+    # row-major order — pure scatter, no Python loop over dead vertices
     dead = np.where(~nok)[0]
-    for k, v in enumerate(dead):
-        owner[v], local[v] = free_pos[k % len(free_pos)]
+    if dead.size:
+        free_per_cell = n_per - cell_counts
+        cumfree = np.cumsum(free_per_cell)
+        k = np.arange(dead.size)
+        cell = np.searchsorted(cumfree, k, side="right")
+        within = k - (cumfree[cell] - free_per_cell[cell])
+        owner[dead] = cell.astype(np.int32)
+        local[dead] = (cell_counts[cell] + within).astype(np.int32)
 
-    # Live edges only; pad per shard below.
-    e_src, e_dst, e_w = src[eok], dst[eok], w[eok]
+    # Live edges, sorted ONCE by (owner cell, destination key): contiguous
+    # runs per cell, already in pull-CSR order — slot order IS stream order.
+    # The pair is packed into one int64 so a single radix-free argsort
+    # replaces lexsort's two stable passes; ties (parallel edges to one
+    # destination in one cell) may land in any order — every view below
+    # and the with_csr() rebuild tie-break on the slot order this sort
+    # *defines*, so any deterministic order is self-consistent.
+    e_idx = np.where(eok)[0]
+    e_src, e_dst, e_w = src[e_idx], dst[e_idx], w[e_idx]
     e_owner = owner[e_src]
-    order = np.argsort(e_owner, kind="stable")
-    e_src, e_dst, e_w, e_owner = (
-        e_src[order],
-        e_dst[order],
-        e_w[order],
-        e_owner[order],
-    )
+    e_key = owner[e_dst].astype(np.int64) * n_per + local[e_dst]
+    order = np.argsort(
+        e_owner * (np.int64(n_shards) * n_per) + e_key)
+    e_src, e_dst, e_w = e_src[order], e_dst[order], e_w[order]
+    e_owner, e_key = e_owner[order], e_key[order]
     counts = np.bincount(e_owner, minlength=n_shards)
-    # distribute free (slack) edge capacity evenly over the cells so
-    # dynamic edge_add works on every cell
+
+    # Degree-aware capacity on the block ladder: the balanced cut keeps
+    # counts.max() near the mean, so capacity tracks live edges, not the
+    # old global-max padding; slack spreads evenly for dynamic edge_add.
     slack_total = int(eok.shape[0] - eok.sum())
-    ep = max(1, int(counts.max()) + -(-slack_total // n_shards))
+    block = DEFAULT_EDGE_BLOCK
+    epc = max(1, int(counts.max(initial=0)) + -(-slack_total // n_shards))
+    ep = -(-epc // block) * block    # sorted_width == ep: no view re-pad
 
     S = n_shards
     src_local = np.zeros((S, ep), np.int32)
@@ -144,13 +226,17 @@ def partition(
     weight = np.zeros((S, ep), np.float32)
     edge_ok = np.zeros((S, ep), bool)
 
-    offsets = np.concatenate([[0], np.cumsum(counts)])
+    # per-cell runs are contiguous after the sort, so assembly is S
+    # sequential slice copies (memcpy-speed), not element scatters
+    e_offsets = np.concatenate([[0], np.cumsum(counts)])
+    sl = local[e_src]
+    do_, dl = owner[e_dst], local[e_dst]
     for s in range(S):
-        lo, hi = offsets[s], offsets[s + 1]
+        lo, hi = e_offsets[s], e_offsets[s + 1]
         k = hi - lo
-        src_local[s, :k] = local[e_src[lo:hi]]
-        dst_shard[s, :k] = owner[e_dst[lo:hi]]
-        dst_local[s, :k] = local[e_dst[lo:hi]]
+        src_local[s, :k] = sl[lo:hi]
+        dst_shard[s, :k] = do_[lo:hi]
+        dst_local[s, :k] = dl[lo:hi]
         dst_gid[s, :k] = e_dst[lo:hi]
         weight[s, :k] = e_w[lo:hi]
         edge_ok[s, :k] = True
@@ -161,8 +247,41 @@ def partition(
     gid[owner, local] = np.arange(n, dtype=np.int32)
 
     deg = np.zeros((S, n_per), np.int32)
-    live_deg = np.bincount(e_src, minlength=n)
     deg[owner, local] = live_deg[:n]
+
+    # Both blocked-CSR views assembled host-side, bitwise-identical to a
+    # with_csr() rebuild: slots are placed in destination-key order, so the
+    # pull view's sorted region is the identity permutation; the push view
+    # is the one remaining stable sort (by source local index).
+    delta_blocks = default_delta_blocks(ep, block)
+    dw = delta_blocks * block
+    width = ep + dw
+    csr_perm = np.zeros((S, width), np.int32)
+    csr_perm[:, :ep] = np.arange(ep, dtype=np.int32)
+    csr_key = np.full((S, width), -1, np.int32)
+    ek32 = e_key.astype(np.int32)
+    for s in range(S):
+        lo, hi = e_offsets[s], e_offsets[s + 1]
+        csr_key[s, : hi - lo] = ek32[lo:hi]
+    csr_inv = np.broadcast_to(np.arange(ep, dtype=np.int32), (S, ep)).copy()
+
+    pkey = np.where(edge_ok, src_local, n_per)
+    # (src, slot) composite is collision-free, so the default sort equals
+    # a stable argsort of pkey bit for bit at ~half the cost
+    pcomp = pkey.astype(np.int64) * ep + np.arange(ep, dtype=np.int64)
+    pperm = np.argsort(pcomp, axis=1).astype(np.int32)
+    psrc = np.take_along_axis(pkey, pperm, axis=1).astype(np.int32)
+    psrc[psrc >= n_per] = -1
+    ppos = np.where(psrc >= 0, pperm, -1)     # dense position == slot here
+    pinv = np.zeros((S, ep), np.int32)
+    np.put_along_axis(pinv, pperm, np.broadcast_to(
+        np.arange(ep, dtype=np.int32), (S, ep)), axis=1)
+    push_perm = np.zeros((S, width), np.int32)
+    push_perm[:, :ep] = pperm
+    push_src = np.full((S, width), -1, np.int32)
+    push_src[:, :ep] = psrc
+    push_pos = np.full((S, width), -1, np.int32)
+    push_pos[:, :ep] = ppos
 
     sg = ShardedGraph(
         src_local=jnp.asarray(src_local),
@@ -177,5 +296,17 @@ def partition(
         n_shards=S,
         n_per_shard=n_per,
         n_nodes=n,
-    ).with_csr()    # blocked-CSR view built once here; updates refresh it
+        csr_perm=jnp.asarray(csr_perm),
+        csr_key=jnp.asarray(csr_key),
+        csr_live=jnp.asarray(csr_key >= 0),
+        csr_inv=jnp.asarray(csr_inv),
+        push_perm=jnp.asarray(push_perm),
+        push_src=jnp.asarray(push_src),
+        push_pos=jnp.asarray(push_pos),
+        push_inv=jnp.asarray(pinv),
+        delta_count=jnp.zeros((S,), jnp.int32),
+        tomb_count=jnp.zeros((S,), jnp.int32),
+        csr_block=block,
+        delta_blocks=delta_blocks,
+    )
     return Partitioned(sg, owner, local, n_real=int(nok.sum()))

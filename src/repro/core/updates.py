@@ -310,13 +310,13 @@ class UpdateBatch:
             vg = np.empty(n, np.int32)
             w = np.empty(n, np.float32)
             rank = np.empty(n, np.int32)         # index among cell's adds
-            per_cell: Counter = Counter()
+            cell_rank: Counter = Counter()       # must NOT shadow per_cell
             for j, (u, v, wj) in enumerate(self._eadds):
                 su[j], lu[j] = ns.resolve(u)
                 sv[j], lv[j] = ns.resolve(v)
                 vg[j], w[j] = v, wj
-                rank[j] = per_cell[int(su[j])]
-                per_cell[int(su[j])] += 1
+                rank[j] = cell_rank[int(su[j])]
+                cell_rank[int(su[j])] += 1
             ops["ea_su"] = _pad(su, k, 0)
             ops["ea_lu"] = _pad(lu, k, np_)      # pad -> degree add drops
             ops["ea_sv"] = _pad(sv, k, 0)
@@ -352,6 +352,17 @@ class UpdateBatch:
             crowded = np.any(
                 tc + per_cell["dels"]
                 > TOMBSTONE_COMPACT_FRACTION * sg.edges_per_shard)
+            if (overflow or crowded) and np.any(dc + tc):
+                # accumulated dirt tripped the policy: fold it out with
+                # the merge compaction (views are consistent here) and
+                # retry staging into the fresh delta segment — only a
+                # batch too big for an *empty* segment forces the eager
+                # full rebuild below
+                sg = sg.with_csr()
+                overflow = np.any(per_cell["adds"] > sg.delta_width)
+                crowded = np.any(
+                    per_cell["dels"]
+                    > TOMBSTONE_COMPACT_FRACTION * sg.edges_per_shard)
             if overflow or crowded:
                 stage = False
         if incremental is True and topo and not stage:
@@ -370,7 +381,10 @@ class UpdateBatch:
                     f"(batched edge_add #{j})"
                 )
         if topo and not stage:
-            new_sg = new_sg.with_csr()   # eager rebuild (compaction)
+            # eager rebuild (compaction): apply_updates(stage=False)
+            # mutated topology without patching the views, so drop them
+            # first — the merge compaction must never read stale streams
+            new_sg = new_sg.invalidate_csr().with_csr()
         elif stage and self._vdels:
             # vertex deletes tombstone a data-dependent number of edges
             # (every in/out edge of the victim) that the pre-apply
