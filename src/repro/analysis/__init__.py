@@ -1,0 +1,58 @@
+"""repro.analysis — the diffusion-engine sanitizer (DESIGN.md §2.11).
+
+Three layers, ordered by when they fire:
+
+* :mod:`~.lint` — a repo-specific AST lint pass (stdlib-only; runnable
+  as ``python -m repro.analysis.lint src/repro/core src/repro/kernels``)
+  catching host syncs, Python shard loops, unguarded int64 arithmetic,
+  and action-body mutation *before* the code ever runs;
+* :mod:`~.verify` — the registration-time program verifier: every
+  lowered :class:`~repro.core.programs.DiffusiveProgram` is abstractly
+  traced against its Field schema and its monoid spot-checked, so a
+  broken spec fails at build time with a precise error instead of a
+  bitwise mismatch at query time;
+* :mod:`~.sanitizer` — the runtime sanitizer harness: a context manager
+  wiring ``jax.transfer_guard`` + a jit cache-miss counter (and
+  optionally ``debug_nans``) around warm-path code that must never
+  transfer or retrace.
+
+All exports resolve lazily: the lint layer must stay importable without
+jax (the CI lint job has no accelerator stack warm), and eagerly
+importing ``.lint`` here would shadow ``python -m repro.analysis.lint``
+with a runpy double-import warning.
+"""
+
+__all__ = [
+    "Finding",
+    "lint_paths",
+    "ProgramVerificationError",
+    "verify_program",
+    "RetraceError",
+    "sanitize",
+    "SanitizeReport",
+    "tracked_jits",
+]
+
+
+_LAZY = {
+    "Finding": "lint",
+    "lint_paths": "lint",
+    "ProgramVerificationError": "verify",
+    "verify_program": "verify",
+    "RetraceError": "sanitizer",
+    "sanitize": "sanitizer",
+    "SanitizeReport": "sanitizer",
+    "tracked_jits": "sanitizer",
+}
+
+
+def __getattr__(name):
+    submodule = _LAZY.get(name)
+    if submodule is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    value = getattr(importlib.import_module(f".{submodule}", __name__), name)
+    globals()[name] = value     # cache: later lookups skip __getattr__
+    return value

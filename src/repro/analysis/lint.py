@@ -1,0 +1,440 @@
+"""Repo-specific AST lint pass (DESIGN.md §2.11) — rules ruff cannot
+express because they depend on this engine's execution model: which
+functions are reachable from the jitted hot paths, which Python loops
+are static unrolls, and which wide intermediates are ``enable_x64``-
+guarded.
+
+Rule catalog
+------------
+
+``host-sync``
+    Host round-trips inside functions reachable from the hot roots
+    (``diffuse`` / ``diffuse_from`` / ``_run_rounds`` /
+    ``diffuse_spmd_step`` / ``apply_updates`` / ``edge_relax*``):
+    ``np.asarray`` / ``np.array`` materialization, ``.item()`` /
+    ``.tolist()`` / ``.block_until_ready()``, ``jax.device_get``,
+    ``int()`` / ``float()`` / ``bool()`` over a computed (call-bearing)
+    expression, and implicit ``bool()`` of a device array via
+    ``.any()`` / ``.all()`` in an ``if`` / ``while`` test.  Each of
+    these forces a device->host sync (or trips
+    ``jax.transfer_guard("disallow")``) when it runs per round instead
+    of per query.
+
+``host-loop``
+    Python ``for`` statements in hot-reachable functions whose iterable
+    is not a ``range(...)`` (static unrolls over a shape are fine;
+    loops over shard/cell *containers* serialize the engine on the
+    host).
+
+``int64``
+    ``jnp.int64`` / ``jnp.uint64`` used lexically outside a
+    ``with enable_x64():`` block (checked file-wide, not just on hot
+    paths).  Without the x64 flag jax silently degrades these to 32-bit
+    — the composite-key merge paths would corrupt at scale.
+
+``mutation``
+    Assignment into a subscript (``arr[i] = ...``, ``arr[i] += ...``)
+    inside an ``emit`` / ``receive`` / ``on_send`` action body.  Action
+    bodies are traced into the relaxation kernels; in-place mutation of
+    a captured or argument array is either a tracer error or — worse —
+    a silent host-side aliasing bug.
+
+Allowlist convention
+--------------------
+
+Append ``# analysis: allow(<rule>)`` — optionally
+``# analysis: allow(<rule>): <one-line justification>`` — to the
+offending line to suppress one finding, or to the ``def`` line of the
+enclosing function to allow that rule for the whole body.  Several
+rules may be listed comma-separated.
+
+CLI
+---
+
+``python -m repro.analysis.lint PATH [PATH ...]`` scans ``.py`` files
+under each path (building one cross-file call graph for reachability),
+prints findings as ``path:line:col: rule: message``, and exits nonzero
+iff any finding survives the allowlist.  Stdlib-only: it runs in the CI
+lint job beside ruff without importing jax.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from dataclasses import dataclass, field
+from pathlib import Path
+
+__all__ = ["Finding", "lint_paths", "main", "RULES", "HOT_ROOTS"]
+
+RULES = ("host-sync", "host-loop", "int64", "mutation")
+
+# Hot roots: the jitted engine entry points plus the host orchestration
+# wrappers that run once per *round-trip-free* query.  Anything they can
+# reach (by name, cross-module) must stay sync-free.
+HOT_ROOTS = frozenset({
+    "diffuse", "diffuse_from", "_run_rounds", "diffuse_spmd_step",
+    "apply_updates",
+})
+HOT_ROOT_PREFIXES = ("edge_relax",)
+
+_NP_MODULE_NAMES = frozenset({"np", "numpy", "onp"})
+_SYNC_METHODS = frozenset({"item", "tolist", "block_until_ready"})
+_SCALARIZERS = frozenset({"int", "float", "bool"})
+_ACTION_BODY_RE = re.compile(r"^(emit|receive|on_send)")
+_ALLOW_RE = re.compile(r"#\s*analysis:\s*allow\(([^)]*)\)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule}: {self.message}"
+
+
+@dataclass
+class _Func:
+    """One function/method definition plus its outgoing call names."""
+
+    name: str
+    node: ast.AST
+    path: str
+    def_line: int
+    calls: set = field(default_factory=set)
+    children: list = field(default_factory=list)
+
+
+# --------------------------------------------------------------------------
+# collection: functions + call edges (cross-module, name-matched)
+# --------------------------------------------------------------------------
+
+def _called_name(call: ast.Call) -> str | None:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def _collect_functions(tree: ast.Module, path: str) -> list[_Func]:
+    """All function defs in ``tree`` with their call-name edges.
+
+    Calls are attributed to the innermost enclosing function; nested
+    defs become ``children`` (a reachable function's nested defs are
+    reachable — they run inside its trace)."""
+    funcs: list[_Func] = []
+
+    def visit(node, owner: _Func | None):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                fn = _Func(child.name, child, path, child.lineno)
+                funcs.append(fn)
+                if owner is not None:
+                    owner.children.append(fn)
+                visit(child, fn)
+            else:
+                if owner is not None and isinstance(child, ast.Call):
+                    name = _called_name(child)
+                    if name:
+                        owner.calls.add(name)
+                visit(child, owner)
+
+    visit(tree, None)
+    return funcs
+
+
+def _reachable(funcs: list[_Func]) -> set[int]:
+    """ids of function nodes reachable from the hot roots (BFS over the
+    name-matched call graph; conservative — any def matching a called
+    bare/attr name is an edge target)."""
+    by_name: dict[str, list[_Func]] = {}
+    for fn in funcs:
+        by_name.setdefault(fn.name, []).append(fn)
+
+    def is_root(name: str) -> bool:
+        return name in HOT_ROOTS or any(
+            name.startswith(p) for p in HOT_ROOT_PREFIXES)
+
+    seen: set[int] = set()
+    work = [fn for fn in funcs if is_root(fn.name)]
+    while work:
+        fn = work.pop()
+        if id(fn.node) in seen:
+            continue
+        seen.add(id(fn.node))
+        work.extend(fn.children)       # nested defs run inside the trace
+        for name in fn.calls:
+            work.extend(by_name.get(name, ()))
+    return seen
+
+
+# --------------------------------------------------------------------------
+# the rules
+# --------------------------------------------------------------------------
+
+def _walk_shallow(fn_node: ast.AST):
+    """Walk a function body without descending into nested defs (they
+    are linted as functions in their own right)."""
+    stack = list(ast.iter_child_nodes(fn_node))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def _has_computing_call(expr: ast.AST) -> bool:
+    """True when the expression contains a call other than len()/range()
+    — the signature of a value that may be a device array."""
+    for sub in ast.walk(expr):
+        if isinstance(sub, ast.Call):
+            f = sub.func
+            if isinstance(f, ast.Name) and f.id in ("len", "range"):
+                continue
+            return True
+    return False
+
+
+def _check_host_sync(fn: _Func, out: list[Finding]):
+    for node in _walk_shallow(fn.node):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute):
+                if f.attr in _SYNC_METHODS:
+                    out.append(Finding(
+                        fn.path, node.lineno, node.col_offset, "host-sync",
+                        f".{f.attr}() forces a device->host sync in "
+                        f"hot-reachable {fn.name!r}"))
+                elif (f.attr in ("asarray", "array")
+                        and isinstance(f.value, ast.Name)
+                        and f.value.id in _NP_MODULE_NAMES):
+                    out.append(Finding(
+                        fn.path, node.lineno, node.col_offset, "host-sync",
+                        f"{f.value.id}.{f.attr}() materializes on host in "
+                        f"hot-reachable {fn.name!r}"))
+                elif f.attr == "device_get":
+                    out.append(Finding(
+                        fn.path, node.lineno, node.col_offset, "host-sync",
+                        f"jax.device_get in hot-reachable {fn.name!r}"))
+            elif isinstance(f, ast.Name):
+                if f.id == "device_get":
+                    out.append(Finding(
+                        fn.path, node.lineno, node.col_offset, "host-sync",
+                        f"device_get in hot-reachable {fn.name!r}"))
+                elif f.id in _SCALARIZERS and any(
+                        _has_computing_call(a) for a in node.args):
+                    out.append(Finding(
+                        fn.path, node.lineno, node.col_offset, "host-sync",
+                        f"{f.id}() over a computed value blocks on the "
+                        f"device in hot-reachable {fn.name!r}"))
+        elif isinstance(node, (ast.If, ast.While)):
+            for sub in ast.walk(node.test):
+                if (isinstance(sub, ast.Call)
+                        and isinstance(sub.func, ast.Attribute)
+                        and sub.func.attr in ("any", "all")):
+                    out.append(Finding(
+                        fn.path, sub.lineno, sub.col_offset, "host-sync",
+                        f"branching on .{sub.func.attr}() implicitly "
+                        f"bool()s a device array in hot-reachable "
+                        f"{fn.name!r}"))
+
+
+def _check_host_loop(fn: _Func, out: list[Finding]):
+    for node in _walk_shallow(fn.node):
+        if not isinstance(node, ast.For):
+            continue
+        it = node.iter
+        if (isinstance(it, ast.Call) and isinstance(it.func, ast.Name)
+                and it.func.id == "range"):
+            continue                    # static unroll over a shape
+        out.append(Finding(
+            fn.path, node.lineno, node.col_offset, "host-loop",
+            f"Python for over a non-range iterable in hot-reachable "
+            f"{fn.name!r} serializes cells on the host"))
+
+
+def _check_int64(tree: ast.Module, path: str, out: list[Finding],
+                 def_lines: dict[int, int]):
+    """File-wide: jnp 64-bit integer dtypes lexically outside a
+    ``with enable_x64():`` block.  ``def_lines`` maps finding line ->
+    enclosing def line for def-level allowlisting."""
+
+    def is_x64_with(node: ast.With) -> bool:
+        for item in node.items:
+            c = item.context_expr
+            if isinstance(c, ast.Call):
+                f = c.func
+                name = f.id if isinstance(f, ast.Name) else (
+                    f.attr if isinstance(f, ast.Attribute) else None)
+                if name == "enable_x64":
+                    return True
+        return False
+
+    def scan(node, guarded: bool, defs: tuple):
+        for child in ast.iter_child_nodes(node):
+            g = guarded
+            d = defs
+            if isinstance(child, ast.With) and is_x64_with(child):
+                g = True
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                d = defs + (child.lineno,)
+            if (not g and isinstance(child, ast.Attribute)
+                    and child.attr in ("int64", "uint64")
+                    and isinstance(child.value, ast.Name)
+                    and child.value.id in ("jnp", "jax")):
+                out.append(Finding(
+                    path, child.lineno, child.col_offset, "int64",
+                    f"jnp.{child.attr} outside an enable_x64 scope "
+                    f"silently degrades to 32-bit"))
+                if d:
+                    def_lines[child.lineno] = d
+            scan(child, g, d)
+
+    scan(tree, False, ())
+
+
+def _check_mutation(funcs: list[_Func], out: list[Finding],
+                    def_lines: dict[int, int]):
+    """Flag subscript assignment whose base is an *argument* or
+    *captured* name inside an emit/receive/on_send body.  A container
+    the body itself created (``out = dict(vstate); out["k"] = ...``) is
+    the idiomatic pure-update pattern and stays clean."""
+    for fn in funcs:
+        if not _ACTION_BODY_RE.match(fn.name):
+            continue
+        params = {a.arg for a in fn.node.args.args
+                  + fn.node.args.kwonlyargs
+                  + fn.node.args.posonlyargs}
+        local_names = set()
+        for node in _walk_shallow(fn.node):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    elts = t.elts if isinstance(t, (ast.Tuple, ast.List)) \
+                        else (t,)
+                    local_names.update(e.id for e in elts
+                                       if isinstance(e, ast.Name))
+        for node in _walk_shallow(fn.node):
+            targets = ()
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, ast.AugAssign):
+                targets = (node.target,)
+            for t in targets:
+                for sub in ast.walk(t):
+                    if not isinstance(sub, ast.Subscript):
+                        continue
+                    base = sub.value
+                    captured = (isinstance(base, ast.Attribute)
+                                or (isinstance(base, ast.Name)
+                                    and (base.id in params
+                                         or base.id not in local_names)))
+                    if captured:
+                        out.append(Finding(
+                            fn.path, node.lineno, node.col_offset,
+                            "mutation",
+                            f"in-place subscript assignment to a captured "
+                            f"or argument value inside action body "
+                            f"{fn.name!r}; actions must stay pure "
+                            f"(use .at[...].set)"))
+                        def_lines.setdefault(node.lineno, fn.def_line)
+                        break
+
+
+# --------------------------------------------------------------------------
+# allowlist + driver
+# --------------------------------------------------------------------------
+
+def _allow_map(source: str) -> dict[int, set]:
+    allows: dict[int, set] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _ALLOW_RE.search(line)
+        if m:
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            allows[i] = rules
+    return allows
+
+
+def lint_paths(paths) -> list[Finding]:
+    """Lint every ``.py`` file under ``paths`` (files or directories);
+    returns the findings that survive the allowlist."""
+    files = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+        else:
+            raise FileNotFoundError(f"no such python file or dir: {p}")
+
+    parsed = []
+    all_funcs: list[_Func] = []
+    for f in files:
+        source = f.read_text()
+        tree = ast.parse(source, filename=str(f))
+        funcs = _collect_functions(tree, str(f))
+        parsed.append((f, source, tree, funcs))
+        all_funcs.extend(funcs)
+
+    hot = _reachable(all_funcs)
+
+    findings: list[Finding] = []
+    for f, source, tree, funcs in parsed:
+        raw: list[Finding] = []
+        def_lines: dict[int, int] = {}      # finding line -> def line
+        for fn in funcs:
+            if id(fn.node) in hot:
+                n0 = len(raw)
+                _check_host_sync(fn, raw)
+                _check_host_loop(fn, raw)
+                for fd in raw[n0:]:
+                    def_lines.setdefault(fd.line, fn.def_line)
+        _check_int64(tree, str(f), raw, def_lines)
+        _check_mutation(funcs, raw, def_lines)
+
+        allows = _allow_map(source)
+
+        def allowed(fd: Finding) -> bool:
+            lines = [fd.line]
+            defs = def_lines.get(fd.line)
+            if defs is not None:
+                lines.extend(defs if isinstance(defs, tuple) else (defs,))
+            for line in lines:
+                rules = allows.get(line, ())
+                if fd.rule in rules or "*" in rules:
+                    return True
+            return False
+
+        findings.extend(fd for fd in raw if not allowed(fd))
+
+    findings.sort(key=lambda fd: (fd.path, fd.line, fd.col, fd.rule))
+    return findings
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="repro's engine-aware AST lint pass (DESIGN.md §2.11)")
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    args = ap.parse_args(argv)
+
+    findings = lint_paths(args.paths)
+    for fd in findings:
+        print(fd.render())
+    if findings:
+        print(f"{len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,115 @@
+"""Runtime sanitizer harness (DESIGN.md §2.11).
+
+:func:`sanitize` is a context manager that wires, around a block of
+warm-path code:
+
+* ``jax.transfer_guard(transfers)`` — ``"disallow"`` by default, so
+  implicit transfers raise instead of silently syncing.  On
+  accelerator backends that includes device->host scalarization
+  (``.item()``, ``float()`` / ``bool()`` on a device array); on CPU
+  the d2h leg is zero-copy and unguarded, so what trips in practice
+  is the h2d *re-upload* leg of a host round-trip — which every
+  per-round host detour eventually takes;
+* a **jit cache-miss counter** over the engine's hot compilations
+  (``_run_rounds`` — the fixed-point loop — and ``apply_updates`` —
+  the commit scatter): on clean exit, any growth of their jit caches
+  raises :class:`RetraceError`.  Warm ``session.query()`` across
+  varying sources and warm ``UpdateBatch.apply`` across same-ladder
+  batches must both report zero;
+* optionally ``jax.debug_nans``.
+
+Usage::
+
+    from repro.analysis import sanitize
+
+    with sanitize() as rep:
+        sess.query("sssp", source=7, refresh=True)
+    # raised on exit if anything transferred or retraced;
+    # rep.retraces() has the per-function deltas for reporting
+
+Also exposed as the ``sanitize`` pytest fixture (tests/conftest.py)
+and exercised by the CI sanitize job.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+
+import jax
+
+__all__ = ["RetraceError", "SanitizeReport", "sanitize", "tracked_jits"]
+
+
+class RetraceError(AssertionError):
+    """A tracked hot-path jit retraced inside a sanitize() block."""
+
+
+def tracked_jits() -> dict:
+    """The jitted hot paths whose compile caches the sanitizer watches.
+
+    Resolved lazily so importing repro.analysis never drags the engine
+    in; uses the jit wrappers' ``_cache_size`` introspection.  The
+    submodules are resolved through importlib because ``repro.core``
+    re-exports a ``diffuse`` *function* that shadows the submodule on a
+    ``from ..core import diffuse``."""
+    import importlib
+
+    _diffuse = importlib.import_module("repro.core.diffuse")
+    _updates = importlib.import_module("repro.core.updates")
+
+    return {
+        "_run_rounds": _diffuse._run_rounds,
+        "apply_updates": _updates.apply_updates,
+    }
+
+
+def _cache_sizes(fns: dict) -> dict:
+    return {name: fn._cache_size() for name, fn in fns.items()}
+
+
+@dataclass
+class SanitizeReport:
+    """Cache-miss accounting for one sanitize() block."""
+
+    baseline: dict
+    _fns: dict = field(repr=False, default_factory=dict)
+
+    def retraces(self) -> dict:
+        """Per-tracked-function jit cache growth since entry."""
+        now = _cache_sizes(self._fns)
+        return {name: now[name] - self.baseline[name] for name in now}
+
+    def total_retraces(self) -> int:
+        return sum(self.retraces().values())
+
+
+@contextlib.contextmanager
+def sanitize(transfers: str | None = "disallow", retraces: bool = True,
+             nans: bool = False):
+    """Run a block under the full sanitizer (see module docstring).
+
+    ``transfers`` is a ``jax.transfer_guard`` level (``"disallow"``,
+    ``"disallow_explicit"``, ``"log"``, ...) or None to leave transfers
+    unguarded; ``retraces=False`` disables the cache-miss check (e.g.
+    for a deliberately-cold block); ``nans=True`` adds
+    ``jax.debug_nans``.  Yields a :class:`SanitizeReport`; on clean
+    exit with ``retraces=True`` raises :class:`RetraceError` if any
+    tracked hot path recompiled inside the block."""
+    fns = tracked_jits()
+    report = SanitizeReport(_cache_sizes(fns), fns)
+    with contextlib.ExitStack() as stack:
+        if transfers is not None:
+            stack.enter_context(jax.transfer_guard(transfers))
+        if nans:
+            stack.enter_context(jax.debug_nans(True))
+        yield report
+    # only on clean exit — an exception from the block propagates as-is
+    if retraces:
+        deltas = {k: v for k, v in report.retraces().items() if v}
+        if deltas:
+            raise RetraceError(
+                f"hot-path jit cache grew inside sanitize(): {deltas} — "
+                f"a warm query/apply must reuse its compiled entry "
+                f"(check VertexProgram structural equality and the "
+                f"pow2 batch ladder)")

@@ -1,0 +1,313 @@
+"""Registration-time program verifier (DESIGN.md §2.11).
+
+Every :class:`~repro.core.programs.DiffusiveProgram` that lowers to the
+engine IR is abstractly traced — via ``jax.eval_shape`` under
+``jax.checking_leaks`` — against its declared ``Field`` schema on a
+tiny synthetic geometry, and its monoid is spot-checked on seeded
+concrete values.  A broken spec therefore fails at *build* time with a
+precise, named error instead of surfacing as a dtype promotion, a
+shape blowup, a leaked tracer, or a bitwise mismatch deep inside a
+query's fixed point.
+
+Contract checked (the §2.7 authoring contract, mechanized):
+
+* ``init``     — returns ``(vstate, active)``; vstate keys equal the
+  schema keys exactly, every leaf has the view's shape and its Field's
+  dtype, ``active`` is a bool mask of the view shape;
+* ``emit``     — maps per-edge source state to a ``[Ep]`` message of
+  exactly ``msg_dtype`` (dtype drift would silently promote through
+  the segment-combine);
+* ``receive``  — returns ``(vstate', activated)`` with the same schema
+  and dtypes plus a bool activation mask;
+* ``on_send``  — schema- and dtype-preserving;
+* ``priority`` — a ``[Np]`` floating bucket key;
+* ``payload``  — a ``[Ep]`` integer payload (argbest routing index);
+* dead-slot splat — every ``Field.on_dead`` value must be
+  representable in the field dtype (a non-finite splat into an integer
+  field can never round-trip);
+* leaked tracers — all abstract traces run under
+  ``jax.checking_leaks``, so an action that stashes a tracer in a
+  closure or global is rejected;
+* monoid laws  — seeded associativity / commutativity / identity check
+  of the declared combine monoid (floats to tolerance, everything else
+  bitwise).
+
+``verify_program`` is invoked automatically from
+:func:`repro.core.programs.lower` (set ``REPRO_VERIFY=0`` to opt out,
+e.g. when bisecting the verifier itself); it can also be called
+directly on a spec.
+"""
+
+from __future__ import annotations
+
+import os
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.monoid import Monoid, as_monoid
+
+__all__ = ["ProgramVerificationError", "verify_program", "verification_enabled"]
+
+# synthetic verification geometry: tiny, but with >1 shard and >1 block
+# so broadcast mistakes cannot hide behind size-1 axes
+_S, _NP, _EP = 2, 8, 16
+
+
+class ProgramVerificationError(Exception):
+    """A diffusive-program spec violates the §2.7 authoring contract.
+
+    Raised at build/registration time; the message names the program,
+    the offending component (init/emit/receive/on_send/priority/
+    payload/monoid), and what drifted."""
+
+
+def verification_enabled() -> bool:
+    return os.environ.get("REPRO_VERIFY", "1") not in ("0", "false", "no")
+
+
+def _err(name: str, component: str, msg: str) -> ProgramVerificationError:
+    return ProgramVerificationError(
+        f"program {name or '<anonymous>'!r}: {component}: {msg}")
+
+
+def _dt(x) -> np.dtype:
+    return np.dtype(x)
+
+
+def _view_structs():
+    return types.SimpleNamespace(
+        gid=jax.ShapeDtypeStruct((_S, _NP), jnp.int32),
+        node_ok=jax.ShapeDtypeStruct((_S, _NP), jnp.bool_),
+        out_degree=jax.ShapeDtypeStruct((_S, _NP), jnp.int32),
+    )
+
+
+def _eval_shape(name, component, fn, *args):
+    """jax.eval_shape under checking_leaks, with errors rewrapped so the
+    user sees which component of which program failed."""
+    try:
+        with jax.checking_leaks():
+            return jax.eval_shape(fn, *args)
+    except ProgramVerificationError:
+        raise
+    except Exception as e:  # noqa: B902 - rewrap any trace-time failure
+        raise _err(
+            name, component,
+            f"abstract trace failed ({type(e).__name__}: {e})") from e
+
+
+def _check_state(name, component, got, schema, shape):
+    """A returned vstate must match the declared schema exactly."""
+    if not isinstance(got, dict):
+        raise _err(name, component,
+                   f"must return a dict vertex state, got "
+                   f"{type(got).__name__}")
+    want = set(schema)
+    have = set(got)
+    if want != have:
+        missing, extra = sorted(want - have), sorted(have - want)
+        raise _err(
+            name, component,
+            f"state keys drifted from the declared schema: "
+            f"missing {missing}, unexpected {extra}")
+    for k, f in schema.items():
+        leaf = got[k]
+        if tuple(leaf.shape) != tuple(shape):
+            raise _err(
+                name, component,
+                f"field {k!r} has shape {tuple(leaf.shape)}, expected "
+                f"{tuple(shape)}")
+        if _dt(leaf.dtype) != _dt(f.dtype):
+            raise _err(
+                name, component,
+                f"field {k!r} has dtype {_dt(leaf.dtype)}, declared "
+                f"{_dt(f.dtype)}")
+
+
+def _check_mask(name, component, mask, shape, what="activation mask"):
+    if tuple(mask.shape) != tuple(shape):
+        raise _err(name, component,
+                   f"{what} has shape {tuple(mask.shape)}, expected "
+                   f"{tuple(shape)}")
+    if _dt(mask.dtype) != np.dtype(bool):
+        raise _err(name, component,
+                   f"{what} has dtype {_dt(mask.dtype)}, expected bool")
+
+
+def _seeded(dtype: np.dtype, shape, rng) -> jnp.ndarray:
+    if np.issubdtype(dtype, np.bool_):
+        return jnp.asarray(rng.integers(0, 2, shape).astype(bool))
+    if np.issubdtype(dtype, np.integer):
+        return jnp.asarray(rng.integers(1, 64, shape).astype(dtype))
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+def _check_monoid(name: str, monoid: Monoid, msg_dtype):
+    """Seeded spot check of the combine's algebra.  Associativity and
+    commutativity are what make delivery order irrelevant (the paper's
+    any-path-to-the-fixed-point semantics); identity is what makes an
+    empty mailbox a no-op."""
+    dtype = _dt(msg_dtype)
+    rng = np.random.default_rng(0)
+    close = (np.allclose if np.issubdtype(dtype, np.floating)
+             else np.array_equal)
+    # Concrete seeded values (unlike the abstract traces below), so the
+    # check must opt out of any ambient transfer guard: lower() runs on
+    # build cache misses, which a sanitize()d warm path may legally hit
+    # when it first sees a new spec.
+    with jax.transfer_guard("allow"):
+        a, b, c = (_seeded(dtype, (32,), rng) for _ in range(3))
+        _check_monoid_laws(name, monoid, dtype, a, b, c, close)
+
+
+def _check_monoid_laws(name, monoid, dtype, a, b, c, close):
+    # Monoid.elem dispatches to the kind's native op when no custom
+    # ``op`` is registered (the builtin MIN/MAX/SUM singletons).
+    #
+    # Laws are checked on the op's *range*: fold each seeded sample once
+    # through op(x, identity) first.  For total ops that projection is a
+    # no-op, while domain-restricted custom ops (logical-or over {0, 1}
+    # is a registered max-class monoid) get normalized into the value
+    # set their combine tree actually produces — full-range samples
+    # would reject them for values no program ever feeds them.
+    ident = monoid.identity(dtype)
+    a, b, c = (monoid.elem(x, jnp.broadcast_to(ident, x.shape))
+               for x in (a, b, c))
+    ab_c = np.asarray(monoid.elem(monoid.elem(a, b), c))
+    a_bc = np.asarray(monoid.elem(a, monoid.elem(b, c)))
+    if not close(ab_c, a_bc):
+        raise _err(name, "monoid",
+                   f"{monoid.name!r} op is not associative on seeded "
+                   f"{dtype} samples — unordered mailbox coalescing "
+                   f"would depend on delivery order")
+    if not close(np.asarray(monoid.elem(a, b)),
+                 np.asarray(monoid.elem(b, a))):
+        raise _err(name, "monoid",
+                   f"{monoid.name!r} op is not commutative on seeded "
+                   f"{dtype} samples")
+    with_id = np.asarray(monoid.elem(a, jnp.broadcast_to(ident, a.shape)))
+    if not close(with_id, np.asarray(a)):
+        raise _err(name, "monoid",
+                   f"{monoid.name!r} identity is not neutral: "
+                   f"op(x, identity) != x on seeded {dtype} samples")
+
+
+def _check_on_dead(name: str, schema):
+    for k, f in schema.items():
+        if f.on_dead is None:
+            continue
+        dtype = _dt(f.dtype)
+        val = np.asarray(f.on_dead)
+        if (np.issubdtype(dtype, np.integer)
+                and np.issubdtype(val.dtype, np.floating)
+                and not np.all(np.isfinite(val))):
+            raise _err(
+                name, "schema",
+                f"field {k!r}: on_dead={f.on_dead!r} cannot splat into "
+                f"integer dtype {dtype} (non-finite)")
+
+
+def verify_program(spec, name: str = "") -> None:
+    """Verify a DiffusiveProgram spec against the §2.7 contract.
+
+    Raises :class:`ProgramVerificationError` on the first violation;
+    returns None when the spec is clean.  Pure metadata + abstract
+    traces + one tiny seeded monoid check — cheap enough to run on
+    every :meth:`ProgramHandle.build` cache miss."""
+    schema = dict(spec.state)
+    monoid = as_monoid(spec.monoid)
+    msg_dtype = _dt(spec.msg_dtype)
+    view = _view_structs()
+    vshape = (_S, _NP)
+
+    _check_on_dead(name, schema)
+    _check_monoid(name, monoid, msg_dtype)
+
+    # ---- init: schema -> (vstate, active) over the graph view ----------
+    def _init(gid, node_ok, out_degree):
+        v = types.SimpleNamespace(gid=gid, node_ok=node_ok,
+                                  out_degree=out_degree)
+        vstate = {}
+        for k, f in schema.items():
+            val = f.init(v) if callable(f.init) else f.init
+            val = jnp.broadcast_to(jnp.asarray(val), gid.shape).astype(
+                f.dtype)
+            vstate[k] = val
+        mask = (spec.init_active(v) if spec.init_active is not None
+                else jnp.ones(gid.shape, bool))
+        return vstate, mask & node_ok
+
+    vstate_s, active_s = _eval_shape(name, "init", _init, view.gid,
+                                     view.node_ok, view.out_degree)
+    _check_state(name, "init", vstate_s, schema, vshape)
+    _check_mask(name, "init", active_s, vshape, "initial frontier")
+
+    # ---- emit: per-edge source state -> [Ep] message of msg_dtype ------
+    src_state = {k: jax.ShapeDtypeStruct((_EP,), f.dtype)
+                 for k, f in schema.items()}
+    e_f32 = jax.ShapeDtypeStruct((_EP,), jnp.float32)
+    e_i32 = jax.ShapeDtypeStruct((_EP,), jnp.int32)
+    msg_s = _eval_shape(name, "emit", spec.emit, src_state, e_f32, e_i32,
+                        e_i32)
+    if tuple(msg_s.shape) != (_EP,):
+        raise _err(name, "emit",
+                   f"returned shape {tuple(msg_s.shape)}, expected "
+                   f"per-edge ({_EP},) — emit must stay elementwise over "
+                   f"the edge stream")
+    if _dt(msg_s.dtype) != msg_dtype:
+        raise _err(name, "emit",
+                   f"returned dtype {_dt(msg_s.dtype)}, declared "
+                   f"msg_dtype {msg_dtype} — the mismatch would promote "
+                   f"through every segment-combine")
+
+    # ---- receive: (vstate, inbox, has_msg, payload, node_ok) ----------
+    n_state = {k: jax.ShapeDtypeStruct((_NP,), f.dtype)
+               for k, f in schema.items()}
+    inbox = jax.ShapeDtypeStruct((_NP,), msg_dtype)
+    has = jax.ShapeDtypeStruct((_NP,), jnp.bool_)
+    pay = (jax.ShapeDtypeStruct((_NP,), jnp.int32)
+           if spec.payload is not None else None)
+    out_s = _eval_shape(name, "receive", spec.receive, n_state, inbox, has,
+                        pay, has)
+    if not (isinstance(out_s, tuple) and len(out_s) == 2):
+        raise _err(name, "receive",
+                   "must return (vstate, activated) — got "
+                   f"{type(out_s).__name__}")
+    _check_state(name, "receive", out_s[0], schema, (_NP,))
+    _check_mask(name, "receive", out_s[1], (_NP,))
+
+    # ---- on_send: schema-preserving --------------------------------------
+    if spec.on_send is not None:
+        sent_s = _eval_shape(name, "on_send", spec.on_send, n_state, has)
+        _check_state(name, "on_send", sent_s, schema, (_NP,))
+
+    # ---- priority: [Np] floating bucket key ------------------------------
+    if spec.priority is not None:
+        pr_s = _eval_shape(name, "priority", spec.priority, n_state)
+        if tuple(pr_s.shape) != (_NP,):
+            raise _err(name, "priority",
+                       f"returned shape {tuple(pr_s.shape)}, expected "
+                       f"({_NP},)")
+        if not np.issubdtype(_dt(pr_s.dtype), np.floating):
+            raise _err(name, "priority",
+                       f"returned dtype {_dt(pr_s.dtype)}; the "
+                       f"delta-stepping gate needs a floating bucket key")
+
+    # ---- payload: [Ep] integer routing index -----------------------------
+    if spec.payload is not None:
+        if monoid.payload != "argbest":
+            raise _err(name, "payload",
+                       f"program carries a payload but monoid "
+                       f"{monoid.name!r} has no 'argbest' payload rule")
+        pl_s = _eval_shape(name, "payload", spec.payload, src_state, e_i32)
+        if tuple(pl_s.shape) != (_EP,):
+            raise _err(name, "payload",
+                       f"returned shape {tuple(pl_s.shape)}, expected "
+                       f"({_EP},)")
+        if not np.issubdtype(_dt(pl_s.dtype), np.integer):
+            raise _err(name, "payload",
+                       f"returned dtype {_dt(pl_s.dtype)}; argbest "
+                       f"payloads are integer routing indices")

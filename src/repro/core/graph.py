@@ -126,7 +126,7 @@ def build_push_csr(src_local, edge_ok, csr_perm, n_per_shard: int,
 
 
 @partial(jax.jit, static_argnames=("sw", "dwid", "ep"))
-def _merge_compact_views(csr_key, csr_perm, csr_live, push_src, push_perm,
+def _merge_compact_views(csr_key, csr_perm, csr_live, push_src, push_perm,  # analysis: allow(int64): traced under enable_x64 by _merge_compact — the with-block is at the call site
                          edge_ok, *, sw: int, dwid: int, ep: int):
     """Jitted body of :meth:`ShardedGraph._merge_compact` — one fused
     program per (S, width) shape, so the merge's many elementwise passes
@@ -430,14 +430,20 @@ class ShardedGraph:
         if delta_blocks < 0:
             delta_blocks = default_delta_blocks(self.edges_per_shard, block)
         if (self.csr_perm is not None and self.delta_count is not None
+                and not isinstance(self.delta_count, jax.core.Tracer)
                 and block == self.csr_block
                 and delta_blocks == self.delta_blocks):
             # every mutation path either patches the views and bumps a
             # counter, or drops the views entirely — so zero counters on
             # present views means they are already exactly what a rebuild
-            # would produce
-            if (not self.delta_count.any()) and (
-                    self.tomb_count is None or not self.tomb_count.any()):
+            # would produce.  Host policy read via device_get (not an
+            # implicit bool()) so it stays legal under
+            # jax.transfer_guard("disallow"); a traced graph skips the
+            # shortcut and takes the trace-safe full-sort path below.
+            dc = jax.device_get(self.delta_count)  # analysis: allow(host-sync): per-compaction policy counters, guard-legal
+            tc = (jax.device_get(self.tomb_count)  # analysis: allow(host-sync): per-compaction policy counters, guard-legal
+                  if self.tomb_count is not None else None)
+            if not dc.any() and (tc is None or not tc.any()):  # analysis: allow(host-sync): counters already host-side (device_get above)
                 return self
             if self.sorted_width >= MERGE_COMPACT_MIN_WIDTH:
                 return self._merge_compact()
@@ -675,7 +681,10 @@ class ShardedGraph:
         }
 
     def n_edges(self) -> jnp.ndarray:
-        return jnp.sum(self.edge_ok.astype(jnp.int64))
+        # int32 accumulator on purpose: without enable_x64 a jnp.int64
+        # cast silently degrades to 32-bit anyway, and edge-slot counts
+        # fit int32 at every scale this layout can hold in memory
+        return jnp.sum(self.edge_ok.astype(jnp.int32))
 
     def scatter_from_global(self, values: jnp.ndarray, owner, local, fill=0):
         """Map a [n_nodes] global array to [S, Np] shard layout."""

@@ -61,14 +61,55 @@ __all__ = [
 # engine IR — what diffuse.py / the relax kernels consume
 # --------------------------------------------------------------------------
 
-@dataclasses.dataclass(frozen=True)
+def _closure_key(value):
+    """Hashable identity of one captured value.  Nested functions key
+    structurally; unhashable captures (arrays, Field schemas) fall back
+    to object identity — the fallback can only *separate* two programs
+    that structural equality would have merged, never wrongly merge
+    them, so it is always trace-safe."""
+    if callable(value) and hasattr(value, "__code__"):
+        return _fn_key(value)
+    try:
+        hash(value)
+    except TypeError:
+        return ("id", id(value))
+    return value
+
+
+def _fn_key(fn):
+    """Structural identity of a pure function: code object + captured
+    closure values + defaults.  Two closures produced by re-running the
+    same factory with the same parameters compare equal — they trace to
+    the same jaxpr — which is what lets every ``sssp(source=k)`` share
+    one ``_run_rounds`` jit cache entry (the source lives in ``init``,
+    which is excluded from the program's trace identity)."""
+    if fn is None:
+        return None
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        return fn                       # builtins / partials: the object
+    cells = tuple(_closure_key(c.cell_contents)
+                  for c in (fn.__closure__ or ()))
+    defaults = tuple(_closure_key(d) for d in (fn.__defaults__ or ()))
+    return (code, cells, defaults)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
 class VertexProgram:
     """Lowered (engine-facing) vertex program.
 
     Shapes (per shard): vertex-state leaves are [Np] — or [L, Np] when
     ``lanes`` is set (multi-query lanes; see :func:`make_laned`) — and
-    edge args are [Ep].  Hashable with stable identity (specs lower
-    through a cache), so it serves as the jit static argument.
+    edge args are [Ep].  Serves as the jit static argument, so its
+    ``__eq__`` / ``__hash__`` are *structural over everything the trace
+    reads* — monoid, msg dtype, the emit/on_send/receive/payload/
+    priority function structure (:func:`_fn_key`), lanes, name — and
+    deliberately exclude ``init``: the engines take the initial
+    ``(vstate, active)`` as *traced* inputs, so programs differing only
+    in their init closure (``sssp(source=0)`` vs ``sssp(source=1)``)
+    share one compiled fixed-point loop instead of retracing per
+    source.  Callers that do trace ``init`` (the spmd engine, the laned
+    stacker) must key their caches on ``_fn_key(prog.init)`` as well.
     """
 
     monoid: Monoid                 # first-class combine (min/max/sum class)
@@ -96,6 +137,26 @@ class VertexProgram:
             raise ValueError(
                 f"program {self.name!r} carries a payload but monoid "
                 f"{self.monoid.name!r} has no 'argbest' payload rule")
+
+    def _trace_key(self) -> tuple:
+        """Everything the jitted fixed-point loop reads from this
+        program (``init`` excluded — it enters as traced arrays)."""
+        key = self.__dict__.get("_trace_key_cache")
+        if key is None:
+            key = (self.monoid, np.dtype(self.msg_dtype),
+                   _fn_key(self.emit), _fn_key(self.on_send),
+                   _fn_key(self.receive), _fn_key(self.payload),
+                   _fn_key(self.priority), self.lanes, self.name)
+            object.__setattr__(self, "_trace_key_cache", key)
+        return key
+
+    def __eq__(self, other):
+        if not isinstance(other, VertexProgram):
+            return NotImplemented
+        return self is other or self._trace_key() == other._trace_key()
+
+    def __hash__(self):
+        return hash(self._trace_key())
 
     @property
     def combine(self) -> str:
@@ -154,14 +215,27 @@ def lower(spec: DiffusiveProgram, name: str = "") -> VertexProgram:
     field's init expression over the graph view, cast to the declared
     dtype, splat ``on_dead`` over dead slots, and intersect the initial
     frontier with ``node_ok``.
+
+    Every spec is verified against the §2.7 authoring contract on the
+    way through (abstract traces of emit/receive/on_send/priority
+    against the Field schema + a seeded monoid-law check — see
+    :mod:`repro.analysis.verify`); a broken spec raises
+    :class:`~repro.analysis.verify.ProgramVerificationError` here, at
+    build/registration time, instead of mis-executing at query time.
+    Set ``REPRO_VERIFY=0`` to skip.
     """
+    from ..analysis import verify as _verify  # deferred: no import cycle
+
+    if _verify.verification_enabled():
+        _verify.verify_program(spec, name=name)
+
     monoid = as_monoid(spec.monoid)
     fields = tuple(spec.state.items())
 
     def init(view):
         shape = view.gid.shape
         vstate = {}
-        for fname, f in fields:
+        for fname, f in fields:  # analysis: allow(host-loop): static unroll over the declared field schema, not shards
             v = f.init(view) if callable(f.init) else f.init
             v = jnp.broadcast_to(jnp.asarray(v), shape).astype(f.dtype)
             if f.on_dead is not None:
@@ -348,8 +422,13 @@ def make_laned(progs) -> VertexProgram:
     progs = tuple(progs)
     if not progs:
         raise ValueError("make_laned needs at least one program")
-    if progs in _LANED:
-        return _LANED[progs]
+    # the laned init stacks every lane's init, so the cache key must
+    # carry each program's *init identity* on top of its (init-excluding)
+    # structural equality — otherwise sssp lanes [0, 1] would serve
+    # lanes [2, 3]
+    lkey = tuple((p, _fn_key(p.init)) for p in progs)
+    if lkey in _LANED:
+        return _LANED[lkey]
     _evict_oldest(_LANED, _PROGRAM_CACHE_SIZE)
     base = progs[0]
     for p in progs[1:]:
@@ -370,7 +449,7 @@ def make_laned(progs) -> VertexProgram:
         base, init=init, lanes=len(progs),
         name=f"{base.name or 'prog'}[x{len(progs)}]",
     )
-    _LANED[progs] = laned
+    _LANED[lkey] = laned
     return laned
 
 

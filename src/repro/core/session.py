@@ -82,6 +82,7 @@ from .programs import (
     ProgramHandle,
     ProgramSpec,
     VertexProgram,
+    _fn_key,
     freeze_kwargs,
     make_laned,
     register_program,
@@ -529,7 +530,12 @@ class DiffusionSession:
         vk = value_key or spec.value_key
         results = []
         for i, (kw, key) in enumerate(zip(per_lane, keys)):
-            lane_state = jax.tree_util.tree_map(lambda a: a[:, i], vstate)
+            # slicing lane i uploads the literal index — an O(1) h2d per
+            # lane, legal under the sanitizer (which guards d2h syncs
+            # and retraces); keep the d2h direction guarded
+            with jax.transfer_guard_host_to_device("allow"):
+                lane_state = jax.tree_util.tree_map(lambda a: a[:, i],
+                                                    vstate)
             entry = _Entry(spec, progs[i], vk, kw, lane_state,
                            stats, engine, backend=backend, delta=delta,
                            sweep=explicit_sweep)
@@ -585,7 +591,10 @@ class DiffusionSession:
                 f"before importing jax, or use engine='sharded'.")
         from ..launch.mesh import mesh_context
 
-        fkey = (program, S, backend, sweep)
+        # the per-device fn traces prog.init *inside* shard_map, so the
+        # cache key needs the init identity on top of the program's
+        # (init-excluding) structural equality — see VertexProgram.__eq__
+        fkey = (program, _fn_key(program.init), S, backend, sweep)
         if fkey not in self._spmd_fns:
             mesh = jax.make_mesh((S,), ("cells",))
             self._spmd_fns[fkey] = (mesh, make_spmd_diffuse(

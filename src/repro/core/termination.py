@@ -48,7 +48,7 @@ class DijkstraScholten:
         self.acks = 0                    # ack message count (paper's overhead)
 
     # -- hooks called by the event engine ---------------------------------
-    def on_send(self, sender: int):
+    def on_send(self, sender: int):  # analysis: allow(mutation): host-side Dijkstra–Scholten accountant, not a traced action body
         if sender == self.ENV:
             self.env_deficit += 1
         else:

@@ -5,3 +5,14 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture
+def sanitize():
+    """The runtime sanitizer harness (repro.analysis.sanitize) as a
+    fixture: ``with sanitize() as rep: ...`` runs the block under
+    jax.transfer_guard('disallow') plus the hot-path jit cache-miss
+    counter, raising RetraceError on clean exit if anything retraced."""
+    from repro.analysis import sanitize as _sanitize
+
+    return _sanitize

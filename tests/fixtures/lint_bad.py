@@ -1,0 +1,39 @@
+"""Deliberately-broken hot-path code for the lint self-test.
+
+Every rule in :mod:`repro.analysis.lint` must fire at least once on
+this file (tests/test_analysis.py asserts full rule coverage and that
+the CLI exits nonzero on it), and the one ``# analysis: allow(...)``
+marker below must suppress its finding.  Never imported at runtime —
+linted as source only.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def diffuse(sg, prog, cells):
+    state = prog.init(sg)
+    for cell in cells:                       # host-loop: iterates cells
+        state = edge_relax_cell(state, cell)
+    if state.mask.any():                     # host-sync: bool() of .any()
+        state = prog.finish(state)
+    return np.asarray(state.values)          # host-sync: host materialize
+
+
+def edge_relax_cell(state, cell):
+    hops = int(cell.depth(state))            # host-sync: int() blocks
+    keys = jnp.zeros(4, jnp.int64)           # int64: outside enable_x64
+    probe = state.values.item()              # host-sync: .item()
+    host = jax.device_get(state.values)      # host-sync: explicit pull
+    return state.advance(hops, keys, probe, host)
+
+
+def receive(vstate, inbox, has_msg, payload, node_ok):
+    vstate["dist"] = jnp.minimum(vstate["dist"], inbox)   # mutation
+    return vstate, has_msg
+
+
+def apply_updates(sg, ops):
+    del ops
+    return int(sg.count())  # analysis: allow(host-sync): fixture's allowlist self-check

@@ -1,0 +1,347 @@
+"""repro.analysis acceptance: the AST lint pass (rule coverage on the
+bad fixture, clean src tree, CLI exit codes), the registration-time
+program verifier (every builtin passes; broken specs fail with
+distinct, named errors), and the runtime sanitizer (warm query/apply
+run transfer- and retrace-free; forced retraces are caught)."""
+
+import importlib
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+FIXTURE = Path(__file__).parent / "fixtures" / "lint_bad.py"
+LINT_TARGETS = [str(ROOT / "src" / "repro" / "core"),
+                str(ROOT / "src" / "repro" / "kernels")]
+
+
+# --------------------------------------------------------------------------
+# lint pass (stdlib-only — no jax needed for these)
+# --------------------------------------------------------------------------
+
+def test_lint_fixture_trips_every_rule():
+    from repro.analysis import lint_paths
+    from repro.analysis.lint import RULES
+
+    findings = lint_paths([FIXTURE])
+    assert findings, "the bad fixture must produce findings"
+    assert {f.rule for f in findings} == set(RULES), \
+        "every lint rule must fire on the fixture"
+    # the one allowlisted line (apply_updates' int()) stays suppressed
+    allowed_line = next(i for i, text in enumerate(
+        FIXTURE.read_text().splitlines(), start=1)
+        if "analysis: allow" in text)
+    assert all(f.line != allowed_line for f in findings)
+
+
+def test_lint_findings_render_as_path_line_col():
+    from repro.analysis import lint_paths
+
+    f = lint_paths([FIXTURE])[0]
+    rendered = f.render()
+    assert rendered.startswith(f"{f.path}:{f.line}:{f.col}: {f.rule}:")
+
+
+def test_lint_src_tree_is_clean():
+    """Acceptance: the shipped engine carries no un-allowlisted host
+    syncs, host loops, unguarded int64, or action-body mutation."""
+    from repro.analysis import lint_paths
+
+    findings = lint_paths(LINT_TARGETS)
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_lint_cli_exit_codes():
+    """The CI entry point: nonzero + findings on stdout for dirty input,
+    zero for the real tree."""
+    env = {"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"}
+    bad = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", str(FIXTURE)],
+        capture_output=True, text=True, env=env)
+    assert bad.returncode == 1
+    assert "host-sync" in bad.stdout and "mutation" in bad.stdout
+    good = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", *LINT_TARGETS],
+        capture_output=True, text=True, env=env)
+    assert good.returncode == 0, good.stdout + good.stderr
+
+
+def test_lint_importable_without_jax():
+    """The lint layer must run in the CI lint job, which installs no
+    accelerator stack: importing it may not import jax."""
+    code = ("import sys; sys.modules['jax'] = None\n"
+            "import repro.analysis.lint as L\n"
+            "assert L.lint_paths([r'%s'])\n" % FIXTURE)
+    env = {"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"}
+    r = subprocess.run([sys.executable, "-c", code],
+                       capture_output=True, text=True, env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+# --------------------------------------------------------------------------
+# registration-time verifier
+# --------------------------------------------------------------------------
+
+_BUILTIN_KWARGS = {
+    "sssp": {"source": 0},
+    "bfs": {"source": 0},
+    "cc": {},
+    "ppr": {"source": 0},
+    "pagerank": {},
+    "widest": {"source": 0},
+    "reach": {"sources": [0, 3]},
+}
+
+
+def test_every_registered_builtin_passes_verification():
+    """Acceptance: all shipped @diffusive programs (including widest and
+    reach) lower cleanly through verify_program."""
+    from repro.core.programs import PROGRAMS, VertexProgram
+
+    checked = []
+    for name, spec in PROGRAMS.items():
+        if spec.factory is None or name not in _BUILTIN_KWARGS:
+            continue
+        prog = spec.factory(**_BUILTIN_KWARGS[name])
+        assert isinstance(prog, VertexProgram)
+        checked.append(name)
+    assert set(checked) == set(_BUILTIN_KWARGS)
+
+
+def _sssp_like(**overrides):
+    """A minimal valid spec; each negative test breaks one component."""
+    import jax.numpy as jnp
+
+    from repro.core.programs import DiffusiveProgram, Field
+
+    def receive(vstate, inbox, has_msg, payload, node_ok):
+        better = has_msg & (inbox < vstate["dist"]) & node_ok
+        return {"dist": jnp.where(better, inbox, vstate["dist"])}, better
+
+    base = dict(
+        monoid="min",
+        msg_dtype=jnp.float32,
+        state={"dist": Field(jnp.float32, init=jnp.inf)},
+        emit=lambda s, weight, src_gid, dst_gid: s["dist"] + weight,
+        receive=receive,
+    )
+    base.update(overrides)
+    return DiffusiveProgram(**base)
+
+
+def test_verifier_rejects_wrong_emit_dtype():
+    import jax.numpy as jnp
+
+    from repro.analysis import ProgramVerificationError, verify_program
+
+    spec = _sssp_like(
+        emit=lambda s, weight, src_gid, dst_gid:
+            (s["dist"] + weight).astype(jnp.int32))
+    with pytest.raises(ProgramVerificationError, match="emit.*dtype"):
+        verify_program(spec, name="bad-emit-dtype")
+
+
+def test_verifier_rejects_schema_drift():
+    import jax.numpy as jnp
+
+    from repro.analysis import ProgramVerificationError, verify_program
+
+    def receive(vstate, inbox, has_msg, payload, node_ok):
+        better = has_msg & (inbox < vstate["dist"]) & node_ok
+        return {"distance": jnp.where(better, inbox, vstate["dist"])}, better
+
+    with pytest.raises(ProgramVerificationError, match="keys drifted"):
+        verify_program(_sssp_like(receive=receive), name="bad-schema")
+
+
+def test_verifier_rejects_non_associative_combine():
+    from repro.analysis import ProgramVerificationError, verify_program
+    from repro.core.monoid import Monoid
+
+    bad = Monoid("subtract", "min", op=lambda a, b: a - b)
+    with pytest.raises(ProgramVerificationError,
+                       match="not (associative|commutative)"):
+        verify_program(_sssp_like(monoid=bad), name="bad-monoid")
+
+
+def test_verifier_rejects_tracer_leaking_closure():
+    from repro.analysis import ProgramVerificationError, verify_program
+
+    stash = []
+
+    def leaky_emit(s, weight, src_gid, dst_gid):
+        stash.append(s["dist"])        # leaks the tracer out of the trace
+        return s["dist"] + weight
+
+    with pytest.raises(ProgramVerificationError, match="emit"):
+        verify_program(_sssp_like(emit=leaky_emit), name="leaky")
+
+
+def test_verifier_rejects_bad_receive_arity():
+    from repro.analysis import ProgramVerificationError, verify_program
+
+    def receive(vstate, inbox, has_msg, payload, node_ok):
+        return vstate                  # forgot the activation mask
+
+    with pytest.raises(ProgramVerificationError,
+                       match=r"receive.*\(vstate, activated\)"):
+        verify_program(_sssp_like(receive=receive), name="bad-arity")
+
+
+def test_verifier_rejects_nonfinite_on_dead_in_int_field():
+    import jax.numpy as jnp
+
+    from repro.analysis import ProgramVerificationError, verify_program
+    from repro.core.programs import Field
+
+    state = {"dist": Field(jnp.float32, init=jnp.inf),
+             "hops": Field(jnp.int32, init=0, on_dead=jnp.inf)}
+    with pytest.raises(ProgramVerificationError, match="on_dead"):
+        verify_program(_sssp_like(state=state), name="bad-on-dead")
+
+
+def test_verifier_errors_are_distinct():
+    """Each broken spec names its own component — four distinct errors."""
+    from repro.analysis import ProgramVerificationError, verify_program
+    from repro.core.monoid import Monoid
+
+    import jax.numpy as jnp
+
+    def drifted(vstate, inbox, has_msg, payload, node_ok):
+        better = has_msg & (inbox < vstate["dist"]) & node_ok
+        return {"distance": jnp.where(better, inbox, vstate["dist"])}, better
+
+    stash = []
+
+    def leaky(s, weight, src_gid, dst_gid):
+        stash.append(s["dist"])
+        return s["dist"] + weight
+
+    specs = [
+        _sssp_like(emit=lambda s, w, sg, dg: (s["dist"] + w).astype(
+            jnp.int32)),
+        _sssp_like(receive=drifted),
+        _sssp_like(monoid=Monoid("subtract", "min", op=lambda a, b: a - b)),
+        _sssp_like(emit=leaky),
+    ]
+    messages = []
+    for spec in specs:
+        with pytest.raises(ProgramVerificationError) as exc:
+            verify_program(spec, name="broken")
+        messages.append(str(exc.value))
+    assert len(set(messages)) == len(messages)
+
+
+def test_verification_can_be_disabled(monkeypatch):
+    from repro.analysis.verify import verification_enabled
+
+    monkeypatch.setenv("REPRO_VERIFY", "0")
+    assert not verification_enabled()
+    monkeypatch.delenv("REPRO_VERIFY")
+    assert verification_enabled()
+
+
+# --------------------------------------------------------------------------
+# runtime sanitizer
+# --------------------------------------------------------------------------
+
+def _session(n=128, m=1024, seed=0, n_cells=2, **kw):
+    from repro.core.session import DiffusionSession
+
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m).astype(np.int32)
+    dst = rng.integers(0, n, m).astype(np.int32)
+    w = rng.uniform(0.1, 2.0, m).astype(np.float32)
+    return DiffusionSession.from_edges(src, dst, n, weight=w,
+                                       n_cells=n_cells, **kw)
+
+
+def test_warm_query_zero_retraces_across_sources(sanitize):
+    """Acceptance (ISSUE #8): two queries differing only in source share
+    one _run_rounds compilation — cache-miss delta exactly 0."""
+    _run_rounds = importlib.import_module("repro.core.diffuse")._run_rounds
+    sess = _session()
+    sess.query("sssp", source=0)                  # warm the jit
+    before = _run_rounds._cache_size()
+    with sanitize() as rep:
+        sess.query("sssp", source=1)
+        sess.query("sssp", source=7)
+    assert _run_rounds._cache_size() - before == 0
+    assert rep.total_retraces() == 0
+
+
+def test_warm_laned_query_zero_retraces_across_source_sets(sanitize):
+    """Satellite (ISSUE #8): two query("sssp", sources=[...]) calls with
+    different sources but identical lane shape hit the same jit cache
+    entry — the laned program's init-excluding identity plus the eager
+    init hoist keep the cache-miss delta at exactly 0."""
+    _run_rounds = importlib.import_module("repro.core.diffuse")._run_rounds
+    sess = _session(seed=1)
+    sess.query("sssp", sources=[0, 1])            # warm the 2-lane entry
+    before = _run_rounds._cache_size()
+    with sanitize() as rep:
+        sess.query("sssp", sources=[5, 9])
+    assert _run_rounds._cache_size() - before == 0
+    assert rep.total_retraces() == 0
+
+
+def test_sanitize_catches_forced_retrace(sanitize):
+    """A genuinely-cold static configuration inside a sanitize() block
+    must raise RetraceError on exit."""
+    from repro.analysis import RetraceError
+
+    sess = _session(seed=3)
+    sess.query("sssp", source=0, sweep="pull")
+    with pytest.raises(RetraceError, match="_run_rounds"):
+        with sanitize():
+            sess.query("sssp", source=0, sweep="push", refresh=True)
+
+
+def test_sanitize_blocks_host_roundtrip(sanitize):
+    """On CPU the guard fires on the *re-upload* leg of a host
+    round-trip (d2h from a CPU device is zero-copy and unguarded):
+    compute on the host, feed the result back into device math."""
+    import jax.numpy as jnp
+
+    x = jnp.arange(8.0)
+    with pytest.raises(Exception, match="[Tt]ransfer"):
+        with sanitize(retraces=False):
+            leaked = float(x.sum())     # d2h: free on CPU
+            _ = x * leaked              # h2d re-upload: guard trips
+
+
+def test_warm_apply_is_retrace_and_transfer_free(sanitize):
+    """Same-ladder update batches reuse one compiled apply_updates."""
+    from repro.core.dynamic import NameServer
+    from repro.core.updates import UpdateBatch, apply_updates
+
+    sess = _session(seed=5, edge_slack=1.0, node_slack=0.5)
+    ns = NameServer(sess.part)
+
+    def batch(lo):
+        ub = UpdateBatch(ns)
+        for i in range(lo, lo + 6):
+            ub.add_edge(i % sess.n_ids, (i * 13 + 2) % sess.n_ids, 0.25)
+        ops, _ = ub._pack_ops(sess.sg)
+        return ops
+
+    import jax
+
+    sg1, _, _ = apply_updates(sess.sg, batch(0), stage=True)   # warm
+    jax.block_until_ready(sg1.csr_live)
+    with sanitize() as rep:
+        sg2, _, _ = apply_updates(sg1, batch(40), stage=True)
+        jax.block_until_ready(sg2.csr_live)
+    assert rep.retraces()["apply_updates"] == 0
+
+
+def test_sanitize_report_survives_clean_exit(sanitize):
+    sess = _session(seed=9)
+    sess.query("cc")
+    with sanitize() as rep:
+        sess.query("cc")
+    assert rep.total_retraces() == 0
+    assert set(rep.retraces()) == {"_run_rounds", "apply_updates"}

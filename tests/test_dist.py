@@ -1,6 +1,7 @@
 """Distribution machinery: pipeline parallelism, compressed DP, logical
 sharding rules, HLO analysis."""
 
+import os
 import subprocess
 import sys
 import textwrap
@@ -10,6 +11,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.dist.sharding import logical_constraint, sharding_context
+
+# The subprocess tests force the *host* platform (2 fake CPU devices), so
+# pin the backend: on images that ship libtpu, an unset JAX_PLATFORMS
+# makes the child probe for a TPU and sleep-retry until the timeout.
+_SUBPROC_ENV = {
+    "PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+    "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+}
 
 
 def test_pipeline_two_stages_matches_sequential():
@@ -43,8 +52,7 @@ def test_pipeline_two_stages_matches_sequential():
     """)
     out = subprocess.run(
         [sys.executable, "-c", prog], capture_output=True, text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+        env=_SUBPROC_ENV,
         cwd="/root/repo", timeout=600,
     )
     assert "PIPELINE_OK" in out.stdout, out.stdout + out.stderr
@@ -86,8 +94,7 @@ def test_compressed_psum_single_shard_roundtrip():
     """)
     out = subprocess.run(
         [sys.executable, "-c", prog], capture_output=True, text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+        env=_SUBPROC_ENV,
         cwd="/root/repo", timeout=600,
     )
     assert "COMPRESSED_OK" in out.stdout, out.stdout + out.stderr

@@ -363,6 +363,33 @@ def test_apply_is_fully_device_resident():
     assert ops["ed_su"].shape[0] == 1
 
 
+_WARM_QUERY_MATRIX = [
+    (name, kwargs, backend)
+    for name, kwargs in [("sssp", {"source": 0}), ("bfs", {"source": 2}),
+                         ("cc", {}), ("ppr", {"source": 1}),
+                         ("pagerank", {})]
+    for backend in ("xla", "pallas")
+]
+
+
+@pytest.mark.parametrize("name,kwargs,backend", _WARM_QUERY_MATRIX)
+def test_warm_query_matrix_transfer_and_retrace_free(name, kwargs, backend,
+                                                     sanitize):
+    """Acceptance (ISSUE #8): every builtin, on the sharded engine and
+    both relaxation backends, re-answers a warm query under the full
+    sanitizer — no guarded transfers, no hot-path retraces — and
+    bitwise-identically to the cold run."""
+    from repro.core import DiffusionSession
+
+    src, dst, w, n = make_graph_family("scale_free", 120, seed=21)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=2)
+    cold = sess.query(name, backend=backend, **kwargs)
+    with sanitize() as rep:
+        warm = sess.query(name, backend=backend, refresh=True, **kwargs)
+    assert rep.total_retraces() == 0
+    assert np.array_equal(np.asarray(cold.values), np.asarray(warm.values))
+
+
 def test_incremental_apply_can_be_forced_or_disabled():
     """apply(incremental=False) forces the eager rebuild (benchmark
     baseline); incremental=True raises when the graph cannot stage."""
