@@ -1,4 +1,4 @@
-"""Scaling benchmarks (DESIGN.md §2.10, BENCH_pr7.json).
+"""Scaling benchmarks (DESIGN.md §2.10, BENCH_pr9.json).
 
 Three benches over the graph-ingest pipeline at memory-bound scale:
 

@@ -1,0 +1,168 @@
+"""Skew benchmarks — rhizome hub splitting (DESIGN.md §2.12, BENCH_pr9.json).
+
+Two benches over the replica-vertex path:
+
+- ``telemetry``: layout skew per family, replicas off vs on — max
+  out-degree, split-hub count, per-cell edge capacity ``ep`` and the
+  cell edge-load max/mean ratio.  Asserts that on the skewed families
+  (scale_free, powerlaw_cluster) splitting reduces both ``ep`` and the
+  load ratio, and that the uniform family (erdos_renyi) splits nothing
+  and keeps ``ep`` within 5%.
+- ``sweep``: end-to-end SSSP + PageRank wall time, replicas off vs on,
+  warm min-of-reps with ``refresh=True`` so every rep runs the full
+  diffusion.  Asserts value parity off-vs-on in both modes (SSSP
+  bitwise, PageRank allclose); in full mode additionally asserts the
+  >= 1.5x acceptance bar for both SSSP and PageRank on at least one
+  skewed family/cell-count combination and no >5% regression on the
+  uniform family.
+
+``--quick`` (CI smoke) shrinks to n=20k / S=16 / 1 rep with an explicit
+degree cutoff (the auto policy needs full-size hubs to trip); the
+parity and telemetry asserts run in both modes, the speedup bar only at
+full size.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from repro.core.generators import make_graph_family
+from repro.core.session import DiffusionSession
+
+SKEWED = ("scale_free", "powerlaw_cluster")
+UNIFORM = ("erdos_renyi",)
+
+
+def _layout_row(family: str, n: int, n_cells: int, thr, seed: int = 0):
+    src, dst, w, n = make_graph_family(family, n, seed=seed)
+    row = dict(bench="telemetry", family=family, n=n, cells=n_cells,
+               max_degree=int(np.bincount(src, minlength=n).max()))
+    sessions = {}
+    for tag, t in (("off", None), ("on", thr)):
+        sess = DiffusionSession.from_edges(
+            src, dst, n, w, n_cells=n_cells, replica_threshold=t)
+        sg = sess.part.sg
+        loads = np.asarray(sg.edge_ok).sum(axis=1)
+        row[f"ep_{tag}"] = int(sg.edges_per_shard)
+        row[f"load_ratio_{tag}"] = float(loads.max() / max(1.0, loads.mean()))
+        if tag == "on":
+            rep = sess.part.replica
+            row["replica_groups"] = (0 if rep is None
+                                     else int(rep.hub_gid.shape[0]))
+            row["replica_slots"] = (0 if rep is None
+                                    else int(rep.n_members.sum()))
+            # flat graphs fall back to the unsplit layout (partition.py):
+            # identical placement means any on-vs-off timing gap below is
+            # measurement noise, not a cost of the replica machinery
+            row["identical"] = bool(
+                row["ep_on"] == row["ep_off"]
+                and np.array_equal(np.asarray(sessions["off"].part.owner),
+                                   np.asarray(sess.part.owner)))
+        sessions[tag] = sess
+    if family in SKEWED:
+        # the skew-aware layout must shrink both the padded edge capacity
+        # and the max/mean cell edge-load imbalance (whether the win
+        # comes from strided dealing alone — small S, where per-cell
+        # capacity dwarfs any degree — or from actual hub splits)
+        assert row["ep_on"] < row["ep_off"], row
+        assert row["load_ratio_on"] < row["load_ratio_off"], row
+    else:
+        # uniform degrees: nothing crosses the auto threshold and the
+        # layout must not pay for the machinery it does not use — the
+        # fallback keeps the placement bitwise-identical to off
+        assert row["replica_groups"] == 0, row
+        assert row["identical"], row
+    return row, sessions
+
+
+def _time_query(sess: DiffusionSession, prog: str, reps: int, **kw):
+    res = sess.query(prog, refresh=True, **kw)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        res = sess.query(prog, refresh=True, **kw)
+        jax.block_until_ready(res.values)
+        best = min(best, time.perf_counter() - t0)
+    return best, np.asarray(res.values)
+
+
+def _sweep_rows(family: str, sessions: dict, n: int, n_cells: int,
+                reps: int):
+    rows = []
+    n_real = sessions["off"].part.n_real
+    for prog, kw in (("sssp", dict(source=0)), ("pagerank", {})):
+        t_off, v_off = _time_query(sessions["off"], prog, reps, **kw)
+        t_on, v_on = _time_query(sessions["on"], prog, reps, **kw)
+        v_off, v_on = v_off[:n_real], v_on[:n_real]
+        # the replica merge is a pure layout change: min-combine programs
+        # are bitwise, pagerank's float32 sum-combine reassociates across
+        # members and rounds (observed ~1e-6 abs drift at n=20k)
+        if prog == "sssp":
+            assert np.array_equal(v_off, v_on), (family, prog)
+        else:
+            assert np.allclose(v_off, v_on, rtol=1e-4, atol=1e-5), (
+                family, prog, float(np.abs(v_off - v_on).max()))
+        rows.append(dict(bench="sweep", family=family, n=n, cells=n_cells,
+                         prog=prog, off_s=t_off, on_s=t_on,
+                         speedup=t_off / t_on))
+    return rows
+
+
+def run(quick: bool = False):
+    n = 20_000 if quick else 100_000
+    # SSSP peaks at S=64 (fewer, fuller cells amortize per-round cost);
+    # PageRank's longer sweeps only clear the bar at S=32 where the edge
+    # term dominates the S^2 exchange buffers — record both at full size
+    cells = (16,) if quick else (32, 64)
+    # the "auto" policy keys off per-cell edge load and does not trip on
+    # quick-size graphs (max degree ~400 at n=20k), so CI pins an
+    # explicit cutoff that splits the few largest hubs
+    thr = 200 if quick else "auto"
+    reps = 1 if quick else 2
+    rows = []
+    sweep_rows = []
+    for family in SKEWED + UNIFORM:
+        for n_cells in cells:
+            if family in UNIFORM and n_cells != cells[-1]:
+                continue       # flat degrees: one cell count suffices
+            row, sessions = _layout_row(family, n, n_cells, thr)
+            rows.append(row)
+            sweep_rows += _sweep_rows(family, sessions, n, n_cells, reps)
+            del sessions
+    # the replica machinery itself (not just the strided cut) must be
+    # exercised somewhere in the matrix: auto trips at the larger cell
+    # counts, the quick cutoff splits the n=20k hubs directly
+    assert any(r["replica_groups"] > 0 for r in rows
+               if r["family"] in SKEWED), rows
+    rows += sweep_rows
+    if not quick:
+        for prog in ("sssp", "pagerank"):
+            best = max(r["speedup"] for r in sweep_rows
+                       if r["family"] in SKEWED and r["prog"] == prog)
+            assert best >= 1.5, (
+                f"skewed-family {prog} speedup {best:.2f}x < 1.5x bar")
+        telem = {(r["family"], r["cells"]): r for r in rows
+                 if r["bench"] == "telemetry"}
+        for r in sweep_rows:
+            if r["family"] in UNIFORM:
+                # identical layouts make the timing comparison pure
+                # noise; the assert only bites if the fallback broke
+                assert (telem[(r["family"], r["cells"])]["identical"]
+                        or r["speedup"] >= 0.95), (
+                    f"uniform-family regression: {r}")
+    return rows
+
+
+def main():
+    import sys
+    rows = run(quick="--quick" in sys.argv)
+    for r in rows:
+        print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call for the timed
 benches; derived = the paper-comparable metric) and writes the same
-records, plus the kernel-backend tag, to ``BENCH_pr7.json`` at the repo
+records, plus the kernel-backend tag, to ``BENCH_pr9.json`` at the repo
 root so the perf trajectory accumulates machine-readably across PRs.
 """
 
@@ -183,6 +183,29 @@ def main() -> None:
                 backend="xla",
             )
 
+    # DESIGN.md §2.12: rhizome hub splitting — layout skew telemetry and
+    # the end-to-end SSSP/PageRank sweep, replicas off vs on (parity,
+    # ep-reduction, and full-size speedup asserts live inside)
+    from benchmarks import bench_skew
+    for r in bench_skew.run(quick=quick):
+        if r["bench"] == "telemetry":
+            _csv(
+                f"skew/layout/{r['family']}/c{r['cells']}",
+                0.0,
+                f"ep_off={r['ep_off']};ep_on={r['ep_on']};"
+                f"load_ratio_off={r['load_ratio_off']:.2f};"
+                f"load_ratio_on={r['load_ratio_on']:.2f};"
+                f"groups={r['replica_groups']}",
+            )
+        else:
+            _csv(
+                f"skew/{r['prog']}/{r['family']}/c{r['cells']}",
+                r["on_s"] * 1e6,
+                f"speedup_vs_off={r['speedup']:.2f};"
+                f"off_s={r['off_s']:.2f}",
+                backend="xla",
+            )
+
     # Roofline table from any dry-run artifacts present
     from benchmarks import roofline
     rows = roofline.table()
@@ -197,7 +220,7 @@ def main() -> None:
 
     # quick (CI smoke) runs write a sibling file so they never clobber the
     # committed full-size trajectory records
-    fname = "BENCH_pr7.quick.json" if quick else "BENCH_pr7.json"
+    fname = "BENCH_pr9.quick.json" if quick else "BENCH_pr9.json"
     out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                        "..", fname)
     with open(os.path.abspath(out), "w") as f:

@@ -279,6 +279,43 @@ def verify_program(spec, name: str = "") -> None:
     _check_state(name, "receive", out_s[0], schema, (_NP,))
     _check_mask(name, "receive", out_s[1], (_NP,))
 
+    # ---- replica-mergeability: empty-inbox receive is state-identity ----
+    # Hub replicas (DESIGN.md §2.12) mirror one vertex's state across
+    # member slots and deliver messages only through the round-boundary
+    # monoid merge, so within a round every member sees receive() with
+    # has_msg=False wherever the merge withheld delivery.  Mirrors stay
+    # bitwise-coherent only if such an empty receive leaves the state
+    # bitwise-unchanged — a receive that rewrites state unconditionally
+    # would drift the members apart (SPMD devices run data-dependent
+    # local trip counts) and the merged value would stop being *the*
+    # vertex value.  Checked on seeded concrete values, so this needs the
+    # same transfer-guard opt-out as the monoid check above.
+    with jax.transfer_guard("allow"):
+        rng = np.random.default_rng(7)
+        nok = jnp.asarray(rng.integers(0, 2, (_NP,)).astype(bool))
+        state = {}
+        for k, f in schema.items():
+            val = _seeded(_dt(f.dtype), (_NP,), rng)
+            if f.on_dead is not None:
+                val = jnp.where(nok, val,
+                                jnp.asarray(f.on_dead).astype(f.dtype))
+            state[k] = val
+        ident_in = jnp.broadcast_to(monoid.identity(msg_dtype), (_NP,))
+        no_has = jnp.zeros((_NP,), bool)
+        pay0 = (jnp.full((_NP,), -1, jnp.int32)
+                if spec.payload is not None else None)
+        out_state, _ = spec.receive(state, ident_in, no_has, pay0, nok)
+        for k in schema:
+            got = np.asarray(out_state[k])[np.asarray(nok)]
+            want = np.asarray(state[k])[np.asarray(nok)]
+            if not np.array_equal(got, want, equal_nan=True):
+                raise _err(
+                    name, "receive",
+                    f"field {k!r} changes under an empty inbox (has_msg "
+                    f"all-False) — hub-replica mirrors (DESIGN.md §2.12) "
+                    f"need receive to be state-identity when no message "
+                    f"is delivered; gate every state write on has_msg")
+
     # ---- on_send: schema-preserving --------------------------------------
     if spec.on_send is not None:
         sent_s = _eval_shape(name, "on_send", spec.on_send, n_state, has)

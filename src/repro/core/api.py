@@ -42,15 +42,20 @@ def build(
     strategy: str = "block",
     edge_slack: float = 0.0,
     node_slack: float = 0.0,
+    replica_threshold: int | str | None = None,
 ) -> Partitioned:
     """Build + partition a graph over n_cells compute cells.
 
     ``edge_slack`` / ``node_slack`` reserve free capacity slots per cell for
-    dynamic updates (the paper's vertex/edge add primitives)."""
+    dynamic updates (the paper's vertex/edge add primitives).
+    ``replica_threshold`` enables skew-aware hub splitting (DESIGN.md
+    §2.12): int = degree cutoff, "auto" = scale with per-cell edge load,
+    None = unsplit."""
     g = from_edges(
         src, dst, n_nodes, weight, edge_slack=edge_slack, node_slack=node_slack
     )
-    return partition(g, n_cells, strategy=strategy)
+    return partition(g, n_cells, strategy=strategy,
+                     replica_threshold=replica_threshold)
 
 
 def _trim(part: Partitioned, res: Result) -> Result:

@@ -68,6 +68,7 @@ __all__ = [
     "FRONTIER_LOG_CAP",
     "diffuse_spmd_step",
     "make_spmd_diffuse",
+    "logical_view",
 ]
 
 # Per-round introspection buffers (frontier size, chosen direction) record
@@ -107,7 +108,8 @@ def _gate(prog, vstate, active, threshold):
 
 
 def _local_iter_shard(prog: VertexProgram, np_, s_, my_shard, sg_s, st, relax,
-                      threshold=None, lane_live=None, bucket=None):
+                      threshold=None, lane_live=None, bucket=None,
+                      member_full=None):
     """One local relaxation sub-iteration, per-shard view (vmapped over S).
 
     The gather→emit→segment-combine step is delegated to ``relax`` (built by
@@ -117,6 +119,13 @@ def _local_iter_shard(prog: VertexProgram, np_, s_, my_shard, sg_s, st, relax,
     local inbox inside this sub-iteration; the other rows merge into the
     cross-cell outbox.  ``lane_live`` masks converged lanes out of message
     generation.
+
+    ``member_full`` ([S, Np] bool, or None) marks hub-replica member slots
+    (DESIGN.md §2.12).  Messages destined for a member slot are *never*
+    delivered mid-round — even from the slot's own cell — but are held in
+    the outbox for the round-boundary replica merge, so every member of a
+    group applies the identical merged message exactly once per round and
+    the members stay state-mirrored.
     """
     (vstate, active, outbox, outbox_has, outbox_pay) = st
     monoid = prog.monoid
@@ -128,15 +137,27 @@ def _local_iter_shard(prog: VertexProgram, np_, s_, my_shard, sg_s, st, relax,
     table, cnt, pay = relax(vstate, senders, sg_s, bucket)
     mine = (jnp.arange(s_, dtype=jnp.int32) == my_shard).reshape(
         (s_,) + (1,) * (table.ndim - 1))
+    if member_full is None:
+        keep_local = mine
+    else:
+        member_dst = member_full.reshape(
+            (s_,) + (1,) * (table.ndim - 2) + (np_,))
+        keep_local = mine & ~member_dst
 
     inbox = jnp.take(table, my_shard, axis=0)
     has_local = jnp.take(cnt, my_shard, axis=0) > 0
     pay_in = jnp.take(pay, my_shard, axis=0) if prog.with_payload else None
+    if member_full is not None:
+        member_row = jnp.take(member_full, my_shard, axis=0)    # [Np]
+        has_local = has_local & ~member_row
+        inbox = jnp.where(member_row, ident, inbox)
+        if prog.with_payload:
+            pay_in = jnp.where(member_row, -1, pay_in)
 
-    contrib = jnp.where(mine, ident, table)
-    contrib_has = (cnt > 0) & ~mine
+    contrib = jnp.where(keep_local, ident, table)
+    contrib_has = (cnt > 0) & ~keep_local
     if prog.with_payload:
-        pay_contrib = jnp.where(mine, -1, pay)
+        pay_contrib = jnp.where(keep_local, -1, pay)
         take_new = contrib_has & monoid.improves(contrib, outbox)
         outbox_pay = jnp.where(take_new, pay_contrib, outbox_pay)
     outbox = monoid.merge(outbox, contrib, contrib_has)
@@ -151,7 +172,7 @@ def _local_iter_shard(prog: VertexProgram, np_, s_, my_shard, sg_s, st, relax,
     n_send = jnp.sum(cnt)                          # sending edges (actions)
     counts = {
         "actions": n_send,
-        "remote": n_send - jnp.sum(jnp.where(mine, cnt, 0)),
+        "remote": n_send - jnp.sum(jnp.where(keep_local, cnt, 0)),
     }
     return (vstate, activated, outbox, outbox_has, outbox_pay), counts
 
@@ -177,7 +198,122 @@ def _sg_as_dict(sg: ShardedGraph, with_push: bool = False):
     d.update(sg.csr_view())
     if with_push:
         d.update(sg.push_view())
+    if sg.replica_members is not None:
+        d["replica_members"] = sg.replica_members
     return d
+
+
+# --------------------------------------------------------------------------
+# Hub replicas ("rhizomes", DESIGN.md §2.12): engine-side merge machinery.
+# All members of a split hub mirror one vertex state; the engines enforce it
+# by (a) suppressing mid-round delivery at member slots (_local_iter_shard),
+# (b) merging member partials through the monoid once per round at the
+# exchange and re-broadcasting the merged message to every member, and
+# (c) re-broadcasting vstate/active from the primary at diffusion entry so
+# adopted/repaired states (which only touch primaries) re-mirror for free.
+# --------------------------------------------------------------------------
+
+def _replica_maps(rmem, S: int, Np: int):
+    """[G, Rmax] flat member keys -> (member_mask [S, Np] bool marking every
+    member slot, rsrc [S*Np] int32 mapping each slot to its group primary's
+    flat key — identity outside groups)."""
+    tot = S * Np
+    valid = rmem >= 0
+    tgt = jnp.where(valid, rmem, tot)
+    member_mask = jnp.zeros((tot,), bool).at[tgt].set(True, mode="drop")
+    prim = jnp.broadcast_to(rmem[:, :1], rmem.shape).astype(jnp.int32)
+    rsrc = jnp.arange(tot, dtype=jnp.int32).at[tgt].set(prim, mode="drop")
+    return member_mask.reshape(S, Np), rsrc
+
+
+def _broadcast_from_primary(tree, rsrc, S: int, Np: int):
+    """Copy each group primary's value over all its member slots (identity
+    elsewhere); leaves are [S, (L,), Np]."""
+    def bcast(x):
+        lead = x.shape[1:-1]
+        flat = jnp.moveaxis(x, 0, -2).reshape(lead + (S * Np,))
+        flat = flat[..., rsrc]
+        return jnp.moveaxis(flat.reshape(lead + (S, Np)), -2, 0)
+    return jax.tree_util.tree_map(bcast, tree)
+
+
+def _merge_replicas(monoid, with_payload: bool, ident, rmem, S: int, Np: int,
+                    inbox, has, pay):
+    """Round-boundary replica merge on per-destination-reduced inboxes
+    ([S, (L,), Np]): gather each group's member entries in fixed member
+    order, fold them through the monoid (``reduce_rows`` — the same fixed
+    tree order as the exchange reduce, so sum programs stay deterministic),
+    and scatter the merged message back to *all* member slots.  Runs
+    identically in the logical engine and (on all_gather'ed rows) in the
+    SPMD engine, so both produce bit-identical merges."""
+    tot = S * Np
+    lead = inbox.shape[1:-1]
+    R = rmem.shape[1]
+
+    def flat(x):
+        return jnp.moveaxis(x, 0, -2).reshape(lead + (tot,))
+
+    def unflat(x):
+        return jnp.moveaxis(x.reshape(lead + (S, Np)), -2, 0)
+
+    fi, fh = flat(inbox), flat(has)
+    valid = rmem >= 0                              # [G, R]
+    idx = jnp.clip(rmem, 0)
+    vals = fi[..., idx]                            # [..., G, R]
+    hm = fh[..., idx] & valid
+    # invalid members gather garbage through the clip — force to identity
+    vals = jnp.where(hm, vals, ident)
+    vr = jnp.moveaxis(vals, -1, 0)                 # [R, ..., G]
+    hr = jnp.moveaxis(hm, -1, 0)
+    merged = monoid.reduce_rows(vr, hr, axis=0)    # [..., G]
+    has_g = jnp.any(hr, axis=0)
+    tgt = jnp.where(valid, rmem, tot)
+    fi = fi.at[..., tgt].set(
+        jnp.broadcast_to(merged[..., None], merged.shape + (R,)),
+        mode="drop")
+    fh = fh.at[..., tgt].set(
+        jnp.broadcast_to(has_g[..., None], has_g.shape + (R,)),
+        mode="drop")
+    out_pay = None
+    if with_payload:
+        fp = flat(pay)
+        pr = jnp.moveaxis(fp[..., idx], -1, 0)     # [R, ..., G]
+        best = monoid.argbest(vr, axis=0)          # [..., G]
+        pay_g = jnp.take_along_axis(pr, best[None], axis=0)[0]
+        fp = fp.at[..., tgt].set(
+            jnp.broadcast_to(pay_g[..., None], pay_g.shape + (R,)),
+            mode="drop")
+        out_pay = unflat(fp)
+    return unflat(fi), unflat(fh), out_pay
+
+
+def logical_view(sg: ShardedGraph):
+    """The program-init view of a (possibly hub-split) graph: ``node_ok``
+    counts each hub once (False at non-primary member slots) and
+    ``out_degree`` carries the *group-total* degree at every member slot,
+    so degree-normalized emits (PPR / PageRank) divide by the hub's real
+    out-degree.  Unsplit graphs pass through unchanged; the engine's
+    entry broadcast then mirrors the primary's init state over members."""
+    if sg.replica_members is None:
+        return sg
+    import types as _types
+
+    S, Np = sg.n_shards, sg.n_per_shard
+    tot = S * Np
+    rmem = sg.replica_members
+    nonprim = jnp.where(rmem[:, 1:] >= 0, rmem[:, 1:], tot)
+    node_ok = sg.node_ok & ~(
+        jnp.zeros((tot,), bool).at[nonprim].set(True, mode="drop")
+        .reshape(S, Np))
+    valid = rmem >= 0
+    flatdeg = sg.out_degree.reshape(tot)
+    share = jnp.where(valid, flatdeg[jnp.clip(rmem, 0)], 0)
+    total = share.sum(axis=1)                      # [G]
+    deg = flatdeg.at[jnp.where(valid, rmem, tot)].set(
+        jnp.broadcast_to(total[:, None], rmem.shape).astype(flatdeg.dtype),
+        mode="drop").reshape(S, Np)
+    return _types.SimpleNamespace(gid=sg.gid, node_ok=node_ok,
+                                  out_degree=deg)
 
 
 @partial(jax.jit, static_argnames=("prog", "max_local_iters", "max_rounds",
@@ -193,6 +329,16 @@ def _run_rounds(sg: ShardedGraph, prog: VertexProgram, vstate0, active0,
     if sg.csr_perm is None or (sweep != "pull" and sg.push_perm is None):
         sg = sg.with_csr()          # invalidated views: rebuild in-trace
     sgd = _sg_as_dict(sg, with_push=sweep != "pull")
+    # the [G, Rmax] member table rides outside the per-shard vmap below
+    rmem = sgd.pop("replica_members", None)
+    if rmem is not None:
+        member_mask, rsrc = _replica_maps(rmem, S, Np)
+        # entry broadcast: callers (init, adopt, commit-repair splices)
+        # only maintain primary slots — mirror them over the members
+        vstate0 = _broadcast_from_primary(vstate0, rsrc, S, Np)
+        active0 = _broadcast_from_primary(active0, rsrc, S, Np)
+    else:
+        member_mask = None
     relax = make_relax(prog, S, Np, sg.csr_block, backend, sweep,
                        push_threshold, delta_e=sg.delta_width)
     nb = sgd["csr_key"].shape[-1] // sg.csr_block
@@ -274,6 +420,7 @@ def _run_rounds(sg: ShardedGraph, prog: VertexProgram, vstate0, active0,
                 lambda i, g, s: _local_iter_shard(
                     prog, Np, S, i, g, s, relax,
                     thr if use_gate else None, lane_live, bucket,
+                    member_full=member_mask,
                 ),
                 in_axes=(0, 0, 0),
             )
@@ -304,6 +451,13 @@ def _run_rounds(sg: ShardedGraph, prog: VertexProgram, vstate0, active0,
         if prog.with_payload:
             src_idx = monoid.argbest(outbox, axis=0)
             pay_all = jnp.take_along_axis(outbox_pay, src_idx[None], axis=0)[0]
+        if rmem is not None:
+            # replica merge, folded into the exchange: member partials
+            # combine through the monoid and the merged message lands on
+            # every member slot before receive
+            inbox_all, has_all, pay_all = _merge_replicas(
+                monoid, prog.with_payload, ident, rmem, S, Np,
+                inbox_all, has_all, pay_all)
         recv = jax.vmap(
             lambda vs, ib, hs, pl, nok: prog.receive(vs, ib, hs, pl, nok)
         )
@@ -391,7 +545,7 @@ def diffuse(
     # is legal under the sanitizer, whose contract guards d2h syncs and
     # retraces — leave the d2h direction of any ambient guard in force.
     with jax.transfer_guard_host_to_device("allow"):
-        vstate0, active0 = prog.init(sg)
+        vstate0, active0 = prog.init(logical_view(sg))
     return _run_rounds(sg, prog, vstate0, active0, max_local_iters,
                        max_rounds, delta, backend, sweep, push_threshold)
 
@@ -457,16 +611,50 @@ def diffuse_spmd_step(prog: VertexProgram, axis_name: str, n_shards: int,
     ident_f = lambda: monoid.identity(prog.msg_dtype)
 
     def per_device(sgd):
+        import types as _types
+
         my_shard = lax.axis_index(axis_name).astype(jnp.int32)
+        sgd = dict(sgd)
+        # replicated [G, Rmax] member table (P() spec — no device axis)
+        rmem = sgd.pop("replica_members", None)
         sg_s = {k: v[0] for k, v in sgd.items()}
 
-        # init needs [S, Np]-shaped thinking; emulate with this shard's block
-        class _View:
-            gid = sg_s["gid"]
-            node_ok = sg_s["node_ok"]
-            out_degree = sg_s["out_degree"]
+        if rmem is not None:
+            member_mask, rsrc = _replica_maps(rmem, S, Np)
+            tot = S * Np
+            # logical init view for this device's row: node_ok counts each
+            # hub once; out_degree carries group totals (cross-device sum)
+            nonprim = (rsrc != jnp.arange(tot, dtype=jnp.int32)).reshape(
+                S, Np)
+            deg_all = lax.all_gather(sg_s["out_degree"], axis_name)
+            flatdeg = deg_all.reshape(tot)
+            valid = rmem >= 0
+            share = jnp.where(valid, flatdeg[jnp.clip(rmem, 0)], 0)
+            deg_log = flatdeg.at[jnp.where(valid, rmem, tot)].set(
+                jnp.broadcast_to(share.sum(axis=1)[:, None], rmem.shape
+                                 ).astype(flatdeg.dtype),
+                mode="drop").reshape(S, Np)
+            view_nok = sg_s["node_ok"] & ~jnp.take(nonprim, my_shard, axis=0)
+            view_deg = jnp.take(deg_log, my_shard, axis=0)
+        else:
+            member_mask = None
+            view_nok = sg_s["node_ok"]
+            view_deg = sg_s["out_degree"]
 
-        vstate, active = prog.init(_View)
+        # init needs [S, Np]-shaped thinking; emulate with this shard's block
+        view = _types.SimpleNamespace(gid=sg_s["gid"], node_ok=view_nok,
+                                      out_degree=view_deg)
+        vstate, active = prog.init(view)
+        if rmem is not None:
+            # entry broadcast: mirror primary init state over member slots
+            # (members may live on other devices — gather, map, re-slice)
+            def _bcast_row(x):
+                full = _broadcast_from_primary(
+                    lax.all_gather(x, axis_name), rsrc, S, Np)
+                return jnp.take(full, my_shard, axis=0)
+
+            vstate = jax.tree_util.tree_map(_bcast_row, vstate)
+            active = _bcast_row(active)
         outbox = jnp.full((S,) + lane + (Np,), ident_f(), prog.msg_dtype)
         outbox_has = jnp.zeros((S,) + lane + (Np,), bool)
         outbox_pay = (jnp.full((S,) + lane + (Np,), -1, jnp.int32)
@@ -520,7 +708,8 @@ def diffuse_spmd_step(prog: VertexProgram, axis_name: str, n_shards: int,
                     bucket, is_push = None, jnp.zeros((), jnp.int32)
                 st2, counts = _local_iter_shard(prog, Np, S, my_shard, sg_s,
                                                 st2, relax, None, lane_live,
-                                                bucket)
+                                                bucket,
+                                                member_full=member_mask)
                 stats2 = stats2._replace(
                     local_iters=stats2.local_iters + 1,
                     actions=stats2.actions + counts["actions"],
@@ -553,6 +742,21 @@ def diffuse_spmd_step(prog: VertexProgram, axis_name: str, n_shards: int,
                 idx = monoid.argbest(rec, axis=0)
                 pay = jnp.take_along_axis(rec_pay, idx[None], axis=0)[0]
                 outbox_pay = jnp.full_like(outbox_pay, -1)
+            if rmem is not None:
+                # replica merge on the gathered [S, ...] rows — the exact
+                # computation the logical engine runs, then re-slice this
+                # device's row, so both engines merge bit-identically
+                ib = lax.all_gather(inbox, axis_name)
+                hs = lax.all_gather(has, axis_name)
+                pa = (lax.all_gather(pay, axis_name)
+                      if prog.with_payload else None)
+                ib, hs, pa = _merge_replicas(
+                    monoid, prog.with_payload, ident_f(), rmem, S, Np,
+                    ib, hs, pa)
+                inbox = jnp.take(ib, my_shard, axis=0)
+                has = jnp.take(hs, my_shard, axis=0)
+                if prog.with_payload:
+                    pay = jnp.take(pa, my_shard, axis=0)
             vstate, activated = prog.receive(vstate, inbox, has, pay,
                                              sg_s["node_ok"])
             active = active | activated
@@ -646,7 +850,10 @@ def make_spmd_diffuse(mesh, prog: VertexProgram, sg_template,
     vstate_struct, _ = jax.eval_shape(
         _init_struct, sgd_t["gid"], sgd_t["node_ok"], sgd_t["out_degree"]
     )
-    in_specs = ({k: P(axis_name) for k in sgd_t},)
+    # graph arrays shard one cell per device; the [G, Rmax] replica member
+    # table (when present) is replicated — every device needs every group
+    in_specs = ({k: (P() if k == "replica_members" else P(axis_name))
+                 for k in sgd_t},)
     out_specs = (
         jax.tree_util.tree_map(lambda _: P(axis_name), vstate_struct),
         DiffuseStats(*[P()] * len(DiffuseStats._fields)),

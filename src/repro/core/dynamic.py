@@ -28,6 +28,7 @@ import numpy as np
 
 from .graph import ShardedGraph
 from .partition import Partitioned
+from .rhizome import member_rank
 
 __all__ = [
     "NameServer",
@@ -49,16 +50,64 @@ class NameServer:
         self.owner = np.asarray(part.owner).copy()
         self.local = np.asarray(part.local).copy()
         self._next = int(self.owner.shape[0])
+        self.replica = getattr(part, "replica", None)
         self._free_local = {
             s: list(range(part.sg.n_per_shard - 1, -1, -1))
             for s in range(part.sg.n_shards)
         }
-        # slots already taken
-        taken = np.asarray(part.sg.node_ok)
+        # slots already taken; non-primary replica member slots are
+        # permanently reserved for their hub's mirrors — a hub delete
+        # frees only the primary (release() resolves to member 0), so
+        # they must never enter the free lists even when node_ok is off
+        taken = np.asarray(part.sg.node_ok).copy()
+        if self.replica is not None:
+            ms = np.asarray(self.replica.members_s)[:, 1:].ravel()
+            ml = np.asarray(self.replica.members_l)[:, 1:].ravel()
+            live = ms >= 0
+            taken[ms[live], ml[live]] = True
         for s in range(part.sg.n_shards):
             self._free_local[s] = [
                 i for i in range(part.sg.n_per_shard) if not taken[s, i]
             ]
+
+    # -- hub-replica routing (rhizomes, DESIGN.md §2.12) -------------------
+
+    def _member_slot(self, hub: int, other: int):
+        """(shard, local) of the member slot the rank hash assigns the
+        (hub, other) edge key to, or None when ``hub`` is unsplit."""
+        rep = self.replica
+        h = int(hub)
+        if rep is None or h >= rep.group_of.shape[0]:
+            return None     # gids minted after partition are never split
+        g = int(rep.group_of[h])
+        if g < 0:
+            return None
+        m = int(member_rank(h, int(other), int(rep.n_members[g])))
+        return int(rep.members_s[g, m]), int(rep.members_l[g, m])
+
+    def route_edge(self, u: int, v: int) -> tuple[int, int]:
+        """Storage slot of directed edge u -> v: the member of a split u
+        picked by the rank hash, else u's primary slot.  Build, add and
+        delete all route through this, so incremental == rebuild."""
+        return self._member_slot(u, v) or self.resolve(u)
+
+    def route_target(self, v: int, u: int) -> tuple[int, int]:
+        """Destination slot of directed edge u -> v: the member of a
+        split v picked by the rank hash, else v's primary slot."""
+        return self._member_slot(v, u) or self.resolve(v)
+
+    def members_of(self, gid: int):
+        """All (shard, local) member slots of a split hub (primary
+        first), or None for unsplit vertices."""
+        rep = self.replica
+        g = int(gid)
+        if rep is None or g >= rep.group_of.shape[0]:
+            return None
+        gi = int(rep.group_of[g])
+        if gi < 0:
+            return None
+        return [(int(rep.members_s[gi, m]), int(rep.members_l[gi, m]))
+                for m in range(int(rep.n_members[gi]))]
 
     def best_shard(self) -> int:
         """The compute cell with the most free vertex slots (load spread
@@ -110,15 +159,19 @@ def vertex_delete(sg: ShardedGraph, ns: NameServer, gid: int):
 
     CSR maintenance: tombstones the doomed slots in both views in place
     (one elementwise pass — no re-sort); graphs without patchable views
-    invalidate instead."""
-    s, l = ns.resolve(gid)
-    dead_out = jnp.zeros_like(sg.edge_ok).at[s].set(
-        (sg.src_local[s] == l) & sg.edge_ok[s])
+    invalidate instead.  Deleting a split hub fans out over all member
+    slots (out-edges are stored across members); release() then frees
+    only the primary slot — mirrors stay reserved."""
+    pairs = ns.members_of(gid) or [ns.resolve(gid)]
+    ss = jnp.array([p[0] for p in pairs], jnp.int32)
+    ll = jnp.array([p[1] for p in pairs], jnp.int32)
+    dv = jnp.zeros_like(sg.node_ok).at[ss, ll].set(True)
+    dead_out = sg.edge_ok & jnp.take_along_axis(dv, sg.src_local, axis=1)
     sg = dataclasses.replace(
         sg,
-        node_ok=sg.node_ok.at[s, l].set(False),
+        node_ok=sg.node_ok.at[ss, ll].set(False),
         edge_ok=sg.edge_ok & ~dead_out,
-        out_degree=sg.out_degree.at[s, l].set(0),
+        out_degree=sg.out_degree.at[ss, ll].set(0),
     )
     # in-edges pointing at a dead vertex are dropped at receive time via
     # node_ok; also mask them eagerly, shard by shard:
@@ -142,11 +195,14 @@ def vertex_delete(sg: ShardedGraph, ns: NameServer, gid: int):
 
 
 def vertex_touch(sg: ShardedGraph, ns: NameServer, gids):
-    """Activation mask in shard layout for the given vertex ids."""
+    """Activation mask in shard layout for the given vertex ids.
+    Touching a split hub activates every member slot, so each member
+    re-emits its stored out-edge share (mirrored state makes the
+    per-member relax contributions identical to the unsplit emit)."""
     mask = jnp.zeros((sg.n_shards, sg.n_per_shard), bool)
     for g in np.atleast_1d(gids):
-        s, l = ns.resolve(int(g))
-        mask = mask.at[s, l].set(True)
+        for s, l in ns.members_of(int(g)) or [ns.resolve(int(g))]:
+            mask = mask.at[s, l].set(True)
     return mask
 
 
@@ -157,9 +213,14 @@ def edge_add(sg: ShardedGraph, ns: NameServer, u: int, v: int, w: float):
     (an O(1) scatter — no re-sort), so a k-update loop no longer pays a
     sort inside every subsequent diffusion; a full delta segment
     triggers a compacting ``with_csr`` rebuild, and graphs without
-    patchable views invalidate instead (the escape hatch)."""
-    su, lu = ns.resolve(u)
-    sv, lv = ns.resolve(v)
+    patchable views invalidate instead (the escape hatch).
+
+    Split endpoints route through the rank hash: the edge is stored in
+    the member cell ``route_edge`` picks and targets the member slot
+    ``route_target`` picks — the same slots the partition-time build
+    used, so a later delete probes exactly this cell."""
+    su, lu = ns.route_edge(u, v)
+    sv, lv = ns.route_target(v, u)
     can_patch = _can_patch(sg)
     if can_patch and int(sg.delta_count[su]) >= sg.delta_width:
         # compact BEFORE touching topology: the views are consistent
@@ -198,8 +259,9 @@ def edge_delete(sg: ShardedGraph, ns: NameServer, u: int, v: int):
     CSR maintenance: tombstones the edge's stream positions in both
     views (an O(1) scatter through the slot inverses — no re-sort);
     heavily-tombstoned cells compact, and graphs without patchable
-    views invalidate instead."""
-    su, lu = ns.resolve(u)
+    views invalidate instead.  A split source probes the member cell
+    the rank hash stored the edge in (no cross-member search)."""
+    su, lu = ns.route_edge(u, v)
     match = (sg.src_local[su] == lu) & (sg.dst_gid[su] == v) & sg.edge_ok[su]
     slot = jnp.argmax(match)
     ok = match[slot]
@@ -233,11 +295,17 @@ def peek(sg: ShardedGraph, values: jnp.ndarray, ns: NameServer, u: int):
 
     ``values`` is a [S, Np] shard-layout array (e.g. SSSP distances).
     Returns per-out-edge neighbour values, padded with NaN on dead slots.
+    A split hub's out-edges live across its member cells, so the rows of
+    every member concatenate: shape [R * edges_per_shard] (R = 1, the
+    plain [Ep], for unsplit vertices).
     """
-    su, lu = ns.resolve(u)
-    mine = (sg.src_local[su] == lu) & sg.edge_ok[su]
-    nb = values[sg.dst_shard[su], sg.dst_local[su]]
-    return jnp.where(mine, nb, jnp.nan)
+    pairs = ns.members_of(u) or [ns.resolve(u)]
+    rows = []
+    for su, lu in pairs:
+        mine = (sg.src_local[su] == lu) & sg.edge_ok[su]
+        nb = values[sg.dst_shard[su], sg.dst_local[su]]
+        rows.append(jnp.where(mine, nb, jnp.nan))
+    return rows[0] if len(rows) == 1 else jnp.concatenate(rows)
 
 
 # --------------------------------------------------------------------------

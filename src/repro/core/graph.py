@@ -314,6 +314,9 @@ def from_edges(
         "push_inv",
         "delta_count",
         "tomb_count",
+        "replica_of",
+        "replica_group",
+        "replica_members",
     ],
     meta_fields=["n_shards", "n_per_shard", "n_nodes", "csr_block",
                  "delta_blocks"],
@@ -389,6 +392,17 @@ class ShardedGraph:
     push_inv: jnp.ndarray | None = None   # [S, Ep] int32 slot -> push pos
     delta_count: jnp.ndarray | None = None  # [S] int32 staged adds per cell
     tomb_count: jnp.ndarray | None = None   # [S] int32 tombstones per cell
+    # Hub-replica ("rhizome") maps, None on unsplit graphs (DESIGN.md
+    # §2.12).  A split hub occupies one *member* slot per assigned cell;
+    # member 0 is the primary slot the NameServer resolves.
+    replica_of: jnp.ndarray | None = None      # [S, Np] int32 hub gid at
+                                               #   non-primary member slots,
+                                               #   -1 elsewhere
+    replica_group: jnp.ndarray | None = None   # [S, Np] int32 group index at
+                                               #   every member slot, -1 else
+    replica_members: jnp.ndarray | None = None  # [G, Rmax] int32 flat member
+                                                #   keys (s*Np + l), member 0
+                                                #   = primary, -1 = pad
     csr_block: int = DEFAULT_EDGE_BLOCK
     delta_blocks: int = -1               # staged blocks; -1 = policy default
 

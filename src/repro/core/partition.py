@@ -19,12 +19,15 @@ argsort.
 
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import numpy as np
 import jax.numpy as jnp
 
 from .graph import Graph, ShardedGraph, default_delta_blocks, DEFAULT_EDGE_BLOCK
+from .rhizome import member_rank, replica_counts, resolve_replica_threshold
 
-__all__ = ["partition", "Partitioned"]
+__all__ = ["partition", "Partitioned", "ReplicaInfo"]
 
 # Above this vertex count ``strategy="locality"`` falls back to ``block``:
 # the BFS order no longer pays for itself at that scale (and the generator
@@ -38,18 +41,31 @@ LOCALITY_FALLBACK_NODES = 1 << 20
 CAPACITY_SKEW_THRESHOLD = 1.75
 
 
+class ReplicaInfo(NamedTuple):
+    """Host-side view of the hub-replica split (DESIGN.md §2.12), consumed
+    by the NameServer and the update pipeline to route edges of split hubs
+    with the same :func:`~.rhizome.member_rank` hash the build used."""
+
+    hub_gid: np.ndarray     # [G] int32 — split vertex ids
+    members_s: np.ndarray   # [G, Rmax] int32 member cell, -1 pad
+    members_l: np.ndarray   # [G, Rmax] int32 member local slot, -1 pad
+    n_members: np.ndarray   # [G] int32 live member count per hub
+    group_of: np.ndarray    # [n] int32 gid -> group index, -1 unsplit
+
+
 class Partitioned:
     """ShardedGraph plus the global<->local maps needed to move data in/out."""
 
     def __init__(
         self, sg: ShardedGraph, owner: np.ndarray, local: np.ndarray,
-        n_real: int | None = None,
+        n_real: int | None = None, replica: ReplicaInfo | None = None,
     ):
         self.sg = sg
         self.owner = jnp.asarray(owner)   # [n_nodes] int32
         self.local = jnp.asarray(local)   # [n_nodes] int32
         # original (pre-slack) vertex count; capacity slots come after
         self.n_real = int(n_real) if n_real is not None else int(owner.shape[0])
+        self.replica = replica
 
     def to_shard_layout(self, values, fill):
         """[n_nodes] global array -> [S, Np] shard layout."""
@@ -127,10 +143,23 @@ def partition(
     n_shards: int,
     strategy: str = "block",
     seed: int = 0,
+    replica_threshold: int | str | None = None,
 ) -> Partitioned:
     """Partition ``graph`` over ``n_shards`` compute cells.
 
     strategy: 'block' | 'hash' | 'locality'
+
+    ``replica_threshold`` enables skew-aware hub splitting ("rhizomes",
+    DESIGN.md §2.12): every live vertex whose total live degree exceeds
+    the threshold (``"auto"`` = an eighth of the mean per-cell edge load,
+    min one CSR block) is split into R = ceil(degree / threshold) member
+    slots on distinct cells.  Its out-edges are *stored* across members
+    and its in-edges *retargeted* across members via the deterministic
+    :func:`~.rhizome.member_rank` hash, so no single cell's edge stream
+    carries the skew tail; the diffusion engines keep the members
+    state-mirrored by merging their partials through the program's
+    monoid once per round (core/diffuse.py).  ``None`` (default) keeps
+    the unsplit layout.
     """
     n = graph.n_nodes
     src = np.asarray(graph.src)
@@ -164,34 +193,151 @@ def partition(
     # CAPACITY_SKEW_THRESHOLD x the mean edge load, switch to the
     # degree-aware budget so capacity tracks live edges instead of skew.
     live_deg = np.bincount(src[eok], minlength=n)
-    deg_ranked = live_deg[live_sorted]
+    # Hub split policy (rhizomes): R members per vertex, decided on total
+    # live degree (out-edges drive the storage load, in-edges the combine
+    # runs; both are distributed across members below).
+    thr = resolve_replica_threshold(replica_threshold, int(eok.sum()),
+                                    n_shards, DEFAULT_EDGE_BLOCK)
+    if thr is not None:
+        in_deg = np.bincount(dst[eok], minlength=n)
+        n_members = np.where(
+            nok[:n], replica_counts(live_deg + in_deg, thr, n_shards), 1
+        ).astype(np.int32)
+        # the cut budgets on *post-split* storage degree: a split hub's
+        # primary cell keeps only ~1/R of its out-edges
+        deg_for_cut = live_deg // np.maximum(n_members, 1)
+    else:
+        n_members = None
+        deg_for_cut = live_deg
+    deg_ranked = deg_for_cut[live_sorted]
     q = max(1, -(-n_live // n_shards))
     eq_cells = np.minimum(np.arange(n_live) // q, n_shards - 1)
     eq_load = np.bincount(eq_cells, weights=deg_ranked, minlength=n_shards)
     mean_load = max(1.0, float(deg_ranked.sum()) / n_shards)
-    if eq_load.max(initial=0.0) > CAPACITY_SKEW_THRESHOLD * mean_load:
+    eq_skewed = eq_load.max(initial=0.0) > CAPACITY_SKEW_THRESHOLD * mean_load
+    if thr is not None and not eq_skewed and not (n_members > 1).any():
+        # nothing crosses the threshold AND the equal-chunk layout is
+        # already edge-balanced (flat degree distribution): the strided
+        # dealing below would sacrifice neighborhood contiguity for a
+        # balance the graph already has, so fall back to the unsplit
+        # layout — replicas on == off by construction.  With a skewed
+        # tail the dealing stays on even when nothing splits: spreading
+        # the (sub-threshold) heavy vertices is most of the win at small
+        # cell counts, where per-cell capacity dwarfs any single degree.
+        thr = None
+        n_members = None
+    if thr is not None:
+        # splitting caps every vertex's post-split degree near thr, so the
+        # equal-chunk ratio check no longer trips — yet a chunk dense with
+        # capped hubs (power-law hubs cluster at low gids) still carries
+        # several times the mean.  A replica_threshold is an explicit ask
+        # for edge balance: deal vertices over cells in degree order,
+        # boustrophedon so the within-stride spread cancels.  Vertex
+        # counts come out exactly even (Np == ceil(n_live/S) — the engine
+        # cost has an S^2*Np exchange-table term, so ragged chunks are
+        # pure overhead) and each cell's edge sum is a snake-strided
+        # sample of the sorted (split-capped) degree sequence, uniform to
+        # within one capped degree.  Neighborhood contiguity is
+        # sacrificed — cross-cell traffic rides the dense exchange whose
+        # cost is shape-driven, so remote fraction is free here.
+        deg_order = np.argsort(-deg_ranked, kind="stable")
+        pos = np.arange(n_live)
+        blk, off = pos // n_shards, pos % n_shards
+        snake = np.where(blk % 2 == 0, off, n_shards - 1 - off)
+        cell_strided = np.empty(n_live, np.int64)
+        cell_strided[deg_order] = snake
+        # re-pack the rank order to contiguous cell chunks: the slot math
+        # below (local = rank - cell start) assumes a sorted cell_of_rank
+        repack = np.argsort(cell_strided, kind="stable")
+        live_sorted = live_sorted[repack]
+        deg_ranked = deg_ranked[repack]
+        cell_of_rank = cell_strided[repack]
+    elif eq_skewed:
         cell_of_rank = _degree_aware_cut(deg_ranked, n_shards)
     else:
         cell_of_rank = eq_cells
     cell_counts = np.bincount(cell_of_rank, minlength=n_shards)
     starts = np.concatenate([[0], np.cumsum(cell_counts)])[:-1]
-    n_per = max(int(cell_counts.max(initial=0)), -(-n // n_shards))
     owner = np.zeros(n, np.int32)
     local = np.zeros(n, np.int32)
     r = np.arange(n_live)
     owner[live_sorted] = cell_of_rank.astype(np.int32)
     local[live_sorted] = (r - starts[cell_of_rank]).astype(np.int32)
+
+    # Replica members for split hubs: member 0 is the primary slot placed
+    # above; members 1..R-1 go greedily to the least-edge-loaded cell not
+    # already hosting a member of the same group (heaviest hubs first, so
+    # the big shares seed the balance).  Hashed or round-robin offsets
+    # would pile correlated shares onto the same cells — power-law hubs
+    # cluster at low gids, and with ~2 replicas per cell a binomial
+    # pileup of threshold-sized shares re-creates the very skew the
+    # split removes.  The greedy pass is a host loop over replicas only
+    # (not vertices or edges) and partition() is not engine-hot.  Locals
+    # append after each cell's live run via vectorized grouped ranking.
+    hubs = (np.where(n_members > 1)[0] if n_members is not None
+            else np.empty(0, np.int64))
+    G = hubs.shape[0]
+    rep_counts = np.zeros(n_shards, np.int64)
+    if G:
+        R_h = n_members[hubs].astype(np.int64)
+        Rmax = int(R_h.max())
+        n_rep = int((R_h - 1).sum())
+        heavy = np.argsort(-live_deg[hubs], kind="stable")  # groups, desc
+        est = np.bincount(owner, weights=deg_for_cut,
+                          minlength=n_shards).astype(np.float64)
+        gg = np.empty(n_rep, np.int64)                 # group per replica
+        kk = np.empty(n_rep, np.int64)                 # member index 1..R-1
+        rep_cell = np.empty(n_rep, np.int64)
+        slot_of = np.concatenate([[0], np.cumsum(R_h - 1)])
+        blocked = np.zeros(n_shards, np.float64)
+        for g in heavy:
+            share = float(live_deg[hubs[g]]) / float(R_h[g])
+            blocked[:] = 0.0
+            blocked[owner[hubs[g]]] = np.inf           # primary's cell
+            for k in range(1, int(R_h[g])):
+                c = int(np.argmin(est + blocked))
+                j = slot_of[g] + k - 1
+                gg[j], kk[j], rep_cell[j] = g, k, c
+                est[c] += share
+                blocked[c] = np.inf                    # distinct cells
+        rep_counts = np.bincount(rep_cell, minlength=n_shards)
+        order_r = np.argsort(rep_cell, kind="stable")
+        rep_starts = np.concatenate([[0], np.cumsum(rep_counts)])[:-1]
+        within_r = np.arange(n_rep) - rep_starts[rep_cell[order_r]]
+        rep_local = np.empty(n_rep, np.int64)
+        rep_local[order_r] = cell_counts[rep_cell[order_r]] + within_r
+
+    n_per = max(int((cell_counts + rep_counts).max(initial=0)),
+                -(-(n + int(rep_counts.sum())) // n_shards))
     # free (dead) slots fill the remaining (shard, local) positions in
     # row-major order — pure scatter, no Python loop over dead vertices
     dead = np.where(~nok)[0]
     if dead.size:
-        free_per_cell = n_per - cell_counts
+        free_per_cell = n_per - cell_counts - rep_counts
         cumfree = np.cumsum(free_per_cell)
         k = np.arange(dead.size)
         cell = np.searchsorted(cumfree, k, side="right")
         within = k - (cumfree[cell] - free_per_cell[cell])
         owner[dead] = cell.astype(np.int32)
-        local[dead] = (cell_counts[cell] + within).astype(np.int32)
+        local[dead] = (cell_counts[cell] + rep_counts[cell]
+                       + within).astype(np.int32)
+
+    # Member tables + routing maps (host side, shared with the update
+    # pipeline through Partitioned.replica / NameServer).
+    replica = None
+    if G:
+        members_s = np.full((G, Rmax), -1, np.int32)
+        members_l = np.full((G, Rmax), -1, np.int32)
+        members_s[:, 0] = owner[hubs]
+        members_l[:, 0] = local[hubs]
+        members_s[gg, kk] = rep_cell.astype(np.int32)
+        members_l[gg, kk] = rep_local.astype(np.int32)
+        group_of = np.full(n, -1, np.int32)
+        group_of[hubs] = np.arange(G, dtype=np.int32)
+        replica = ReplicaInfo(hub_gid=hubs.astype(np.int32),
+                              members_s=members_s, members_l=members_l,
+                              n_members=n_members[hubs].astype(np.int32),
+                              group_of=group_of)
 
     # Live edges, sorted ONCE by (owner cell, destination key): contiguous
     # runs per cell, already in pull-CSR order — slot order IS stream order.
@@ -202,12 +348,36 @@ def partition(
     # *defines*, so any deterministic order is self-consistent.
     e_idx = np.where(eok)[0]
     e_src, e_dst, e_w = src[e_idx], dst[e_idx], w[e_idx]
-    e_owner = owner[e_src]
-    e_key = owner[e_dst].astype(np.int64) * n_per + local[e_dst]
+    if replica is not None:
+        # Storage member of a split source and target member of a split
+        # destination, both via the shared rank-hash — the update
+        # pipeline routes dynamic adds/deletes identically, which is
+        # what keeps incremental == rebuild bitwise on split graphs.
+        gu = replica.group_of[e_src]
+        mu = member_rank(e_src, e_dst, n_members[e_src])
+        e_owner = np.where(gu >= 0,
+                           replica.members_s[np.clip(gu, 0, None), mu],
+                           owner[e_src]).astype(np.int32)
+        e_sl = np.where(gu >= 0,
+                        replica.members_l[np.clip(gu, 0, None), mu],
+                        local[e_src]).astype(np.int32)
+        gv = replica.group_of[e_dst]
+        mv = member_rank(e_dst, e_src, n_members[e_dst])
+        e_do = np.where(gv >= 0,
+                        replica.members_s[np.clip(gv, 0, None), mv],
+                        owner[e_dst]).astype(np.int32)
+        e_dl = np.where(gv >= 0,
+                        replica.members_l[np.clip(gv, 0, None), mv],
+                        local[e_dst]).astype(np.int32)
+    else:
+        e_owner, e_sl = owner[e_src], local[e_src]
+        e_do, e_dl = owner[e_dst], local[e_dst]
+    e_key = e_do.astype(np.int64) * n_per + e_dl
     order = np.argsort(
         e_owner * (np.int64(n_shards) * n_per) + e_key)
     e_src, e_dst, e_w = e_src[order], e_dst[order], e_w[order]
     e_owner, e_key = e_owner[order], e_key[order]
+    e_sl, e_do, e_dl = e_sl[order], e_do[order], e_dl[order]
     counts = np.bincount(e_owner, minlength=n_shards)
 
     # Degree-aware capacity on the block ladder: the balanced cut keeps
@@ -229,8 +399,8 @@ def partition(
     # per-cell runs are contiguous after the sort, so assembly is S
     # sequential slice copies (memcpy-speed), not element scatters
     e_offsets = np.concatenate([[0], np.cumsum(counts)])
-    sl = local[e_src]
-    do_, dl = owner[e_dst], local[e_dst]
+    sl = e_sl
+    do_, dl = e_do, e_dl
     for s in range(S):
         lo, hi = e_offsets[s], e_offsets[s + 1]
         k = hi - lo
@@ -246,8 +416,31 @@ def partition(
     node_ok[owner, local] = nok[:n]
     gid[owner, local] = np.arange(n, dtype=np.int32)
 
-    deg = np.zeros((S, n_per), np.int32)
-    deg[owner, local] = live_deg[:n]
+    if replica is not None:
+        # replica slots are live mirrors carrying the hub's gid; per-slot
+        # out_degree is each member's stored share (bincount of routed
+        # edges), so the push sweep's frontier-edge estimate stays honest
+        node_ok[rep_cell, rep_local] = True
+        gid[rep_cell, rep_local] = hubs[gg].astype(np.int32)
+        deg = np.bincount(
+            e_owner.astype(np.int64) * n_per + e_sl, minlength=S * n_per
+        ).reshape(S, n_per).astype(np.int32)
+        replica_of = np.full((S, n_per), -1, np.int32)
+        replica_of[rep_cell, rep_local] = hubs[gg].astype(np.int32)
+        replica_group = np.full((S, n_per), -1, np.int32)
+        valid_m = replica.members_s >= 0
+        replica_group[replica.members_s[valid_m],
+                      replica.members_l[valid_m]] = np.broadcast_to(
+            np.arange(G, dtype=np.int32)[:, None],
+            valid_m.shape)[valid_m]
+        replica_members = np.where(
+            valid_m,
+            replica.members_s.astype(np.int64) * n_per + replica.members_l,
+            -1).astype(np.int32)
+    else:
+        deg = np.zeros((S, n_per), np.int32)
+        deg[owner, local] = live_deg[:n]
+        replica_of = replica_group = replica_members = None
 
     # Both blocked-CSR views assembled host-side, bitwise-identical to a
     # with_csr() rebuild: slots are placed in destination-key order, so the
@@ -306,7 +499,14 @@ def partition(
         push_inv=jnp.asarray(pinv),
         delta_count=jnp.zeros((S,), jnp.int32),
         tomb_count=jnp.zeros((S,), jnp.int32),
+        replica_of=(jnp.asarray(replica_of)
+                    if replica_of is not None else None),
+        replica_group=(jnp.asarray(replica_group)
+                       if replica_group is not None else None),
+        replica_members=(jnp.asarray(replica_members)
+                         if replica_members is not None else None),
         csr_block=block,
         delta_blocks=delta_blocks,
     )
-    return Partitioned(sg, owner, local, n_real=int(nok.sum()))
+    return Partitioned(sg, owner, local, n_real=int(nok.sum()),
+                       replica=replica)

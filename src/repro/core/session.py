@@ -70,6 +70,7 @@ from .diffuse import (
     diffuse,
     diffuse_from,
     exact_streams_for,
+    logical_view,
     make_spmd_diffuse,
 )
 from .dynamic import NameServer, _invalidate_subtrees
@@ -211,14 +212,19 @@ class DiffusionSession:
     def from_edges(cls, src, dst, n_nodes: int, weight=None,
                    n_cells: int = 4, strategy: str = "block",
                    edge_slack: float = 0.0, node_slack: float = 0.0,
-                   engine: str = "sharded", **kw) -> "DiffusionSession":
+                   engine: str = "sharded",
+                   replica_threshold: int | str | None = None,
+                   **kw) -> "DiffusionSession":
         """Build + partition a graph over n_cells compute cells.
 
         ``edge_slack`` / ``node_slack`` reserve free capacity slots per
-        cell for the dynamic primitives (paper §VI)."""
+        cell for the dynamic primitives (paper §VI).
+        ``replica_threshold`` enables skew-aware hub splitting
+        (rhizomes, DESIGN.md §2.12): ``"auto"`` or an int degree bound."""
         g = from_edges(src, dst, n_nodes, weight,
                        edge_slack=edge_slack, node_slack=node_slack)
-        part = partition(g, n_cells, strategy=strategy)
+        part = partition(g, n_cells, strategy=strategy,
+                         replica_threshold=replica_threshold)
         return cls(part, engine=engine, **kw)
 
     # ------------------------------------------------------------------
@@ -300,6 +306,11 @@ class DiffusionSession:
             key = key + (("delta", delta),)
         if sweep != "pull":
             key = key + (("sweep", sweep),)
+        if self.sg.replica_members is not None:
+            # hub-replica graphs hold the same fixed points only up to
+            # FP reassociation for sum monoids — keep their entries
+            # distinct from an unsplit graph a caller might adopt() into
+            key = key + (("replicas",),)
         return key
 
     def _cache_get(self, key) -> _Entry | None:
@@ -774,7 +785,7 @@ class DiffusionSession:
         occupant)."""
         if not gids:
             return vstate
-        init_v, _ = entry.prog.init(self.sg)
+        init_v, _ = entry.prog.init(logical_view(self.sg))
         s, l = self._slots(gids)
         return jax.tree_util.tree_map(
             lambda cur, ini: cur.at[s, l].set(ini[s, l]), vstate, init_v
@@ -844,7 +855,7 @@ class DiffusionSession:
                 s_, l_ = self.ns.resolve(g)
                 affected.add(int(comp[s_, l_]))
             if affected:
-                init_v, _ = entry.prog.init(sg)
+                init_v, _ = entry.prog.init(logical_view(sg))
                 aff = jnp.isin(comp, jnp.asarray(sorted(affected),
                                                  comp.dtype))
                 comp = jnp.where(aff, init_v[entry.value_key], comp)

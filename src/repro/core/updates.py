@@ -281,7 +281,9 @@ class UpdateBatch:
             occ = np.empty(n, np.int32)   # occurrence index per (u, v)
             seen: Counter = Counter()
             for j, (u, v) in enumerate(self._edels):
-                su[j], lu[j] = ns.resolve(u)
+                # split sources: probe the member cell the rank hash
+                # stored this (u, v) edge in (build and add used it too)
+                su[j], lu[j] = ns.route_edge(u, v)
                 vg[j] = v
                 occ[j] = seen[(u, v)]
                 seen[(u, v)] += 1
@@ -292,11 +294,14 @@ class UpdateBatch:
             per_cell["dels"] = np.bincount(su, minlength=n_shards)
 
         if self._vdels:
-            k = _pow2(len(self._vdels))
-            s = np.empty(len(self._vdels), np.int32)
-            l = np.empty(len(self._vdels), np.int32)
-            for j, gid in enumerate(self._vdels):
-                s[j], l[j] = ns.resolve(gid)
+            # a split hub dies at ALL member slots (out-edges are stored
+            # across members), so expand each gid to its member pairs
+            pairs: list[tuple[int, int]] = []
+            for gid in self._vdels:
+                pairs.extend(ns.members_of(gid) or [ns.resolve(gid)])
+            k = _pow2(len(pairs))
+            s = np.array([p[0] for p in pairs], np.int32)
+            l = np.array([p[1] for p in pairs], np.int32)
             ops["vd_s"] = _pad(s, k, 0)
             ops["vd_l"] = _pad(l, k, np_)        # pad -> dropped
 
@@ -312,8 +317,10 @@ class UpdateBatch:
             rank = np.empty(n, np.int32)         # index among cell's adds
             cell_rank: Counter = Counter()       # must NOT shadow per_cell
             for j, (u, v, wj) in enumerate(self._eadds):
-                su[j], lu[j] = ns.resolve(u)
-                sv[j], lv[j] = ns.resolve(v)
+                # split endpoints route by the rank hash (same slots the
+                # partition-time build picks — incremental == rebuild)
+                su[j], lu[j] = ns.route_edge(u, v)
+                sv[j], lv[j] = ns.route_target(v, u)
                 vg[j], w[j] = v, wj
                 rank[j] = cell_rank[int(su[j])]
                 cell_rank[int(su[j])] += 1

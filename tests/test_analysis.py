@@ -203,6 +203,21 @@ def test_verifier_rejects_nonfinite_on_dead_in_int_field():
         verify_program(_sssp_like(state=state), name="bad-on-dead")
 
 
+def test_verifier_rejects_non_identity_empty_receive():
+    """DESIGN.md §2.12: hub-replica mirrors stay coherent only if a
+    receive with has_msg all-False is a bitwise no-op on state — a spec
+    that rewrites state unconditionally must be rejected."""
+    from repro.analysis import ProgramVerificationError, verify_program
+
+    def receive(vstate, inbox, has_msg, payload, node_ok):
+        # schema- and dtype-preserving, but every call decays the state
+        # instead of gating the write on has_msg
+        return {"dist": vstate["dist"] * 0.5}, has_msg
+
+    with pytest.raises(ProgramVerificationError, match="empty inbox"):
+        verify_program(_sssp_like(receive=receive), name="ungated-receive")
+
+
 def test_verifier_errors_are_distinct():
     """Each broken spec names its own component — four distinct errors."""
     from repro.analysis import ProgramVerificationError, verify_program

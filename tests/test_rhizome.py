@@ -1,0 +1,369 @@
+"""Hub replicas ("rhizomes", DESIGN.md §2.12): split-policy invariants,
+replica-map round-trips through compaction and the tombstone/delta path,
+the replica-mode partition cut, and the merged-fixed-point parity contract
+(replicas on == replicas off, bitwise for order-free monoids)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import build
+from repro.core.generators import make_graph_family
+from repro.core.graph import from_edges as graph_from_edges
+from repro.core.partition import (
+    CAPACITY_SKEW_THRESHOLD,
+    _degree_aware_cut,
+    partition,
+)
+from repro.core.rhizome import member_rank, replica_counts
+from repro.core.session import DiffusionSession
+
+_SUBPROC_ENV = {
+    "PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+    "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+}
+
+
+def _split_part(n=400, thr=12, n_cells=4, seed=3, **kw):
+    src, dst, w, n = make_graph_family("scale_free", n, seed=seed)
+    part = build(src, dst, n, w, n_cells=n_cells,
+                 replica_threshold=thr, **kw)
+    assert part.sg.replica_members is not None, "no hubs split"
+    return part, src, dst, w, n
+
+
+# ---------------------------------------------------------------------------
+# split policy / conservation
+# ---------------------------------------------------------------------------
+
+def test_split_conserves_edges_and_degrees():
+    """Sum of member-slot stored out-degrees == hub out-degree, and every
+    retargeted in-edge still lands on a slot of its destination hub."""
+    part, src, dst, w, n = _split_part()
+    sg = part.sg
+    rep = part.replica
+    gid = np.asarray(sg.gid)
+    eok = np.asarray(sg.edge_ok)
+    src_gid = np.take_along_axis(gid, np.asarray(sg.src_local), axis=1)
+    dst_gid = gid[np.asarray(sg.dst_shard), np.asarray(sg.dst_local)]
+    out_deg = np.bincount(src, minlength=n)
+    in_deg = np.bincount(dst, minlength=n)
+    for g_idx, h in enumerate(np.asarray(rep.hub_gid)):
+        ms = np.asarray(rep.members_s[g_idx])
+        ml = np.asarray(rep.members_l[g_idx])
+        valid = ms >= 0
+        assert valid.sum() >= 2
+        # member slots all carry the hub's gid and distinct cells
+        assert (gid[ms[valid], ml[valid]] == h).all()
+        assert len(set(ms[valid].tolist())) == valid.sum()
+        # stored out-edges across members == the hub's live out-degree
+        stored = 0
+        for s, l in zip(ms[valid], ml[valid]):
+            stored += int((eok[s] & (np.asarray(sg.src_local)[s] == l)
+                           & (src_gid[s] == h)).sum())
+        assert stored == out_deg[h], (h, stored, out_deg[h])
+        # retargeted in-edges: every edge whose logical dst is the hub
+        # points at one of its member slots
+        hits = eok & (dst_gid == h)
+        ds = np.asarray(sg.dst_shard)[hits]
+        dl = np.asarray(sg.dst_local)[hits]
+        slots = set(zip(ms[valid].tolist(), ml[valid].tolist()))
+        assert set(zip(ds.tolist(), dl.tolist())) <= slots
+        assert hits.sum() == in_deg[h], (h, int(hits.sum()), in_deg[h])
+
+
+def test_member_rank_routing_is_deterministic_and_in_range():
+    part, src, dst, w, n = _split_part()
+    rep = part.replica
+    group_of = np.asarray(rep.group_of)
+    n_members = np.asarray(rep.n_members)
+    sg = part.sg
+    gid = np.asarray(sg.gid)
+    eok = np.asarray(sg.edge_ok)
+    dst_gid = gid[np.asarray(sg.dst_shard), np.asarray(sg.dst_local)]
+    src_gid = np.take_along_axis(gid, np.asarray(sg.src_local), axis=1)
+    # every live edge into a split hub sits on exactly the member slot
+    # the rank hash names — the property commit() relies on to route
+    # incremental adds to the same slot the build chose
+    for s in range(sg.n_shards):
+        for e in np.where(eok[s])[0]:
+            h = int(dst_gid[s, e])
+            if h >= group_of.shape[0] or group_of[h] < 0:
+                continue
+            g = int(group_of[h])
+            m = member_rank(h, int(src_gid[s, e]), int(n_members[g]))
+            assert (int(np.asarray(rep.members_s[g])[m])
+                    == int(np.asarray(sg.dst_shard)[s, e]))
+            assert (int(np.asarray(rep.members_l[g])[m])
+                    == int(np.asarray(sg.dst_local)[s, e]))
+
+
+def test_replica_counts_policy():
+    deg = np.array([0, 5, 10, 11, 25, 1000])
+    r = replica_counts(deg, threshold=10, n_shards=4)
+    # ceil(deg/thr), clamped to [1, n_shards], never split at <= thr
+    assert r.tolist() == [1, 1, 1, 2, 3, 4]
+
+
+# ---------------------------------------------------------------------------
+# replica maps survive compaction and the tombstone/delta path
+# ---------------------------------------------------------------------------
+
+def test_replica_maps_round_trip_with_csr_and_dirty_views():
+    sess = _split_session()
+    sg0 = sess.sg
+    keep = {k: np.asarray(getattr(sg0, k)).copy()
+            for k in ("replica_of", "replica_group", "replica_members")}
+    rng = np.random.default_rng(7)
+    src, dst, _ = sess.edge_list()
+    hub = int(np.asarray(sess.part.replica.hub_gid)[0])
+    for _ in range(4):
+        sess.add_edge(int(rng.integers(0, sess.n_ids)), hub,
+                      float(0.5 + rng.random()))
+    i = int(np.where(src == hub)[0][0])
+    sess.delete_edge(hub, int(dst[i]))
+    sess.commit()
+    assert int(np.asarray(sess.sg.delta_count).sum()) > 0
+    assert int(np.asarray(sess.sg.tomb_count).sum()) > 0
+    for sg in (sess.sg, sess.sg.with_csr()):
+        for k, want in keep.items():
+            assert np.array_equal(np.asarray(getattr(sg, k)), want), k
+
+
+# ---------------------------------------------------------------------------
+# the replica-mode cut and the off-mode boundary
+# ---------------------------------------------------------------------------
+
+def test_degree_aware_cut_boundary_at_skew_threshold():
+    """Equal-vertex chunking is kept exactly *at* the capacity-skew
+    threshold and abandoned just past it (strict inequality)."""
+    # 8 vertices, 2 cells: chunk loads [7, 1] -> max == 1.75 x mean
+    src = np.array([0, 0, 0, 0, 1, 1, 2, 4])
+    dst = np.array([1, 2, 3, 4, 0, 5, 6, 0])
+    n = 8
+    assert CAPACITY_SKEW_THRESHOLD == 1.75
+    part = build(src, dst, n, None, n_cells=2)
+    counts = np.bincount(np.asarray(part.owner)[:n], minlength=2)
+    assert counts.tolist() == [4, 4]        # eq chunking retained at ==
+    # one more hub edge: loads [8, 1] -> 8 > 1.75 * 4.5 -> walk engages
+    src2 = np.concatenate([src, [0]])
+    dst2 = np.concatenate([dst, [7]])
+    part2 = build(src2, dst2, n, None, n_cells=2)
+    counts2 = np.bincount(np.asarray(part2.owner)[:n], minlength=2)
+    assert counts2.tolist() != [4, 4]
+    # and the walk itself: exact budget math on the same degree sequence
+    deg = np.array([5, 2, 1, 0, 1, 0, 0, 0])
+    cells = _degree_aware_cut(deg, 2)
+    loads = np.bincount(cells, weights=deg, minlength=2)
+    assert loads.max() <= 7                  # better than eq's 8
+
+
+def test_replica_cut_balances_edges_and_vertex_counts():
+    """The strided replica-mode cut: vertex counts exactly even (the
+    exchange table costs S^2 * Np, ragged chunks are pure overhead) and
+    per-cell edge load within ~15% of the mean on a skewed family."""
+    src, dst, w, n = make_graph_family("scale_free", 4000, seed=5)
+    S = 16
+    part = partition(graph_from_edges(src, dst, n, w), S,
+                     replica_threshold="auto")
+    sg = part.sg
+    loads = np.asarray(sg.edge_ok).sum(axis=1)
+    live_counts = np.asarray(sg.node_ok).sum(axis=1)
+    assert live_counts.max() - live_counts.min() <= 1 + int(
+        np.asarray(sg.replica_members).shape[0])  # replicas add slots
+    assert loads.max() <= 1.2 * loads.mean(), (loads.max(), loads.mean())
+
+
+# ---------------------------------------------------------------------------
+# merged fixed points: replicas on == replicas off
+# ---------------------------------------------------------------------------
+
+def _split_session(**kw):
+    src, dst, w, n = make_graph_family("scale_free", 400, seed=3)
+    kw.setdefault("edge_slack", 1.0)
+    kw.setdefault("node_slack", 0.5)
+    sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=4,
+                                       replica_threshold=12, **kw)
+    assert sess.sg.replica_members is not None
+    return sess
+
+
+def _vals(res):
+    if isinstance(res, list):
+        res = res[0]
+    return np.asarray(res.values)
+
+
+@pytest.mark.parametrize("backend,sweep", [("xla", "pull"), ("xla", "push"),
+                                           ("pallas", "auto")])
+def test_fixed_point_parity_on_vs_off(backend, sweep):
+    src, dst, w, n = make_graph_family("scale_free", 400, seed=3)
+    off = DiffusionSession.from_edges(src, dst, n, w, n_cells=4,
+                                      edge_slack=1.0, node_slack=0.5)
+    on = _split_session()
+    matrix = [("sssp", dict(source=0)), ("bfs", dict(source=0)),
+              ("cc", {}), ("widest", dict(source=0)),
+              ("reach", dict(sources=[0]))]
+    for name, kwargs in matrix:
+        a = _vals(off.query(name, sweep=sweep, backend=backend, **kwargs))
+        b = _vals(on.query(name, sweep=sweep, backend=backend, **kwargs))
+        assert np.array_equal(a, b, equal_nan=True), (name, backend, sweep)
+    # sum-combine programs: fixed-tree merge keeps the split fixed point
+    # within float tolerance of the unsplit one (ppr truncates at eps, so
+    # the tolerance is eps-shaped, not machine-shaped)
+    a = _vals(off.query("pagerank", sweep=sweep, backend=backend))
+    b = _vals(on.query("pagerank", sweep=sweep, backend=backend))
+    assert np.allclose(a, b, rtol=1e-5, atol=1e-6)
+    eps = 1e-6
+    a = _vals(off.query("ppr", source=0, eps=eps, sweep=sweep,
+                        backend=backend))
+    b = _vals(on.query("ppr", source=0, eps=eps, sweep=sweep,
+                       backend=backend))
+    assert np.allclose(a, b, atol=3 * eps)
+
+
+def test_sssp_parent_payload_consistent_on_split_graph():
+    sess = _split_session()
+    res = sess.query("sssp", source=0, track_parents=True)
+    dist = np.asarray(res.values)
+    parent = np.asarray(res.extra["parent"])
+    w_of = {}
+    src, dst, w = sess.edge_list()
+    for u, v, ww in zip(src, dst, w):
+        key = (int(u), int(v))
+        w_of[key] = min(w_of.get(key, np.inf), float(ww))
+    for v in range(sess.n_ids):
+        p = int(parent[v])
+        if p < 0 or p == v or not np.isfinite(dist[v]):
+            continue    # unreached, or the source itself
+        assert (p, v) in w_of
+        assert np.isclose(dist[v], dist[p] + w_of[(p, v)], rtol=1e-6)
+
+
+def test_lanes_bitwise_on_split_graph():
+    sess = _split_session()
+    lanes = sess.query("sssp", sources=[0, 5, 9])
+    for i, s in enumerate([0, 5, 9]):
+        solo = sess.query("sssp", source=s, refresh=True)
+        assert np.array_equal(np.asarray(lanes[i].values),
+                              np.asarray(solo.values), equal_nan=True)
+
+
+# ---------------------------------------------------------------------------
+# dynamics: incremental == rebuild on split graphs
+# ---------------------------------------------------------------------------
+
+def test_incremental_commit_equals_rebuild_on_split_graph():
+    sess = _split_session()
+    n_real = sess.part.n_real
+    rng = np.random.default_rng(11)
+    hub = int(np.asarray(sess.part.replica.hub_gid)[0])
+    src0, dst0, _ = sess.edge_list()
+    for _ in range(2):
+        for _ in range(4):
+            sess.add_edge(int(rng.integers(0, n_real)), hub, 0.7)
+            sess.add_edge(hub, int(rng.integers(0, n_real)), 0.9)
+        i = int(rng.integers(0, len(src0)))
+        sess.delete_edge(int(src0[i]), int(dst0[i]))
+        sess.delete_vertex(int(rng.integers(1, 200)))
+        sess.commit()
+    # incremental views == compacted rebuild of the same sharded graph
+    from repro.core.diffuse import diffuse
+    from repro.core.programs import PROGRAMS
+    rebuilt = sess.sg.with_csr()
+    for name, kw in [("sssp", dict(source=0)), ("cc", {})]:
+        prog = PROGRAMS[name].factory(**kw)
+        got, _ = diffuse(sess.sg, prog)
+        want, _ = diffuse(rebuilt, prog)
+        for k in got:
+            a, b = np.asarray(got[k]), np.asarray(want[k])
+            fin = np.isfinite(a)
+            assert np.array_equal(fin, np.isfinite(b)), (name, k)
+            assert np.array_equal(np.where(fin, a, 0),
+                                  np.where(fin, b, 0)), (name, k)
+    # and == a from-scratch session over the surviving edge list
+    # (min-monoid fixed points are layout-independent)
+    s2, d2, w2 = sess.edge_list()
+    fresh = DiffusionSession.from_edges(s2, d2, sess.n_ids, w2, n_cells=4,
+                                        replica_threshold=12)
+    a = np.asarray(sess.query("sssp", source=0, refresh=True).values)
+    b = np.asarray(fresh.query("sssp", source=0).values)[:sess.n_ids]
+    assert np.array_equal(a, b, equal_nan=True)
+
+
+def test_split_hub_delete_and_slot_quarantine():
+    """Deleting a split hub kills every member slot, commit() repairs the
+    cached fixed point, and non-primary member slots never re-enter the
+    allocator's free lists."""
+    sess = _split_session()
+    ns = sess.ns
+    hub = int(np.asarray(sess.part.replica.hub_gid)[0])
+    members = ns.members_of(hub)
+    assert members is not None and len(members) >= 2
+    sess.query("sssp", source=0)
+    sess.delete_vertex(hub)
+    sess.commit()
+    gid = np.asarray(sess.sg.gid)
+    nok = np.asarray(sess.sg.node_ok)
+    for s, l in members:
+        assert not nok[s, l]
+    # repaired cache == fresh fixed point on the mutated graph
+    a = np.asarray(sess.query("sssp", source=0).values)
+    b = np.asarray(sess.query("sssp", source=0, refresh=True).values)
+    assert np.array_equal(a, b, equal_nan=True)
+    # new vertices may reuse the primary slot but never a mirror slot
+    non_primary = set(members[1:])
+    for _ in range(len(members) + 2):
+        g = sess.add_vertex()
+        assert tuple(ns.resolve(g)) not in non_primary
+    del gid
+
+
+def test_peek_concatenates_member_rows():
+    sess = _split_session()
+    rep = sess.part.replica
+    hub = int(np.asarray(rep.hub_gid)[0])
+    n_m = int(np.asarray(rep.n_members)[int(np.asarray(
+        rep.group_of)[hub])])
+    plain = int(np.where(np.asarray(rep.group_of) < 0)[0][0])
+    row_plain = sess.peek(plain, source=0)  # unsplit: one capacity row
+    row_hub = sess.peek(hub, source=0)
+    assert row_hub.shape[0] == n_m * row_plain.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# SPMD engine (multi-device): replica merge rides the all-gather
+# ---------------------------------------------------------------------------
+
+def test_spmd_replica_merge_bitwise_subprocess():
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np
+        from repro.core.generators import make_graph_family
+        from repro.core.session import DiffusionSession
+
+        src, dst, w, n = make_graph_family("scale_free", 400, seed=3)
+        on = DiffusionSession.from_edges(src, dst, n, w, n_cells=4,
+                                         replica_threshold=12)
+        off = DiffusionSession.from_edges(src, dst, n, w, n_cells=4)
+        assert on.sg.replica_members is not None
+        for name, kw in (("sssp", dict(source=0)), ("cc", {})):
+            a = np.asarray(off.query(name, engine="spmd", **kw).values)
+            b = np.asarray(on.query(name, engine="spmd", **kw).values)
+            c = np.asarray(on.query(name, engine="sharded", refresh=True,
+                                    **kw).values)
+            assert np.array_equal(a, b, equal_nan=True), name
+            assert np.array_equal(b, c, equal_nan=True), name
+        print("SPMD_RHIZOME_OK")
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", prog], capture_output=True, text=True,
+        env=_SUBPROC_ENV, cwd=os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), timeout=900,
+    )
+    assert "SPMD_RHIZOME_OK" in out.stdout, out.stdout + out.stderr
