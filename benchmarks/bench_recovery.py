@@ -1,0 +1,172 @@
+"""Durability benchmarks — snapshot, journal, recovery (DESIGN.md §2.13).
+
+Three benches over the session durability stack, written to
+``BENCH_pr10.json`` (``--quick`` -> ``BENCH_pr10.quick.json``):
+
+- ``journal``: append throughput (records/s and ops/s) per fsync policy
+  ("always" pays an fsync per commit; "batch" flushes to the OS;
+  "never" buffers) for batches of ``ops_per_record`` edge ops.
+- ``snapshot``: ``session.save()`` wall time and on-disk byte size, with
+  a warm query cache (the snapshot includes the cached fixed points).
+- ``recovery``: ``DiffusionSession.open()`` wall time — snapshot load +
+  replay of ``k`` journaled commits — against the cold-rebuild baseline
+  (from_edges + partition + fresh queries).  Asserts the recovered SSSP
+  values are bitwise-equal to the uninterrupted session's.
+
+Run: ``python benchmarks/bench_recovery.py [--quick]``
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.journal import OpRecord, UpdateJournal
+from repro.core.session import DiffusionSession
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _edges(n: int, m: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m).astype(np.int64)
+    dst = rng.integers(0, n, m).astype(np.int64)
+    keep = src != dst
+    w = rng.uniform(0.5, 2.0, m).astype(np.float32)[keep]
+    return src[keep], dst[keep], w
+
+
+def _build(src, dst, w, n, n_cells):
+    return DiffusionSession.from_edges(
+        src, dst, n, w, n_cells=n_cells, edge_slack=0.5, node_slack=0.5)
+
+
+def _dir_bytes(d: str) -> int:
+    total = 0
+    for root, _, files in os.walk(d):
+        for f in files:
+            total += os.path.getsize(os.path.join(root, f))
+    return total
+
+
+# ---------------------------------------------------------------------------
+
+
+def bench_journal(records: int, ops_per_record: int, n: int) -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(7)
+    eadds = [(int(rng.integers(0, n)), int(rng.integers(0, n)), 1.0)
+             for _ in range(ops_per_record)]
+    rec = OpRecord.from_ops([], [], eadds, [], [])
+    for fsync in ("always", "batch", "never"):
+        d = tempfile.mkdtemp(prefix="bench_journal_")
+        try:
+            j = UpdateJournal(os.path.join(d, "journal.bin"), fsync=fsync)
+            t0 = time.perf_counter()
+            for _ in range(records):
+                j.append(rec)
+            j.close()
+            dt = time.perf_counter() - t0
+            rows.append(dict(
+                bench="journal", fsync=fsync, records=records,
+                ops_per_record=ops_per_record, seconds=dt,
+                records_per_s=records / dt,
+                ops_per_s=records * ops_per_record / dt,
+                bytes=os.path.getsize(os.path.join(d, "journal.bin"))))
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+    return rows
+
+
+def bench_snapshot(n: int, m: int, n_cells: int, reps: int) -> list[dict]:
+    src, dst, w = _edges(n, m)
+    sess = _build(src, dst, w, n, n_cells)
+    sess.query("sssp", source=0)
+    sess.query("cc")
+    best = np.inf
+    d = tempfile.mkdtemp(prefix="bench_snap_")
+    try:
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            sess.save(d)
+            best = min(best, time.perf_counter() - t0)
+        size = _dir_bytes(d)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    return [dict(bench="snapshot", n=n, m=m, cells=n_cells,
+                 seconds=best, bytes=size,
+                 mb_per_s=size / best / 1e6)]
+
+
+def bench_recovery(n: int, m: int, n_cells: int, k_commits: int) -> list[dict]:
+    src, dst, w = _edges(n, m)
+    d = tempfile.mkdtemp(prefix="bench_recover_")
+    rng = np.random.default_rng(11)
+    try:
+        sess = _build(src, dst, w, n, n_cells)
+        sess.query("sssp", source=0)
+        sess.save(d)
+        for _ in range(k_commits):
+            sess.add_edge(int(rng.integers(0, n)),
+                          int(rng.integers(0, n)), 0.75)
+            sess.commit()
+        ref = np.asarray(sess.query("sssp", source=0).values)
+
+        t0 = time.perf_counter()
+        recovered = DiffusionSession.open(d)
+        t_open = time.perf_counter() - t0
+        got = np.asarray(recovered.query("sssp", source=0).values)
+        assert np.array_equal(ref, got, equal_nan=True), (
+            "recovered SSSP diverges from the uninterrupted session")
+
+        t0 = time.perf_counter()
+        cold = _build(src, dst, w, n, n_cells)
+        cold.query("sssp", source=0)
+        t_cold = time.perf_counter() - t0
+        return [dict(bench="recovery", n=n, m=m, cells=n_cells,
+                     journal_records=k_commits, open_s=t_open,
+                     cold_rebuild_s=t_cold,
+                     speedup_vs_rebuild=t_cold / t_open)]
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+
+
+def run(quick: bool = False) -> list[dict]:
+    if quick:
+        n, m, cells, k = 5_000, 20_000, 4, 8
+        records, ops = 200, 64
+        reps = 1
+    else:
+        n, m, cells, k = 100_000, 400_000, 16, 64
+        records, ops = 2_000, 256
+        reps = 3
+    rows = []
+    rows += bench_journal(records, ops, n)
+    rows += bench_snapshot(n, m, cells, reps)
+    rows += bench_recovery(n, m, cells, k)
+    return rows
+
+
+def main():
+    quick = "--quick" in sys.argv
+    rows = run(quick=quick)
+    for r in rows:
+        print(r)
+    fname = "BENCH_pr10.quick.json" if quick else "BENCH_pr10.json"
+    with open(os.path.join(REPO, fname), "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {fname} ({len(rows)} records)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -206,6 +206,32 @@ def main() -> None:
                 backend="xla",
             )
 
+    # DESIGN.md §2.13: durability — journal throughput per fsync policy,
+    # snapshot latency, and open() recovery vs cold rebuild (the bitwise
+    # recovery assert lives inside)
+    from benchmarks import bench_recovery
+    for r in bench_recovery.run(quick=quick):
+        if r["bench"] == "journal":
+            _csv(
+                f"durability/journal/{r['fsync']}",
+                r["seconds"] * 1e6 / r["records"],
+                f"records_per_s={r['records_per_s']:.0f};"
+                f"ops_per_s={r['ops_per_s']:.0f}",
+            )
+        elif r["bench"] == "snapshot":
+            _csv(
+                f"durability/snapshot/n{r['n']}",
+                r["seconds"] * 1e6,
+                f"mb={r['bytes']/1e6:.1f};mb_per_s={r['mb_per_s']:.0f}",
+            )
+        else:
+            _csv(
+                f"durability/recovery/k{r['journal_records']}",
+                r["open_s"] * 1e6,
+                f"speedup_vs_rebuild={r['speedup_vs_rebuild']:.2f};"
+                f"cold_s={r['cold_rebuild_s']:.2f}",
+            )
+
     # Roofline table from any dry-run artifacts present
     from benchmarks import roofline
     rows = roofline.table()

@@ -5,11 +5,19 @@
   a temp dir + atomic rename, so a preemption mid-save never corrupts the
   latest checkpoint.
 * **Async**: device->host transfer happens on the caller thread (cheap),
-  file IO on a background thread — training overlaps the write.
+  file IO on a background thread — training overlaps the write.  A writer
+  failure is re-raised on the caller thread at the next ``wait()``/``save()``
+  rather than dying silently in the daemon thread.
 * **Elastic restore**: restore() takes the *target mesh + shardings*; the
   saved global arrays are device_put with the new layout, so a checkpoint
   taken on a 16x16 mesh restores onto 2x16x16, 8x8, or 1 device unchanged —
   node-failure recovery = restore onto the surviving mesh.
+* **Fallback restore**: with ``step=None`` a damaged latest checkpoint
+  (truncated/unparsable manifest, missing leaf file, digest mismatch) is
+  skipped and the previous retained step is tried, newest-first — recovery
+  degrades to an older snapshot instead of raising mid-restore.  An
+  explicit ``step=`` never falls back, and when *no* retained step loads
+  cleanly the last error propagates.
 * Retention: keep the last ``keep`` checkpoints, prune older.
 """
 
@@ -20,9 +28,12 @@ import json
 import os
 import shutil
 import threading
+import warnings
 
 import jax
 import numpy as np
+
+from ..core import chaos
 
 __all__ = ["CheckpointManager"]
 
@@ -40,6 +51,7 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._pending: threading.Thread | None = None
+        self._write_error: BaseException | None = None
 
     # ------------------------------------------------------------------
     def save(self, step: int, tree, wait: bool = False):
@@ -51,27 +63,32 @@ class CheckpointManager:
             host[_path_str(path)] = np.asarray(jax.device_get(leaf))
 
         def _write():
-            tmp = os.path.join(self.directory, f".tmp_step_{step}")
-            final = os.path.join(self.directory, f"step_{step}")
-            os.makedirs(tmp, exist_ok=True)
-            manifest = {"step": step, "leaves": {}}
-            for name, arr in host.items():
-                fname = name.replace("/", "__") + ".npy"
-                np.save(os.path.join(tmp, fname), arr)
-                manifest["leaves"][name] = {
-                    "file": fname,
-                    "shape": list(arr.shape),
-                    "dtype": str(arr.dtype),
-                    "digest": hashlib.blake2b(
-                        arr.tobytes(), digest_size=16
-                    ).hexdigest(),
-                }
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump(manifest, f)
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)
-            self._prune()
+            try:
+                tmp = os.path.join(self.directory, f".tmp_step_{step}")
+                final = os.path.join(self.directory, f"step_{step}")
+                os.makedirs(tmp, exist_ok=True)
+                manifest = {"step": step, "leaves": {}}
+                for name, arr in host.items():
+                    fname = name.replace("/", "__") + ".npy"
+                    np.save(os.path.join(tmp, fname), arr)
+                    chaos.point("checkpoint.leaf-written")
+                    manifest["leaves"][name] = {
+                        "file": fname,
+                        "shape": list(arr.shape),
+                        "dtype": str(arr.dtype),
+                        "digest": hashlib.blake2b(
+                            arr.tobytes(), digest_size=16
+                        ).hexdigest(),
+                    }
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)
+                chaos.point("checkpoint.pre-rename")
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+                self._prune()
+            except BaseException as e:   # surfaced on the caller thread
+                self._write_error = e
 
         self._pending = threading.Thread(target=_write, daemon=True)
         self._pending.start()
@@ -82,6 +99,9 @@ class CheckpointManager:
         if self._pending is not None:
             self._pending.join()
             self._pending = None
+        if self._write_error is not None:
+            err, self._write_error = self._write_error, None
+            raise err
 
     def _prune(self):
         steps = sorted(self.all_steps())
@@ -104,19 +124,68 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    # -- loading -------------------------------------------------------
+
+    def _load_step(self, step: int, verify: bool) -> dict[str, np.ndarray]:
+        """Read + digest-check every leaf of one step; raises on any damage
+        (unparsable manifest, missing file, digest mismatch)."""
+        d = os.path.join(self.directory, f"step_{step}")
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise IOError(f"checkpoint step {step}: bad manifest ({e})")
+        arrays: dict[str, np.ndarray] = {}
+        for name, meta in manifest["leaves"].items():
+            try:
+                arr = np.load(os.path.join(d, meta["file"]))
+            except (OSError, ValueError) as e:
+                raise IOError(
+                    f"checkpoint step {step}: leaf {name} unreadable ({e})")
+            if verify:
+                digest = hashlib.blake2b(arr.tobytes(),
+                                         digest_size=16).hexdigest()
+                if digest != meta["digest"]:
+                    raise IOError(
+                        f"checkpoint step {step}: leaf {name} is corrupt")
+            arrays[name] = arr
+        return arrays
+
+    def _load_with_fallback(self, step: int | None, verify: bool):
+        """-> (arrays, step). step=None walks retained steps newest-first."""
+        if step is not None:
+            return self._load_step(step, verify), step
+        steps = self.all_steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        last_err: Exception | None = None
+        for s in reversed(steps):
+            try:
+                return self._load_step(s, verify), s
+            except (IOError, KeyError) as e:
+                warnings.warn(
+                    f"checkpoint step {s} is damaged ({e}); falling back "
+                    f"to the previous retained step")
+                last_err = e if isinstance(e, Exception) else IOError(str(e))
+        raise last_err
+
+    def restore_flat(self, step: int | None = None, verify: bool = True):
+        """Load a checkpoint as a flat {path-string: np.ndarray} dict.
+
+        Manifest-driven — no target structure needed (the session
+        save/open path reconstructs its own pytree from these names).
+        Returns ``(arrays, step)``; ``step=None`` falls back past damaged
+        steps, newest-first."""
+        self.wait()
+        return self._load_with_fallback(step, verify)
+
     def restore(self, target_tree, step: int | None = None, shardings=None,
                 verify: bool = True):
         """Restore into the structure of ``target_tree``.
 
         shardings: optional matching pytree of Shardings (the *new* mesh's
         layout — this is the elastic-rescale path)."""
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.directory}")
-        d = os.path.join(self.directory, f"step_{step}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
-
+        arrays, step = self._load_with_fallback(step, verify)
         leaves, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
         shard_leaves = (
             jax.tree_util.tree_leaves(shardings) if shardings is not None
@@ -124,14 +193,7 @@ class CheckpointManager:
         )
         out = []
         for (path, leaf), sh in zip(leaves, shard_leaves):
-            name = _path_str(path)
-            meta = manifest["leaves"][name]
-            arr = np.load(os.path.join(d, meta["file"]))
-            if verify:
-                digest = hashlib.blake2b(arr.tobytes(),
-                                         digest_size=16).hexdigest()
-                if digest != meta["digest"]:
-                    raise IOError(f"checkpoint leaf {name} is corrupt")
+            arr = arrays[_path_str(path)]
             out.append(jax.device_put(arr, sh) if sh is not None
                        else jax.device_put(arr))
         return jax.tree_util.tree_unflatten(

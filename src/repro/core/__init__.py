@@ -39,9 +39,14 @@ from .programs import (
     sssp_program,
     widest_program,
 )
+from .journal import OpRecord, UpdateJournal
 from .session import (
+    ConvergenceError,
+    ConvergenceWarning,
     DiffusionSession,
+    JournalReplayError,
     ProgramSpec,
+    ValidationError,
     register_program,
 )
 from .updates import AppliedUpdates, UpdateBatch
@@ -59,4 +64,7 @@ __all__ = [
     "pagerank_program", "widest_program", "reach_program",
     "DiffusionSession", "ProgramSpec", "register_program",
     "UpdateBatch", "AppliedUpdates", "NameServer",
+    "UpdateJournal", "OpRecord",
+    "ConvergenceError", "ConvergenceWarning", "ValidationError",
+    "JournalReplayError",
 ]

@@ -89,12 +89,17 @@ class DiffuseStats(NamedTuple):
                                    #   round (-1 = round never ran)
     dir_log: jnp.ndarray           # [FRONTIER_LOG_CAP] direction chosen at
                                    #   round start: 1 push, 0 pull, -1 n/a
+    converged: jnp.ndarray         # bool: True = real quiescence (empty
+                                   #   frontier + empty mailboxes), False =
+                                   #   the max_rounds budget cut the loop
+                                   #   at a non-fixed point
 
 
 def _stats0() -> DiffuseStats:
     z = jnp.zeros((), jnp.int32)
     log = jnp.full((FRONTIER_LOG_CAP,), -1, jnp.int32)
-    return DiffuseStats(z, z, z, z, z, z, z, z, log, log)
+    return DiffuseStats(z, z, z, z, z, z, z, z, log, log,
+                        jnp.zeros((), bool))
 
 
 def _gate(prog, vstate, active, threshold):
@@ -480,6 +485,12 @@ def _run_rounds(sg: ShardedGraph, prog: VertexProgram, vstate0, active0,
 
     st0 = (vstate0, active0, outbox0, has0, pay0)
     (st, stats) = lax.while_loop(round_cond, round_body, (st0, stats0))
+    # budget watchdog: the loop exits on quiescence OR rounds == max_rounds;
+    # re-evaluating the predicate on the final state tells the two apart
+    _, active_f, _, outbox_has_f, _ = st
+    stats = stats._replace(converged=quiescent(
+        jnp.sum(active_f.astype(jnp.int32)),
+        jnp.sum(outbox_has_f.astype(jnp.int32))))
     return st[0], stats
 
 
@@ -773,11 +784,14 @@ def diffuse_spmd_step(prog: VertexProgram, axis_name: str, n_shards: int,
 
         live0 = lax.psum(jnp.sum(active.astype(jnp.int32)), axis_name)
         st0 = (vstate, active, outbox, outbox_has, outbox_pay)
-        st, _, _, stats = lax.while_loop(
+        st, _, live_f, stats = lax.while_loop(
             round_cond, round_body, (st0, None, live0, stats)
         )
         vfinal = jax.tree_util.tree_map(lambda a: a[None], st[0])
         stats = stats._replace(
+            # live_f is already a psum — replicated, so every device
+            # reports the same budget-vs-quiescence verdict
+            converged=(live_f == 0),
             actions=lax.psum(stats.actions, axis_name),
             remote_actions=lax.psum(stats.remote_actions, axis_name),
             operons_sent=lax.psum(stats.operons_sent, axis_name),

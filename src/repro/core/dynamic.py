@@ -114,6 +114,35 @@ class NameServer:
         for dynamic vertex placement)."""
         return max(self._free_local, key=lambda s: len(self._free_local[s]))
 
+    # -- snapshot serialization (session durability, DESIGN.md §2.13) ------
+
+    def state_dict(self) -> dict:
+        """Arrays capturing the full allocation state: owner/local maps
+        plus each cell's free-slot list *in order* (allocate pops the
+        front, release appends — the order is the determinism contract
+        journal replay relies on)."""
+        out = {"owner": np.asarray(self.owner),
+               "local": np.asarray(self.local)}
+        for s, free in self._free_local.items():
+            out[f"free_{s}"] = np.asarray(free, np.int32)
+        return out
+
+    @classmethod
+    def from_state(cls, arrays: dict, n_shards: int,
+                   replica=None) -> "NameServer":
+        """Rebuild from :meth:`state_dict` arrays (bitwise: same owner/
+        local maps, same free-list order, same ``_next``)."""
+        ns = cls.__new__(cls)
+        ns.owner = np.asarray(arrays["owner"]).copy()
+        ns.local = np.asarray(arrays["local"]).copy()
+        ns._next = int(ns.owner.shape[0])
+        ns.replica = replica
+        ns._free_local = {
+            s: [int(x) for x in arrays[f"free_{s}"]]
+            for s in range(n_shards)
+        }
+        return ns
+
     def allocate(self, shard: int) -> tuple[int, int, int]:
         """-> (gid, owner shard, local slot). Raises if the cell is full."""
         if not self._free_local[shard]:

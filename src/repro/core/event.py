@@ -9,6 +9,23 @@ is measured, not simulated.
 This engine is the *oracle* for the batched engines: same fixed point, exact
 action counts for the Actions-Normalized metric, and the DS-vs-counting
 termination equivalence test.
+
+**Scope (test-only oracle).** This is a deliberately host-bound,
+message-at-a-time interpreter — O(actions) Python dispatch, ~seconds per
+call at a few thousand vertices.  It is capped at ``n <=
+EVENT_ORACLE_MAX_N`` (4096) vertices, excluded from every benchmarked
+path, and exists to pin down two contracts the batched engines are
+tested against (DESIGN.md §2.13):
+
+* **priority order** — the queue discipline (``schedule="lifo" |
+  "fifo"``) fixes a *total* order of vertex actions.  The batched
+  engines relax whole frontiers per round instead; the oracle proves
+  their fixed points are order-independent (selection monoids: bitwise;
+  sum monoids: up to float re-association), which is exactly the
+  property that makes bulk-asynchronous execution legal.
+* **termination** — real per-message Dijkstra–Scholten acks here,
+  counting detection there; the suite asserts both fire at the same
+  quiescent point and DS never fires early.
 """
 
 from __future__ import annotations
@@ -19,7 +36,13 @@ from typing import Callable, NamedTuple
 from .termination import DijkstraScholten
 
 __all__ = ["EventStats", "run_event", "event_sssp", "event_diffuse",
-           "build_adjacency"]
+           "build_adjacency", "EVENT_ORACLE_MAX_N"]
+
+# re-scoped per ROADMAP: the generic oracle is test-only — it runs the
+# program one Python-dispatched message at a time, so beyond a few
+# thousand vertices it is minutes of host time that no benchmark or
+# production path should ever pay silently
+EVENT_ORACLE_MAX_N = 4096
 
 
 class EventStats(NamedTuple):
@@ -28,6 +51,9 @@ class EventStats(NamedTuple):
     max_queue: int
     ds_terminated: bool   # DS verdict at the end (must be True)
     ds_was_premature: bool  # DS claimed termination while work remained (must be False)
+    converged: bool = True  # the oracle runs to quiescence (no round
+                            #   budget); present for parity with
+                            #   DiffuseStats.converged
 
 
 def build_adjacency(src, dst, weight, n: int):
@@ -120,11 +146,22 @@ def event_diffuse(prog, src, dst, weight, n: int, node_ok=None,
     programs (min/max) reproduce the batched fixed point exactly; sum
     programs agree to float re-association.
 
+    Test-only oracle: capped at ``n <= EVENT_ORACLE_MAX_N`` (see the
+    module docstring for the priority-order contract it pins down).
+
     Returns (state dict of [n] numpy arrays, EventStats).
     """
     import types
 
     import numpy as np
+
+    if n > EVENT_ORACLE_MAX_N:
+        raise ValueError(
+            f"event_diffuse is a host-bound test oracle capped at "
+            f"n <= {EVENT_ORACLE_MAX_N} vertices (got n={n}); it "
+            f"interprets one message at a time in Python and would take "
+            f"minutes here — use engine='sharded' or 'spmd' for real "
+            f"workloads")
 
     adj = build_adjacency(src, dst, weight, n)
     deg = np.zeros(n, np.int32)

@@ -410,6 +410,45 @@ class ShardedGraph:
     def edges_per_shard(self) -> int:
         return int(self.src_local.shape[1])
 
+    # -- snapshot serialization (session durability, DESIGN.md §2.13) ------
+
+    _META_FIELDS = ("n_shards", "n_per_shard", "n_nodes", "csr_block",
+                    "delta_blocks")
+
+    def state_dict(self) -> dict:
+        """Every non-None data array by field name — the snapshot leaves.
+
+        Both CSR views, the delta/tombstone counters, and the replica
+        maps are included verbatim, so a restored graph is bitwise-equal
+        *including* its incremental view state (dirty segments and all)."""
+        out = {}
+        for f in dataclasses.fields(self):
+            if f.name in self._META_FIELDS:
+                continue
+            v = getattr(self, f.name)
+            if v is not None:
+                out[f.name] = v
+        return out
+
+    def meta_dict(self) -> dict:
+        """The static geometry, JSON-ready (snapshot manifest metadata)."""
+        return {name: int(getattr(self, name)) for name in self._META_FIELDS}
+
+    @classmethod
+    def from_state(cls, arrays: dict, meta: dict) -> "ShardedGraph":
+        """Rebuild from :meth:`state_dict` arrays + :meth:`meta_dict`.
+
+        ``arrays`` values may be numpy (fresh off a checkpoint) — they
+        are uploaded with their saved dtypes; absent optional fields
+        restore as None."""
+        kw = dict(meta)
+        for f in dataclasses.fields(cls):
+            if f.name in cls._META_FIELDS:
+                continue
+            if f.name in arrays:
+                kw[f.name] = jnp.asarray(arrays[f.name])
+        return cls(**kw)
+
     @property
     def sorted_width(self) -> int:
         """Width of the *sorted* region of both views (Eb): edge capacity

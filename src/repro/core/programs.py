@@ -129,6 +129,11 @@ class VertexProgram:
     priority: Callable | None = None
     lanes: int | None = None       # lane count; None = single-query program
     name: str = ""
+    # the declarative Field schema this program was lowered from, as
+    # ((name, Field), ...) — carried for the session's validate= guard;
+    # None for hand-built programs (which then skip validation).  Not
+    # part of the trace key: nothing the jitted loop reads depends on it.
+    fields: Any = None
 
     def __post_init__(self):
         if not isinstance(self.monoid, Monoid):
@@ -180,11 +185,20 @@ class Field:
     with ``gid`` / ``node_ok`` / ``out_degree`` arrays); ``on_dead``, when
     given, overwrites dead/free vertex slots (deleted vertices and spare
     capacity) so stale slot contents can never leak into a fixed point.
+
+    ``domain`` optionally declares the legal value range ``(lo, hi)`` of
+    *live* vertices at a fixed point (None end = unbounded), consumed by
+    the session's ``validate=`` post-query guard (DESIGN.md §2.13): NaN
+    is always invalid for float fields; out-of-domain values (including
+    an inf that the domain does not admit) fail validation.  Undeclared
+    domains default to NaN-only checking for floats and the payload
+    range ``[-1, n_ids)`` for ints (payloads carry gids or -1).
     """
 
     dtype: Any
     init: Any = 0
     on_dead: Any = None
+    domain: tuple | None = None
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -256,6 +270,7 @@ def lower(spec: DiffusiveProgram, name: str = "") -> VertexProgram:
         payload=spec.payload,
         priority=spec.priority,
         name=name,
+        fields=fields,
     )
 
 
@@ -465,7 +480,8 @@ def sssp(source: int, track_parents: bool = True) -> DiffusiveProgram:
     state = {"dist": Field(jnp.float32,
                            init=lambda v: jnp.where(v.gid == source, 0.0,
                                                     jnp.inf),
-                           on_dead=jnp.inf)}
+                           on_dead=jnp.inf,
+                           domain=(0.0, None))}   # +inf = unreachable: legal
     if track_parents:
         state["parent"] = Field(jnp.int32,
                                 init=lambda v: jnp.where(v.gid == source,
@@ -504,7 +520,8 @@ def bfs(source: int) -> DiffusiveProgram:
         state={"dist": Field(jnp.float32,
                              init=lambda v: jnp.where(v.gid == source, 0.0,
                                                       jnp.inf),
-                             on_dead=jnp.inf)},
+                             on_dead=jnp.inf,
+                             domain=(0.0, None))},
         init_active=lambda v: v.gid == source,
         emit=lambda s, weight, src_gid, dst_gid: s["dist"] + 1.0,
         receive=receive,
@@ -548,10 +565,15 @@ def _push_spec(residual_init, active_init, alpha: float, eps: float):
         monoid="sum",
         msg_dtype=jnp.float32,
         state={
-            "rank": Field(jnp.float32, init=0.0),
-            "residual": Field(jnp.float32, init=residual_init, on_dead=0.0),
+            # domains are deliberately loose (total mass is 1, so 2.0
+            # can never trip on legitimate float error) — the guard is
+            # for Inf/NaN/garbage, not tight numerics
+            "rank": Field(jnp.float32, init=0.0, domain=(0.0, 2.0)),
+            "residual": Field(jnp.float32, init=residual_init, on_dead=0.0,
+                              domain=(0.0, 2.0)),
             "deg": Field(jnp.float32,
-                         init=lambda v: jnp.maximum(v.out_degree, 1)),
+                         init=lambda v: jnp.maximum(v.out_degree, 1),
+                         domain=(1.0, None)),
         },
         init_active=active_init,
         emit=lambda s, weight, src_gid, dst_gid:

@@ -59,13 +59,18 @@ to the push sweep.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import warnings
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import chaos
 from .diffuse import (
+    DiffuseStats,
     _sg_as_dict,
     diffuse,
     diffuse_from,
@@ -74,8 +79,9 @@ from .diffuse import (
     make_spmd_diffuse,
 )
 from .dynamic import NameServer, _invalidate_subtrees
-from .graph import from_edges
-from .partition import Partitioned, partition
+from .graph import ShardedGraph, from_edges
+from .journal import OpRecord, UpdateJournal
+from .partition import Partitioned, ReplicaInfo, partition
 from .relax import RELAX_BACKENDS, RELAX_SWEEPS
 from .programs import (
     PROGRAMS,
@@ -96,9 +102,43 @@ __all__ = [
     "Result",
     "register_program",
     "PROGRAMS",
+    "ConvergenceError",
+    "ConvergenceWarning",
+    "ValidationError",
+    "JournalReplayError",
 ]
 
 ENGINES = ("sharded", "event", "spmd")
+ON_BUDGET = ("raise", "warn", "partial")
+
+SNAPSHOT_FORMAT = 1
+_JOURNAL_FILE = "journal.bin"
+
+
+def _json_np(o):
+    """json.dumps fallback: numpy scalars in cached query kwargs."""
+    if isinstance(o, np.generic):
+        return o.item()
+    raise TypeError(f"not JSON-serializable: {type(o).__name__}")
+
+
+class ConvergenceError(RuntimeError):
+    """A diffusion hit its max_rounds budget before quiescence
+    (``on_budget="raise"``)."""
+
+
+class ConvergenceWarning(UserWarning):
+    """Budget-exhaustion warning (``on_budget="warn"``, the default)."""
+
+
+class ValidationError(RuntimeError):
+    """A query result violated its program's Field schema (``validate=``):
+    NaN in a float field, or a value outside the field's domain."""
+
+
+class JournalReplayError(RuntimeError):
+    """Journal replay diverged from the snapshot (e.g. a replayed vertex
+    allocation produced a different id) — the store is inconsistent."""
 
 
 class Result(NamedTuple):
@@ -173,7 +213,9 @@ class DiffusionSession:
                  engine: str = "sharded", backend: str = "xla",
                  sweep: str = "pull", max_local_iters: int = 64,
                  max_rounds: int = 10_000,
-                 max_cache_entries: int | None = None):
+                 max_cache_entries: int | None = None,
+                 on_budget: str = "warn", validate: bool = False,
+                 journal_fsync: str = "always", snapshot_keep: int = 3):
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, "
                              f"got {engine!r}")
@@ -186,6 +228,9 @@ class DiffusionSession:
         if max_cache_entries is not None and max_cache_entries < 1:
             raise ValueError("max_cache_entries must be >= 1 (or None "
                              "for an unbounded cache)")
+        if on_budget not in ON_BUDGET:
+            raise ValueError(f"on_budget must be one of {ON_BUDGET}, "
+                             f"got {on_budget!r}")
         self.part = part
         self._ns = ns                # lazily built: queries don't need one
         self.engine = engine
@@ -200,9 +245,20 @@ class DiffusionSession:
         # repaired by commit().  Insertion order doubles as recency
         # (hits reinsert).
         self.max_cache_entries = max_cache_entries
+        # convergence watchdog (DESIGN.md §2.13): what to do when a
+        # diffusion exhausts max_rounds before quiescence, and whether to
+        # schema-check results against each program's Field domains
+        self.on_budget = on_budget
+        self.validate = validate
         self._cache: dict[tuple, _Entry] = {}
         self._pending: UpdateBatch | None = None
         self._spmd_fns: dict = {}
+        # durability (DESIGN.md §2.13): armed by save()/open()
+        self._dur_dir: str | None = None
+        self._ckpt = None                       # CheckpointManager
+        self._journal: UpdateJournal | None = None
+        self._journal_fsync = journal_fsync
+        self._snapshot_keep = snapshot_keep
 
     # ------------------------------------------------------------------
     # construction
@@ -355,7 +411,8 @@ class DiffusionSession:
     def query(self, prog, engine: str | None = None,
               backend: str | None = None, sweep: str | None = None,
               refresh: bool = False, value_key: str | None = None,
-              delta: float | None = None, **kwargs):
+              delta: float | None = None, validate: bool | None = None,
+              **kwargs):
         """Run (or serve from cache) a named or ad-hoc vertex program.
 
         ``prog`` is a registry name ("sssp", "cc", "ppr", "pagerank",
@@ -385,6 +442,14 @@ class DiffusionSession:
         ``delta`` enables the delta-stepping priority gate for programs
         with a priority, and is remembered so commit()'s incremental
         repair re-diffuses under the same gate.
+
+        A diffusion that exhausts ``max_rounds`` before quiescence
+        surfaces ``stats.converged == False`` and triggers the session's
+        ``on_budget`` policy ("raise" | "warn" | "partial").
+        ``validate=`` (per-call override of the session default) checks
+        the returned values against the program's Field schema — NaN and
+        out-of-domain values on live vertices raise
+        :class:`ValidationError` (DESIGN.md §2.13).
         """
         engine = engine or self.engine
         explicit_backend = backend
@@ -447,13 +512,19 @@ class DiffusionSession:
             lane_vals = list(kwargs.pop(lane_kw))
             return self._query_lanes(spec, name, lane_vals, kwargs, engine,
                                      backend, refresh, delta, value_key,
-                                     sweep, explicit_sweep)
+                                     sweep, explicit_sweep, validate)
 
         key = self._key(name, engine, kwargs, backend, delta, sweep)
         if not refresh:
             hit = self._cache_get(key)
             if hit is not None:
-                return self._result(hit)
+                res = self._result(hit)
+                # re-validate on every serve: a poisoned cached state
+                # (chaos.poison_vstate, a bad repair) is caught at read
+                # time, not just at compute time
+                self._maybe_validate(hit, res, validate,
+                                     f"query {name!r} (cached)")
+                return res
 
         if engine == "event":
             if spec.event_fn is not None:
@@ -485,7 +556,10 @@ class DiffusionSession:
                        engine, backend=backend, delta=delta,
                        sweep=explicit_sweep)
         self._cache_put(key, entry)
-        return self._result(entry)
+        self._enforce_budget(stats, f"query {name!r}")
+        res = self._result(entry)
+        self._maybe_validate(entry, res, validate, f"query {name!r}")
+        return res
 
     def _compact_for(self, program: VertexProgram | None):
         """Sum-combine diffusions must see compacted (delta-free) streams
@@ -511,7 +585,8 @@ class DiffusionSession:
                      kwargs: dict, engine: str, backend: str,
                      refresh: bool, delta, value_key: str | None = None,
                      sweep: str = "pull",
-                     explicit_sweep: str | None = None) -> list:
+                     explicit_sweep: str | None = None,
+                     validate: bool | None = None) -> list:
         """Fan a pluralized lane param out into B lanes of one diffusion.
 
         The laned fixed point is split lane-by-lane into ordinary
@@ -537,6 +612,8 @@ class DiffusionSession:
         laned = make_laned(progs)
         vstate, stats = self._run_diffusion(laned, engine, backend, delta,
                                             sweep)
+        self._enforce_budget(stats, f"query {name!r} "
+                                    f"({len(lane_vals)} lanes)")
 
         vk = value_key or spec.value_key
         results = []
@@ -551,7 +628,10 @@ class DiffusionSession:
                            stats, engine, backend=backend, delta=delta,
                            sweep=explicit_sweep)
             self._cache_put(key, entry)
-            results.append(self._result(entry))
+            res = self._result(entry)
+            self._maybe_validate(entry, res, validate,
+                                 f"query {name!r} lane {i}")
+            results.append(res)
         return results
 
     def adopt(self, name: str, vstate, stats=None, engine: str = "sharded",
@@ -709,13 +789,39 @@ class DiffusionSession:
 
     def commit(self, max_local_iters: int | None = None) -> CommitInfo:
         """Apply the pending UpdateBatch (vectorized) and repair every
-        cached program fixed point by frontier re-diffusion."""
+        cached program fixed point by frontier re-diffusion.
+
+        When a journal is armed (after :meth:`save`/:meth:`open`) the
+        batch is journaled **before** it mutates any state — write-ahead
+        logging.  A crash after the append but before the apply simply
+        redoes the record at :meth:`open` (replay is deterministic, so
+        redo converges to the same bits); an apply that *fails* (e.g. a
+        full compute cell) rolls the record back so the journal never
+        claims an op the store rejected."""
+        return self._commit(max_local_iters, journal=True)
+
+    def _commit(self, max_local_iters: int | None = None,
+                journal: bool = True) -> CommitInfo:
         mli = max_local_iters or self.max_local_iters
         if self._pending is None or len(self._pending) == 0:
             applied = AppliedUpdates((), (), (), (), ())
         else:
-            self.part.sg, applied = self._pending.apply(self.part.sg)
+            seq = None
+            if journal and self._journal is not None:
+                # snapshot the op lists BEFORE apply (apply clears them)
+                rec = OpRecord.from_batch(self._pending)
+                seq = self._journal.append(rec)
+                chaos.point("commit.journal-appended")
+            try:
+                self.part.sg, applied = self._pending.apply(self.part.sg)
+            except Exception:
+                # the store rejected the batch — un-journal it (ChaosKill
+                # is a BaseException and deliberately escapes this)
+                if seq is not None:
+                    self._journal.rollback(seq)
+                raise
             self._pending = None
+            chaos.point("commit.applied")
 
         repairs = {}
         for key, entry in list(self._cache.items()):
@@ -723,6 +829,12 @@ class DiffusionSession:
                 repairs[key] = ("noop", None)
                 continue
             repairs[key] = self._repair_entry(entry, applied, mli)
+        if applied.n_ops:
+            chaos.point("commit.repaired")
+        for key, (strategy, stats) in repairs.items():
+            if stats is not None:
+                self._enforce_budget(stats, f"commit repair ({strategy}) "
+                                            f"of {key[0]!r}")
         return CommitInfo(applied=applied, repairs=repairs)
 
     def _repair_entry(self, entry: _Entry, applied: AppliedUpdates,
@@ -867,3 +979,357 @@ class DiffusionSession:
             return out, active
 
         raise ValueError(f"unknown repair strategy {strategy!r}")
+
+    # ------------------------------------------------------------------
+    # convergence watchdog + result validation (DESIGN.md §2.13)
+    # ------------------------------------------------------------------
+
+    def _enforce_budget(self, stats, context: str) -> None:
+        """Apply the on_budget policy to a diffusion's converged flag."""
+        conv = getattr(stats, "converged", None)
+        if conv is None or self.on_budget == "partial":
+            return
+        # explicit d2h transfer: legal under the runtime sanitizer's
+        # transfer guard (same idiom as exact_streams_for)
+        if bool(jax.device_get(conv)):
+            return
+        msg = (f"{context} exhausted max_rounds={self.max_rounds} before "
+               f"quiescence — the fixed point is PARTIAL "
+               f"(stats.converged=False); raise max_rounds, or accept "
+               f"partial results with on_budget='partial'")
+        if self.on_budget == "raise":
+            raise ConvergenceError(msg)
+        warnings.warn(msg, ConvergenceWarning)
+
+    def _maybe_validate(self, entry: _Entry, res: Result,
+                        validate: bool | None, context: str) -> None:
+        on = self.validate if validate is None else validate
+        if on:
+            self._validate_result(entry, res, context)
+
+    def _validate_result(self, entry: _Entry, res: Result,
+                         context: str) -> None:
+        """Schema-check a Result against its program's Field domains.
+
+        Lowered from each Field declaration (programs.py): NaN is always
+        invalid for float fields; a declared ``domain=(lo, hi)`` bounds
+        the legal values (None = unbounded on that side); undeclared int
+        domains default to the payload range ``[-1, n_ids)`` (gid
+        payloads plus the -1 sentinel).  Only live vertices are checked —
+        dead slots legitimately hold stale bits."""
+        fields = getattr(entry.prog, "fields", None)
+        if fields is None:
+            return
+        live = np.asarray(res.extra["live"])
+        for fname, field in fields:
+            if fname == entry.value_key:
+                arr = res.values
+            elif fname in res.extra:
+                arr = res.extra[fname]
+            else:
+                continue
+            a = np.asarray(arr)[live]
+            if a.size == 0:
+                continue
+            lo = hi = None
+            if np.issubdtype(a.dtype, np.floating):
+                nan = np.isnan(a)
+                if nan.any():
+                    raise ValidationError(
+                        f"{context}: field {fname!r} holds NaN on "
+                        f"{int(nan.sum())} live vertices")
+                if field.domain is not None:
+                    lo, hi = field.domain
+            else:
+                lo, hi = (field.domain if field.domain is not None
+                          else (-1, self.n_ids - 1))
+            if lo is not None and bool((a < lo).any()):
+                raise ValidationError(
+                    f"{context}: field {fname!r} holds values below "
+                    f"{lo} on live vertices (min {a.min()})")
+            if hi is not None and bool((a > hi).any()):
+                raise ValidationError(
+                    f"{context}: field {fname!r} holds values above "
+                    f"{hi} on live vertices (max {a.max()})")
+
+    # ------------------------------------------------------------------
+    # durability: snapshot + write-ahead journal (DESIGN.md §2.13)
+    # ------------------------------------------------------------------
+
+    def _attach(self, directory: str) -> None:
+        # lazy import: checkpoint.manager imports core.chaos, which
+        # executes core/__init__ (and therefore this module)
+        from ..checkpoint.manager import CheckpointManager
+
+        directory = os.path.abspath(directory)
+        if self._dur_dir is not None:
+            if directory != self._dur_dir:
+                raise ValueError(
+                    f"session is already durable at {self._dur_dir}; "
+                    f"cannot re-home it to {directory}")
+            return
+        os.makedirs(directory, exist_ok=True)
+        self._dur_dir = directory
+        self._ckpt = CheckpointManager(directory, keep=self._snapshot_keep)
+        self._journal = UpdateJournal(
+            os.path.join(directory, _JOURNAL_FILE),
+            fsync=self._journal_fsync)
+
+    def save(self, directory: str | None = None) -> int:
+        """Snapshot the full session and arm the write-ahead journal.
+
+        The first call names the durability directory; later calls may
+        omit it.  The snapshot captures everything :meth:`open` needs to
+        resume **bitwise-equal**: the graph arrays (both CSR views,
+        delta/tombstone state, replica maps), the partition, the name
+        server (including free-list order), every reconstructible cached
+        fixed point (vstate + stats), and the session's engine/backend/
+        sweep/watchdog settings.  Writes go through
+        :class:`CheckpointManager` (atomic tmp-dir rename + digest
+        manifest + retention), so a crash mid-save never damages the
+        previous snapshot.  After a successful save the journal head is
+        garbage-collected up to the *oldest retained* snapshot —
+        falling back past a corrupt snapshot still finds every record
+        it needs.  Returns the snapshot step (= the journal seq the
+        snapshot is consistent with).
+
+        Uncommitted pending ops are **not** captured — commit() first to
+        make them durable (they journal at commit).
+        """
+        if directory is None:
+            directory = self._dur_dir
+        if directory is None:
+            raise ValueError(
+                "save() needs a directory the first time "
+                "(session.save('/path/to/dir'))")
+        if self._pending is not None and len(self._pending):
+            warnings.warn(
+                "save() with uncommitted pending updates: the snapshot "
+                "captures committed state only — commit() first to make "
+                "the pending batch durable")
+        self._attach(directory)
+        step = self._journal.next_seq
+        tree, meta = self._snapshot_tree()
+        meta["format"] = SNAPSHOT_FORMAT
+        meta_bytes = json.dumps(meta, default=_json_np).encode()
+        tree["session_meta"] = np.frombuffer(meta_bytes, np.uint8).copy()
+        self._ckpt.save(step, tree, wait=True)
+        steps = self._ckpt.all_steps()
+        if steps:
+            self._journal.truncate(min(steps))
+        return step
+
+    def _snapshot_tree(self) -> tuple[dict, dict]:
+        """-> (flat leaf dict, JSON-ready metadata) for one snapshot."""
+        sg = self.sg
+        tree: dict[str, Any] = {}
+        for k, v in sg.state_dict().items():
+            tree[f"graph/{k}"] = v
+        tree["part/owner"] = np.asarray(self.part.owner)
+        tree["part/local"] = np.asarray(self.part.local)
+        rep = getattr(self.part, "replica", None)
+        if rep is not None:
+            for f in ReplicaInfo._fields:
+                tree[f"replica/{f}"] = np.asarray(getattr(rep, f))
+        if self._ns is not None:
+            for k, v in self._ns.state_dict().items():
+                tree[f"ns/{k}"] = v
+        meta = {
+            "engine": self.engine,
+            "backend": self.backend,
+            "sweep": self.sweep,
+            "max_local_iters": self.max_local_iters,
+            "max_rounds": self.max_rounds,
+            "max_cache_entries": self.max_cache_entries,
+            "on_budget": self.on_budget,
+            "validate": self.validate,
+            "snapshot_keep": self._snapshot_keep,
+            "graph_meta": sg.meta_dict(),
+            "n_real": int(self.part.n_real),
+            "has_ns": self._ns is not None,
+            "has_replica": rep is not None,
+            "cache": [],
+        }
+        for i, entry in enumerate(self._cache.values()):
+            name = entry.spec.name
+            if name.startswith("adhoc:") or name not in PROGRAMS:
+                warnings.warn(
+                    f"snapshot skips cache entry {name!r}: ad-hoc "
+                    f"programs are not reconstructible by name (the "
+                    f"query recomputes after open())")
+                continue
+            em: dict[str, Any] = {
+                "name": name,
+                "value_key": entry.value_key,
+                "kwargs": entry.kwargs,
+                "engine": entry.engine,
+                "backend": entry.backend,
+                "delta": entry.delta,
+                "sweep": entry.sweep,
+                # the cache key resolved a defaulted sweep to the
+                # session's — record the resolved value so open()
+                # rebuilds the identical key
+                "key_sweep": entry.sweep or self.sweep,
+            }
+            if entry.spec.run_fn is not None:
+                em["kind"] = "run_fn"
+                em["extra_scalars"] = {}
+                em["extra_arrays"] = []
+                tree[f"cache/{i}/raw"] = np.asarray(entry.raw.values)
+                for k, v in entry.raw.extra.items():
+                    if isinstance(v, np.ndarray):
+                        em["extra_arrays"].append(k)
+                        tree[f"cache/{i}/extra/{k}"] = v
+                    else:
+                        em["extra_scalars"][k] = v
+            else:
+                em["kind"] = "diffuse"
+                em["vstate_fields"] = list(entry.vstate.keys())
+                for f, leaf in entry.vstate.items():
+                    tree[f"cache/{i}/vstate/{f}"] = leaf
+                if isinstance(entry.stats, DiffuseStats):
+                    em["stats"] = "diffuse"
+                    for f in DiffuseStats._fields:
+                        tree[f"cache/{i}/stats/{f}"] = getattr(
+                            entry.stats, f)
+                else:
+                    em["stats"] = None
+            meta["cache"].append(em)
+        return tree, meta
+
+    @classmethod
+    def open(cls, directory: str, journal_fsync: str = "always",
+             step: int | None = None) -> "DiffusionSession":
+        """Recover a session: latest valid snapshot + journal-tail replay.
+
+        A damaged latest snapshot (torn manifest, missing leaf, digest
+        mismatch) falls back to the previous retained one; the journal's
+        opening scan truncates any torn tail; then every journaled commit
+        with ``seq >= snapshot step`` is redone through the same compiled
+        apply + cache-repair path the live commits used.  The recovered
+        session is bitwise-equal to one that never crashed — graph
+        arrays, cache keys, and query results alike."""
+        from ..checkpoint.manager import CheckpointManager
+
+        directory = os.path.abspath(directory)
+        ckpt = CheckpointManager(directory)
+        arrays, loaded_step = ckpt.restore_flat(step=step)
+        meta = json.loads(bytes(bytearray(arrays.pop("session_meta"))))
+        if meta.get("format") != SNAPSHOT_FORMAT:
+            raise IOError(
+                f"snapshot format {meta.get('format')!r} is not "
+                f"{SNAPSHOT_FORMAT} (newer writer?)")
+        graph_arrays = {k.split("/", 1)[1]: v for k, v in arrays.items()
+                        if k.startswith("graph/")}
+        sg = ShardedGraph.from_state(graph_arrays, meta["graph_meta"])
+        replica = None
+        if meta["has_replica"]:
+            replica = ReplicaInfo(*(np.asarray(arrays[f"replica/{f}"])
+                                    for f in ReplicaInfo._fields))
+        part = Partitioned(sg, arrays["part/owner"], arrays["part/local"],
+                           n_real=meta["n_real"], replica=replica)
+        ns = None
+        if meta["has_ns"]:
+            ns_arrays = {k.split("/", 1)[1]: v for k, v in arrays.items()
+                         if k.startswith("ns/")}
+            ns = NameServer.from_state(ns_arrays, sg.n_shards,
+                                       replica=replica)
+        sess = cls(part, ns=ns, engine=meta["engine"],
+                   backend=meta["backend"], sweep=meta["sweep"],
+                   max_local_iters=meta["max_local_iters"],
+                   max_rounds=meta["max_rounds"],
+                   max_cache_entries=meta["max_cache_entries"],
+                   on_budget=meta["on_budget"], validate=meta["validate"],
+                   journal_fsync=journal_fsync,
+                   snapshot_keep=meta.get("snapshot_keep", 3))
+        ckpt.keep = sess._snapshot_keep
+        sess._restore_cache(meta["cache"], arrays)
+        sess._dur_dir = directory
+        sess._ckpt = ckpt
+        sess._journal = UpdateJournal(
+            os.path.join(directory, _JOURNAL_FILE), fsync=journal_fsync)
+        sess._replay_journal(loaded_step)
+        return sess
+
+    def _restore_cache(self, cache_meta: list, arrays: dict) -> None:
+        for i, em in enumerate(cache_meta):
+            name = em["name"]
+            if name not in PROGRAMS:
+                warnings.warn(
+                    f"snapshot cache entry {name!r} is no longer in the "
+                    f"program registry; skipping (it recomputes on query)")
+                continue
+            spec = PROGRAMS[name]
+            kwargs = dict(em["kwargs"])
+            if em["kind"] == "run_fn":
+                extra = dict(em["extra_scalars"])
+                for k in em["extra_arrays"]:
+                    extra[k] = np.asarray(arrays[f"cache/{i}/extra/{k}"])
+                res = Result(values=np.asarray(arrays[f"cache/{i}/raw"]),
+                             stats=None, extra=extra)
+                key = self._key(name, em["engine"], kwargs)
+                self._cache_put(key, _Entry(spec, None, em["value_key"],
+                                            kwargs, None, None,
+                                            em["engine"], raw=res))
+                continue
+            prog = spec.factory(**kwargs)
+            vstate = {f: jnp.asarray(arrays[f"cache/{i}/vstate/{f}"])
+                      for f in em["vstate_fields"]}
+            stats = None
+            if em["stats"] == "diffuse":
+                stats = DiffuseStats(*(
+                    jnp.asarray(arrays[f"cache/{i}/stats/{f}"])
+                    for f in DiffuseStats._fields))
+            key = self._key(name, em["engine"], kwargs, em["backend"],
+                            em["delta"], em["key_sweep"])
+            self._cache_put(key, _Entry(
+                spec, prog, em["value_key"], kwargs, vstate, stats,
+                em["engine"], backend=em["backend"], delta=em["delta"],
+                sweep=em["sweep"]))
+
+    def _replay_journal(self, from_seq: int) -> int:
+        """Redo journaled commits on top of the snapshot (WAL recovery).
+
+        Each record rebuilds an UpdateBatch and runs the normal commit
+        path (journaling disabled), so NameServer allocation, replica
+        routing, compaction policy, and cache repairs all re-run exactly
+        as they did live.  Vertex adds allocate gids *eagerly* at
+        ``add_vertex`` time — before the commit that journals them — so
+        a snapshot may already contain a journaled allocation; those are
+        verified and reused, anything newer is re-allocated and must
+        come out identical (gids are monotonic, never reused)."""
+        replayed = 0
+        for _seq, rec in self._journal.replay(from_seq):
+            batch = UpdateBatch(self.ns)
+            for gid, s, l in rec.vadds.tolist():
+                if gid < self.ns._next:
+                    if self.ns.resolve(gid) != (s, l):
+                        raise JournalReplayError(
+                            f"replayed vertex add gid={gid} resolves to "
+                            f"{self.ns.resolve(gid)}, journal says "
+                            f"({s}, {l})")
+                else:
+                    got = self.ns.allocate(int(s))
+                    if got != (gid, s, l):
+                        raise JournalReplayError(
+                            f"replayed allocation produced {got}, "
+                            f"journal says ({gid}, {s}, {l})")
+                batch._vadds.append((int(gid), int(s), int(l)))
+            for g in rec.vdels.tolist():
+                batch.delete_vertex(g)
+            for (u, v), w in zip(rec.eadds.tolist(), rec.ea_w.tolist()):
+                batch.add_edge(u, v, w)
+            for u, v in rec.edels.tolist():
+                batch.delete_edge(u, v)
+            for g in rec.touch.tolist():
+                batch.touch_vertex(g)
+            self._pending = batch
+            self._commit(journal=False)
+            replayed += 1
+        return replayed
+
+    def close(self) -> None:
+        """Flush + close the journal (snapshots need no close)."""
+        if self._journal is not None:
+            self._journal.close()
+            self._journal = None

@@ -1,4 +1,4 @@
-"""Serving launcher: continuous-batched decode loop.
+"""Serving launcher: continuous-batched decode loop + durable graph loop.
 
 ``python -m repro.launch.serve --arch tinyllama-1.1b --smoke``
 
@@ -7,6 +7,13 @@ requests into free KV-cache slots; the decode step advances every active
 slot one token; finished sequences free their slot (continuous batching).
 On CPU this runs the smoke config end-to-end; the full configs are
 exercised by the decode/prefill dry-run cells.
+
+:class:`DurableSessionLoop` is the graph-store analogue (DESIGN.md
+§2.13): a streaming-update serve loop over a
+:class:`~repro.core.session.DiffusionSession` with write-ahead journaled
+commits, periodic snapshots, and :class:`PreemptionGuard`-driven
+checkpoint-and-exit — SIGTERM lands between steps, the loop snapshots,
+and the orchestrator's restart path is ``DiffusionSession.open(dir)``.
 """
 
 from __future__ import annotations
@@ -19,7 +26,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import registry
+from ..core import chaos
 from ..models import transformer
+from ..runtime.fault_tolerance import PreemptionGuard
 
 
 class DecodeServer:
@@ -85,6 +94,62 @@ class DecodeServer:
         out = self.tokens[slot, : self.lens[slot]].copy()
         self.lens[slot] = 0
         return out
+
+
+class DurableSessionLoop:
+    """Preemption-safe streaming-update loop over a DiffusionSession.
+
+    Each step stages one batch of graph updates, commits it (the commit
+    write-ahead journals before mutating — see session.commit), and
+    snapshots every ``snapshot_every`` steps.  A SIGTERM/SIGINT observed
+    by the guard stops the loop at the next step boundary with a final
+    snapshot, so a spot preemption loses nothing: the journal holds every
+    committed step since the last snapshot, and
+    ``DiffusionSession.open(directory)`` replays it.
+
+        loop = DurableSessionLoop(sess, "/data/store")
+        loop.run(batches)           # installs/uninstalls its own guard
+
+    ``batches`` is an iterable of callables, each staging one batch of
+    ops on the session (``lambda s: s.add_edge(u, v, w)``).
+    """
+
+    def __init__(self, session, directory: str, snapshot_every: int = 16):
+        self.session = session
+        self.directory = directory
+        self.snapshot_every = int(snapshot_every)
+        self.steps = 0
+        self.preempted = False
+        session.save(directory)      # arm the journal + initial snapshot
+
+    def step(self, stage) -> None:
+        """Stage + commit one update batch (journaled), maybe snapshot."""
+        stage(self.session)
+        self.session.commit()
+        self.steps += 1
+        chaos.point("serve.step")
+        if self.snapshot_every and self.steps % self.snapshot_every == 0:
+            self.session.save()
+
+    def run(self, batches, guard: PreemptionGuard | None = None) -> int:
+        """Consume ``batches`` until exhausted or preempted; returns the
+        number of steps completed.  A caller-provided guard is polled
+        but not installed/uninstalled (the caller owns its lifetime)."""
+        own = guard is None
+        if own:
+            guard = PreemptionGuard()
+            guard.install()
+        try:
+            for stage in batches:
+                self.step(stage)
+                if guard.should_stop:
+                    self.preempted = True
+                    self.session.save()      # checkpoint-and-exit
+                    break
+            return self.steps
+        finally:
+            if own:
+                guard.uninstall()
 
 
 def main():

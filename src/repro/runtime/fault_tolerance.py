@@ -87,21 +87,53 @@ class StragglerMonitor:
 
 
 class PreemptionGuard:
-    """SIGTERM/SIGINT -> flag; install() is idempotent and test-friendly."""
+    """SIGTERM/SIGINT -> flag; install() is idempotent and test-friendly.
+
+    ``install()`` saves the handlers it replaces and ``uninstall()``
+    restores them, so a guard never leaks its handlers past its own
+    lifetime (pytest's SIGINT handling, nested guards, and embedding
+    hosts all keep theirs).  The guard is also a context manager::
+
+        with PreemptionGuard() as guard:
+            while not guard.should_stop:
+                step()
+        # prior SIGTERM/SIGINT handlers are back here
+    """
 
     def __init__(self):
         self._flag = threading.Event()
         self._installed = False
+        self._prior: dict[int, object] = {}
 
     def install(self):
         if self._installed:
             return
         for sig in (signal.SIGTERM, signal.SIGINT):
             try:
-                signal.signal(sig, lambda *_: self._flag.set())
+                prior = signal.signal(sig, lambda *_: self._flag.set())
             except ValueError:   # not main thread (tests)
-                pass
+                continue
+            self._prior[sig] = prior
         self._installed = True
+
+    def uninstall(self):
+        """Restore the signal handlers install() replaced (idempotent)."""
+        if not self._installed:
+            return
+        for sig, prior in self._prior.items():
+            try:
+                signal.signal(sig, prior)
+            except (ValueError, TypeError):  # not main thread / exotic prior
+                pass
+        self._prior = {}
+        self._installed = False
+
+    def __enter__(self):
+        self.install()
+        return self
+
+    def __exit__(self, *exc):
+        self.uninstall()
 
     def trigger(self):           # test hook / external orchestrator
         self._flag.set()

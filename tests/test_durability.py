@@ -1,0 +1,610 @@
+"""Durable diffusion sessions (DESIGN.md §2.13): write-ahead update
+journal, snapshot/restore, chaos-harness kill/tear recovery, and the
+convergence watchdog.
+
+The central acceptance property: a session killed at *any* chaos point
+and reopened with ``DiffusionSession.open`` is bitwise-equal to a
+session that executed exactly the journaled prefix and never crashed —
+graph arrays, name-server state, cache keys, and query results alike.
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import chaos
+from repro.core.event import EVENT_ORACLE_MAX_N, event_diffuse
+from repro.core.generators import make_graph_family
+from repro.core.journal import JournalError, OpRecord, UpdateJournal
+from repro.core.programs import cc_program
+from repro.core.session import (
+    ConvergenceError,
+    ConvergenceWarning,
+    DiffusionSession,
+    ValidationError,
+)
+from repro.launch.serve import DurableSessionLoop
+
+_SUBPROC_ENV = {
+    "PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+    "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+}
+
+
+def _session(seed=5, family="small_world", n=120, n_cells=4):
+    src, dst, w, n = make_graph_family(family, n, seed=seed)
+    sess = DiffusionSession.from_edges(
+        src, dst, n, w, n_cells=n_cells, edge_slack=0.5, node_slack=0.4)
+    return sess, (src, dst, w, n)
+
+
+def _sg_equal(a, b):
+    for f in dataclasses.fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if va is None or vb is None:
+            assert va is None and vb is None, f.name
+            continue
+        assert np.array_equal(np.asarray(va), np.asarray(vb),
+                              equal_nan=True), f"graph field {f.name}"
+
+
+def _ns_equal(a, b):
+    sa, sb = a.state_dict(), b.state_dict()
+    assert sorted(sa) == sorted(sb)
+    for k in sa:
+        assert np.array_equal(sa[k], sb[k]), f"ns field {k}"
+
+
+def _results_equal(s1, s2, queries=(("sssp", {"source": 0}), ("cc", {}))):
+    for name, kw in queries:
+        a = np.asarray(s1.query(name, **kw).values)
+        b = np.asarray(s2.query(name, **kw).values)
+        assert np.array_equal(a, b, equal_nan=True), name
+
+
+# ---------------------------------------------------------------------------
+# journal frames
+# ---------------------------------------------------------------------------
+
+
+def _rec(seed=0, n=50):
+    rng = np.random.default_rng(seed)
+    return OpRecord.from_ops(
+        vadds=[(n + i, i % 4, i) for i in range(3)],
+        vdels=[int(rng.integers(0, n))],
+        eadds=[(int(rng.integers(0, n)), int(rng.integers(0, n)),
+                float(rng.uniform(0.1, 2.0))) for _ in range(5)],
+        edels=[(int(rng.integers(0, n)), int(rng.integers(0, n)))],
+        touch=[int(rng.integers(0, n))])
+
+
+def test_journal_roundtrip(tmp_path):
+    path = str(tmp_path / "j.bin")
+    recs = [_rec(s) for s in range(4)]
+    with UpdateJournal(path) as j:
+        for i, r in enumerate(recs):
+            assert j.append(r) == i
+    j2 = UpdateJournal(path)
+    got = list(j2.replay())
+    assert [s for s, _ in got] == [0, 1, 2, 3]
+    for (_, a), b in zip(got, recs):
+        for f in OpRecord._fields:
+            np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+    # seq resumes, never reused
+    assert j2.append(_rec(9)) == 4
+    j2.close()
+
+
+def test_journal_replay_from_seq(tmp_path):
+    j = UpdateJournal(str(tmp_path / "j.bin"))
+    for s in range(5):
+        j.append(_rec(s))
+    assert [s for s, _ in j.replay(from_seq=3)] == [3, 4]
+    j.close()
+
+
+def test_journal_torn_tail_truncates(tmp_path):
+    path = str(tmp_path / "j.bin")
+    j = UpdateJournal(path)
+    for s in range(3):
+        j.append(_rec(s))
+    j.close()
+    size = os.path.getsize(path)
+    chaos.tear_file(path, size - 7)            # torn mid-final-frame
+    j2 = UpdateJournal(path)
+    assert [s for s, _ in j2.replay()] == [0, 1]
+    assert j2.next_seq == 2
+    # the truncation is physical: a re-scan finds a clean file
+    assert os.path.getsize(path) < size
+    j2.close()
+
+
+def test_journal_corrupt_frame_truncates_from_there(tmp_path):
+    path = str(tmp_path / "j.bin")
+    j = UpdateJournal(path)
+    for s in range(3):
+        j.append(_rec(s))
+    j.close()
+    frame = os.path.getsize(path) // 3
+    chaos.corrupt_file(path, offset=frame + 40)   # inside frame 1
+    j2 = UpdateJournal(path)
+    assert [s for s, _ in j2.replay()] == [0]     # 1 and 2 dropped
+    j2.close()
+
+
+def test_journal_rollback_last_record(tmp_path):
+    j = UpdateJournal(str(tmp_path / "j.bin"))
+    j.append(_rec(0))
+    seq = j.append(_rec(1))
+    j.rollback(seq)
+    assert [s for s, _ in j.replay()] == [0]
+    assert j.append(_rec(2)) == 1                 # seq 1 never hit disk
+    with pytest.raises(JournalError):
+        j.rollback(0)                             # only the last record
+    j.close()
+
+
+def test_journal_fsync_policy_validation(tmp_path):
+    with pytest.raises(ValueError, match="fsync"):
+        UpdateJournal(str(tmp_path / "j.bin"), fsync="sometimes")
+
+
+def test_journal_truncate_gcs_head(tmp_path):
+    j = UpdateJournal(str(tmp_path / "j.bin"))
+    for s in range(5):
+        j.append(_rec(s))
+    j.truncate(3)
+    assert [s for s, _ in j.replay()] == [3, 4]
+    assert j.next_seq == 5
+    j.close()
+
+
+# ---------------------------------------------------------------------------
+# snapshot / restore bitwise equality
+# ---------------------------------------------------------------------------
+
+
+def _mutate(sess, n, seed=0):
+    """One deterministic batch of all op kinds, committed."""
+    rng = np.random.default_rng(seed)
+    g = sess.add_vertex()
+    sess.add_edge(int(rng.integers(0, n)), g, 0.25)
+    sess.add_edge(g, int(rng.integers(0, n)), 0.5)
+    src, dst, _ = sess.edge_list()
+    sess.delete_edge(int(src[0]), int(dst[0]))
+    sess.touch(int(rng.integers(0, n)))
+    return sess.commit()
+
+
+def test_save_open_bitwise(tmp_path):
+    sess, (_, _, _, n) = _session()
+    sess.query("sssp", source=0)
+    sess.query("cc")
+    sess.query("ppr", source=3)
+    sess.query("triangles")
+    sess.save(str(tmp_path))
+    _mutate(sess, n, 0)
+    _mutate(sess, n, 1)
+
+    recovered = DiffusionSession.open(str(tmp_path))
+    _sg_equal(sess.sg, recovered.sg)
+    _ns_equal(sess.ns, recovered.ns)
+    assert set(map(repr, sess._cache)) == set(map(repr, recovered._cache))
+    _results_equal(sess, recovered,
+                   (("sssp", {"source": 0}), ("cc", {}),
+                    ("ppr", {"source": 3})))
+    assert (int(sess.query("triangles").values)
+            == int(recovered.query("triangles").values))
+    # settings travel with the snapshot
+    assert recovered.engine == sess.engine
+    assert recovered.on_budget == sess.on_budget
+    assert recovered.max_rounds == sess.max_rounds
+
+
+def test_open_with_empty_journal_tail(tmp_path):
+    sess, _ = _session(seed=7)
+    sess.query("sssp", source=0)
+    sess.save(str(tmp_path))
+    recovered = DiffusionSession.open(str(tmp_path))
+    _sg_equal(sess.sg, recovered.sg)
+    _results_equal(sess, recovered)
+
+
+def test_save_requires_directory_once(tmp_path):
+    sess, _ = _session()
+    with pytest.raises(ValueError, match="directory"):
+        sess.save()
+    sess.save(str(tmp_path))
+    sess.save()                                   # remembered
+    with pytest.raises(ValueError, match="re-home"):
+        sess.save(str(tmp_path / "elsewhere"))
+
+
+def test_save_warns_on_pending_ops(tmp_path):
+    sess, _ = _session()
+    sess.add_edge(0, 1, 0.5)
+    with pytest.warns(UserWarning, match="uncommitted"):
+        sess.save(str(tmp_path))
+
+
+def test_corrupt_snapshot_leaf_falls_back(tmp_path):
+    sess, (_, _, _, n) = _session(seed=9)
+    sess.query("sssp", source=0)
+    sess.save(str(tmp_path))                      # step 0
+    _mutate(sess, n, 0)
+    step1 = sess.save(str(tmp_path))              # step 1
+    _mutate(sess, n, 1)
+    # damage the newest snapshot: digest catches it, open falls back to
+    # step 0 and replays the *full* journal (truncate kept every record
+    # the oldest retained snapshot needs)
+    leaf = os.path.join(str(tmp_path), f"step_{step1}",
+                        "graph__weight.npy")
+    chaos.corrupt_file(leaf, offset=200)
+    with pytest.warns(UserWarning, match="damaged"):
+        recovered = DiffusionSession.open(str(tmp_path))
+    _sg_equal(sess.sg, recovered.sg)
+    _ns_equal(sess.ns, recovered.ns)
+    _results_equal(sess, recovered)
+
+
+# ---------------------------------------------------------------------------
+# kill-and-recover at every chaos coordinate
+# ---------------------------------------------------------------------------
+
+
+def _ops_script(n):
+    """The workload as a list of per-commit closures (for prefix replay)."""
+    return [
+        lambda s: (s.add_edge(1, 2, 0.1), s.commit()),
+        lambda s: (s.add_vertex(), s.add_edge(0, n, 0.3), s.commit()),
+        lambda s: (s.delete_edge(1, 2), s.touch(3), s.commit()),
+        lambda s: (s.add_edge(4, 5, 0.7), s.commit()),
+    ]
+
+
+def _reference_prefix(k, n_commits_script, seed):
+    """A never-crashed session that ran exactly k committed batches."""
+    sess, (_, _, _, n) = _session(seed=seed)
+    sess.query("sssp", source=0)
+    for op in _ops_script(n)[:k]:
+        op(sess)
+    return sess
+
+
+def test_kill_and_recover_every_coordinate(tmp_path):
+    seed = 11
+    sess, (_, _, _, n) = _session(seed=seed)
+    ops = _ops_script(n)
+
+    def workload(s):
+        for i, op in enumerate(ops):
+            op(s)
+            if i == 1:
+                s.save()        # exercises the checkpoint chaos points
+
+    # dry run: enumerate every (point, hit) coordinate this workload hits
+    d0 = str(tmp_path / "dry")
+    sess.query("sssp", source=0)
+    sess.save(d0)
+    mon = chaos.ChaosMonkey(record_only=True)
+    with chaos.harness(mon):
+        workload(sess)
+    coords = [(name, k) for name, hits in mon.counts.items()
+              for k in range(hits)]
+    assert {n_ for n_, _ in coords} >= {
+        "journal.append", "commit.journal-appended", "commit.applied",
+        "commit.repaired", "checkpoint.leaf-written",
+        "checkpoint.pre-rename"}
+
+    for idx, (name, k) in enumerate(coords):
+        d = str(tmp_path / f"kill{idx}")
+        s, _ = _session(seed=seed)
+        s.query("sssp", source=0)
+        s.save(d)
+        # journal.append is the tear point (a torn frame write);
+        # everything else is a kill point
+        monkey = (chaos.ChaosMonkey(tear_at=(name, k, 9))
+                  if name == "journal.append"
+                  else chaos.ChaosMonkey(kill_at=(name, k)))
+        with pytest.raises(chaos.ChaosKill):
+            with chaos.harness(monkey):
+                workload(s)
+        assert monkey.fired == (name, k)
+
+        recovered = DiffusionSession.open(d)
+        durable = len(recovered._journal)       # commits that survived
+        ref = _reference_prefix(durable, len(ops), seed)
+        _sg_equal(ref.sg, recovered.sg)
+        _ns_equal(ref.ns, recovered.ns)
+        _results_equal(ref, recovered)
+
+
+def test_kill_during_save_keeps_previous_snapshot(tmp_path):
+    sess, (_, _, _, n) = _session(seed=13)
+    sess.query("sssp", source=0)
+    sess.save(str(tmp_path))
+    _mutate(sess, n, 0)
+    with pytest.raises(chaos.ChaosKill):
+        with chaos.harness(chaos.ChaosMonkey(
+                kill_at=("checkpoint.pre-rename", 0))):
+            sess.save()
+    # the atomic-rename protocol left the step-0 snapshot whole
+    recovered = DiffusionSession.open(str(tmp_path))
+    _sg_equal(sess.sg, recovered.sg)
+    _results_equal(sess, recovered)
+
+
+# ---------------------------------------------------------------------------
+# convergence watchdog + validation
+# ---------------------------------------------------------------------------
+
+
+def test_converged_true_at_quiescence():
+    sess, _ = _session()
+    res = sess.query("sssp", source=0)
+    assert bool(np.asarray(res.stats.converged))
+
+
+def test_budget_exhaustion_warns_by_default():
+    sess, _ = _session()
+    sess.max_rounds = 1
+    with pytest.warns(ConvergenceWarning, match="max_rounds"):
+        res = sess.query("sssp", source=0)
+    assert not bool(np.asarray(res.stats.converged))
+
+
+def test_on_budget_raise():
+    sess, _ = _session()
+    sess.max_rounds = 1
+    sess.on_budget = "raise"
+    with pytest.raises(ConvergenceError, match="PARTIAL"):
+        sess.query("sssp", source=0)
+
+
+def test_on_budget_partial_is_silent():
+    sess, _ = _session()
+    sess.max_rounds = 1
+    sess.on_budget = "partial"
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", ConvergenceWarning)
+        res = sess.query("sssp", source=0)
+    assert not bool(np.asarray(res.stats.converged))
+
+
+def test_on_budget_validated_at_init():
+    part = _session()[0].part
+    with pytest.raises(ValueError, match="on_budget"):
+        DiffusionSession(part, on_budget="explode")
+
+
+def test_commit_repair_honors_budget():
+    sess, _ = _session()
+    sess.query("sssp", source=0)
+    sess.max_rounds = 1
+    sess.on_budget = "raise"
+    sess.add_edge(0, 1, 0.01)
+    with pytest.raises(ConvergenceError, match="repair"):
+        sess.commit()
+
+
+def test_validate_catches_nan_poison():
+    sess, _ = _session()
+    sess.query("sssp", source=0)
+    assert chaos.poison_vstate(sess)
+    with pytest.raises(ValidationError, match="NaN"):
+        sess.query("sssp", source=0, validate=True)
+    # opt-out still serves the poisoned entry
+    sess.query("sssp", source=0, validate=False)
+
+
+def test_validate_catches_out_of_domain():
+    sess, _ = _session()
+    sess.query("sssp", source=0)
+    assert chaos.poison_vstate(sess, value=-5.0)   # dist domain is [0, inf)
+    with pytest.raises(ValidationError, match="below"):
+        sess.query("sssp", source=0, validate=True)
+
+
+def test_validate_session_default_and_clean_pass():
+    sess, _ = _session()
+    sess.validate = True
+    sess.query("sssp", source=0)                   # clean state passes
+    sess.query("cc")
+    chaos.poison_vstate(sess)
+    with pytest.raises(ValidationError):
+        sess.query("sssp", source=0)
+
+
+# ---------------------------------------------------------------------------
+# event-oracle scope cap (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_event_oracle_caps_n():
+    prog = cc_program()
+    src = np.array([0, 1], np.int32)
+    dst = np.array([1, 2], np.int32)
+    w = np.ones(2, np.float32)
+    with pytest.raises(ValueError, match=str(EVENT_ORACLE_MAX_N)):
+        event_diffuse(prog, src, dst, w, EVENT_ORACLE_MAX_N + 1)
+
+
+# ---------------------------------------------------------------------------
+# durable serve loop (PreemptionGuard checkpoint-and-exit)
+# ---------------------------------------------------------------------------
+
+
+def test_durable_serve_loop_preemption(tmp_path):
+    from repro.runtime.fault_tolerance import PreemptionGuard
+
+    sess, (_, _, _, n) = _session(seed=17)
+    sess.query("sssp", source=0)
+    loop = DurableSessionLoop(sess, str(tmp_path), snapshot_every=2)
+    guard = PreemptionGuard()      # caller-owned: no signal installation
+
+    def batches():
+        for i in range(10):
+            if i == 5:
+                guard.trigger()    # preemption lands mid-stream
+            yield lambda s, i=i: s.add_edge(i % n, (i * 7 + 1) % n, 0.5)
+
+    steps = loop.run(batches(), guard=guard)
+    assert steps == 6 and loop.preempted
+    # the exit snapshot + journal recover the exact preempted state
+    recovered = DiffusionSession.open(str(tmp_path))
+    _sg_equal(sess.sg, recovered.sg)
+    _results_equal(sess, recovered)
+
+
+def test_durable_serve_loop_runs_to_completion(tmp_path):
+    sess, (_, _, _, n) = _session(seed=19)
+    loop = DurableSessionLoop(sess, str(tmp_path), snapshot_every=3)
+    steps = loop.run([
+        (lambda s, i=i: s.add_edge(i % n, (i + 3) % n, 1.0))
+        for i in range(7)
+    ])
+    assert steps == 7 and not loop.preempted
+    recovered = DiffusionSession.open(str(tmp_path))
+    _sg_equal(sess.sg, recovered.sg)
+
+
+# ---------------------------------------------------------------------------
+# spmd engine recovery (subprocess: needs one device per cell)
+# ---------------------------------------------------------------------------
+
+
+def test_spmd_recovery_bitwise_subprocess(tmp_path):
+    prog = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np
+        from repro.core.generators import make_graph_family
+        from repro.core.session import DiffusionSession
+
+        d = {str(tmp_path)!r}
+        src, dst, w, n = make_graph_family("small_world", 120, seed=5)
+        sess = DiffusionSession.from_edges(src, dst, n, w, n_cells=4,
+                                           edge_slack=0.5, node_slack=0.4,
+                                           engine="spmd")
+        sess.query("sssp", source=0)
+        sess.query("cc")
+        sess.save(d)
+        sess.add_edge(1, 2, 0.1); sess.commit()
+        sess.delete_edge(1, 2); sess.touch(3); sess.commit()
+
+        rec = DiffusionSession.open(d)
+        assert rec.engine == "spmd"
+        for name, kw in (("sssp", dict(source=0)), ("cc", {{}})):
+            a = np.asarray(sess.query(name, **kw).values)
+            b = np.asarray(rec.query(name, **kw).values)
+            assert np.array_equal(a, b, equal_nan=True), name
+        print("SPMD_RECOVERY_OK")
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", prog], capture_output=True, text=True,
+        env=_SUBPROC_ENV, cwd=os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), timeout=900,
+    )
+    assert "SPMD_RECOVERY_OK" in out.stdout, out.stdout + out.stderr
+
+
+# ---------------------------------------------------------------------------
+# property test: random interleavings (hypothesis ships via
+# requirements-dev.txt in CI; skipped when absent locally)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+if HAS_HYPOTHESIS:
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.lists(st.sampled_from(["eadd", "edel", "vadd", "touch",
+                                     "commit", "save", "query"]),
+                    min_size=3, max_size=14),
+           st.integers(0, 2 ** 31 - 1))
+    def test_random_interleaving_recovers_to_prefix(
+            script, seed, tmp_path_factory):
+        """Any interleaving of mutations/commits/saves/queries, killed
+        at a seed-picked chaos coordinate, reopens to the same state as
+        a session that ran exactly the durable (journaled) prefix."""
+        tmp = tmp_path_factory.mktemp("prop")
+        rng = np.random.default_rng(seed)
+
+        def run_script(sess, n, upto=None):
+            r = np.random.default_rng(seed)   # op randomness is shared
+            commits = 0
+            for op in script:
+                if upto is not None and commits >= upto:
+                    break                     # reference ran the prefix
+                if op == "eadd":
+                    sess.add_edge(int(r.integers(0, n)),
+                                  int(r.integers(0, n)),
+                                  float(r.uniform(0.1, 2.0)))
+                elif op == "edel":
+                    s_, d_, _ = sess.edge_list()
+                    if len(s_):
+                        i = int(r.integers(0, len(s_)))
+                        sess.delete_edge(int(s_[i]), int(d_[i]))
+                elif op == "vadd":
+                    g = sess.add_vertex()
+                    sess.add_edge(int(r.integers(0, n)), g, 1.0)
+                elif op == "touch":
+                    sess.touch(int(r.integers(0, n)))
+                elif op == "commit":
+                    sess.commit()
+                    commits += 1
+                elif op == "save":
+                    # snapshots of a session with staged-but-uncommitted
+                    # ops are legal but warn (pending ops are not
+                    # durable); the property keeps saves at commit
+                    # boundaries so the prefix is exactly the journal
+                    if sess._pending is None or len(sess._pending) == 0:
+                        if sess._dur_dir is not None:
+                            sess.save()
+                elif op == "query":
+                    sess.query("sssp", source=0)
+            return commits
+
+        # dry run to enumerate this script's chaos coordinates
+        s0, (_, _, _, n) = _session(seed=23)
+        s0.query("sssp", source=0)
+        s0.save(str(tmp / "dry"))
+        mon = chaos.ChaosMonkey(record_only=True)
+        with chaos.harness(mon):
+            run_script(s0, n)
+        coords = [(nm, k) for nm, hits in mon.counts.items()
+                  for k in range(hits) if nm != "journal.append"]
+        if not coords:
+            return                            # script commits nothing
+        name, k = coords[int(rng.integers(0, len(coords)))]
+
+        s1, _ = _session(seed=23)
+        s1.query("sssp", source=0)
+        s1.save(str(tmp / "live"))
+        try:
+            with chaos.harness(chaos.ChaosMonkey(kill_at=(name, k))):
+                run_script(s1, n)
+        except chaos.ChaosKill:
+            pass
+        else:
+            return                            # coordinate never reached
+
+        recovered = DiffusionSession.open(str(tmp / "live"))
+        durable = len(recovered._journal)
+        ref, _ = _session(seed=23)
+        ref.query("sssp", source=0)
+        run_script(ref, n, upto=durable)
+        _sg_equal(ref.sg, recovered.sg)
+        _ns_equal(ref.ns, recovered.ns)
+        _results_equal(ref, recovered)

@@ -142,3 +142,86 @@ def test_largest_mesh_shape_elastic_downscale():
     assert largest_mesh_shape(256) == (16, 16)
     assert largest_mesh_shape(248, 16) == (31, 8)   # lost 8 devices
     assert largest_mesh_shape(7, 16) == (7, 1)
+
+
+# -- checkpoint fallback restore (DESIGN.md §2.13) --------------------------
+
+
+def _save_steps(tmp_path, values=(1, 2, 3)):
+    ckpt = CheckpointManager(str(tmp_path), keep=3)
+    tree = None
+    for s in values:
+        tree = {"a": jnp.arange(4.0) * s, "b": jnp.ones((2, 2)) * s}
+        ckpt.save(s, tree, wait=True)
+    return ckpt, tree
+
+
+def _assert_restored_step(ckpt, tree, expected_step):
+    with pytest.warns(UserWarning, match="damaged"):
+        restored, step = ckpt.restore(tree)
+    assert step == expected_step
+    np.testing.assert_array_equal(
+        np.asarray(restored["a"]), np.arange(4.0) * expected_step)
+
+
+def test_checkpoint_fallback_truncated_manifest(tmp_path):
+    ckpt, tree = _save_steps(tmp_path)
+    mf = os.path.join(str(tmp_path), "step_3", "manifest.json")
+    with open(mf, "rb+") as f:
+        f.truncate(os.path.getsize(mf) // 2)
+    _assert_restored_step(ckpt, tree, 2)
+
+
+def test_checkpoint_fallback_missing_leaf(tmp_path):
+    ckpt, tree = _save_steps(tmp_path)
+    os.remove(os.path.join(str(tmp_path), "step_3", "a.npy"))
+    _assert_restored_step(ckpt, tree, 2)
+
+
+def test_checkpoint_fallback_digest_mismatch(tmp_path):
+    ckpt, tree = _save_steps(tmp_path)
+    leaf = os.path.join(str(tmp_path), "step_3", "b.npy")
+    raw = bytearray(open(leaf, "rb").read())
+    raw[-1] ^= 0xFF
+    open(leaf, "wb").write(bytes(raw))
+    _assert_restored_step(ckpt, tree, 2)
+
+
+def test_checkpoint_fallback_walks_past_two_damaged_steps(tmp_path):
+    ckpt, tree = _save_steps(tmp_path)
+    for s in (2, 3):
+        os.remove(os.path.join(str(tmp_path), f"step_{s}", "a.npy"))
+    _assert_restored_step(ckpt, tree, 1)
+
+
+def test_checkpoint_explicit_step_never_falls_back(tmp_path):
+    ckpt, tree = _save_steps(tmp_path)
+    os.remove(os.path.join(str(tmp_path), "step_3", "a.npy"))
+    with pytest.raises(IOError):
+        ckpt.restore(tree, step=3)
+
+
+# -- PreemptionGuard handler hygiene ----------------------------------------
+
+
+def test_preemption_guard_restores_prior_handlers():
+    import signal
+
+    prior_term = signal.getsignal(signal.SIGTERM)
+    prior_int = signal.getsignal(signal.SIGINT)
+    with PreemptionGuard() as guard:
+        assert signal.getsignal(signal.SIGTERM) is not prior_term
+        assert not guard.should_stop
+        guard.trigger()
+        assert guard.should_stop
+    assert signal.getsignal(signal.SIGTERM) is prior_term
+    assert signal.getsignal(signal.SIGINT) is prior_int
+
+
+def test_preemption_guard_uninstall_idempotent():
+    guard = PreemptionGuard()
+    guard.uninstall()            # never installed: no-op
+    guard.install()
+    guard.install()              # idempotent
+    guard.uninstall()
+    guard.uninstall()
